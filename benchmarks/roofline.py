@@ -1,0 +1,103 @@
+"""Roofline table reader: aggregates artifacts/dryrun/*.json into the
+EXPERIMENTS.md §Roofline table (per arch × shape × mesh: three terms in
+seconds, dominant bottleneck, useful-compute ratio, one-line lever)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+__all__ = ["run", "load_cells", "format_table"]
+
+_LEVERS = {
+    ("compute_s", "train"): "raise arithmetic intensity: causal chunk-skip "
+                            "in flash attention / lighter remat",
+    ("compute_s", "prefill"): "causal block skipping halves score FLOPs",
+    ("compute_s", "decode"): "batch more sequences per chip",
+    ("memory_s", "train"): "shard activations wider (model axis), remat "
+                           "more, fuse optimizer traffic",
+    ("memory_s", "prefill"): "keep KV in VMEM across q-chunks (larger "
+                             "q_chunk)",
+    ("memory_s", "decode"): "quantize KV cache to int8 (halves cache "
+                            "stream)",
+    ("collective_s", "train"): "int8 gradient compression + reduce-scatter;"
+                               " overlap FSDP gathers with compute",
+    ("collective_s", "prefill"): "reduce TP all-reduces: fuse attn+mlp "
+                                 "blocks per all-reduce",
+    ("collective_s", "decode"): "replicate small weights; shrink TP degree "
+                                "for decode",
+}
+
+
+def load_cells(art_dir: str = "artifacts/dryrun",
+               variant: Optional[str] = "baseline") -> List[Dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        if d.get("skipped") or "error" in d:
+            cells.append(d)
+            continue
+        if variant is not None and d.get("variant") != variant:
+            continue
+        cells.append(d)
+    return cells
+
+
+def format_table(cells: List[Dict], *, mesh: str = "single_pod_16x16") -> str:
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | dominant | "
+        "MODEL/HLO | lever |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    seen_skips = set()
+    for d in cells:
+        if d.get("skipped"):
+            key = (d["arch"], d["shape"])
+            if mesh.startswith("single") and key not in seen_skips:
+                seen_skips.add(key)
+                lines.append(
+                    f"| {d['arch']} | {d['shape']} | — | — | — | SKIP | — | "
+                    f"{d['reason'][:60]} |")
+            continue
+        if "error" in d or d.get("mesh") != mesh:
+            continue
+        r = d["roofline"]
+        lever = _LEVERS.get((r["dominant"], d["phase"]), "")
+        ratio = d.get("useful_compute_ratio")
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {r['compute_s']:.4g} | "
+            f"{r['memory_s']:.4g} | {r['collective_s']:.4g} | "
+            f"{r['dominant'].replace('_s', '')} | "
+            f"{ratio:.2f} | {lever} |")
+    return "\n".join(lines)
+
+
+def run(verbose: bool = True):
+    t0 = time.perf_counter()
+    cells = load_cells()
+    ok = [c for c in cells if not c.get("skipped") and "error" not in c]
+    errors = [c for c in cells if "error" in c]
+    skips = [c for c in cells if c.get("skipped")]
+    if verbose:
+        if ok:
+            print("# Roofline (single-pod 16×16; terms in seconds/step)")
+            print(format_table(cells))
+            by_dom: Dict[str, int] = {}
+            for c in ok:
+                if c["mesh"].startswith("single"):
+                    k = c["roofline"]["dominant"]
+                    by_dom[k] = by_dom.get(k, 0) + 1
+            print(f"# bottleneck census (single-pod): {by_dom}")
+        else:
+            print("# no dry-run artifacts found — run "
+                  "`python -m repro.launch.dryrun --all --mesh both` first")
+    elapsed_us = (time.perf_counter() - t0) * 1e6
+    return {
+        "us_per_call": elapsed_us,
+        "derived": (f"cells_ok={len(ok)};skips={len(skips)};"
+                    f"errors={len(errors)}"),
+    }

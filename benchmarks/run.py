@@ -1,0 +1,36 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV (plus verbose per-benchmark detail above each block).
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (fig4_serialization, fig5_loa, moa_strategies,
+                            roofline, table1_moa_counts)
+
+    benches = [
+        ("table1_moa_counts", table1_moa_counts.run),
+        ("fig4_serialization", fig4_serialization.run),
+        ("fig5_loa", fig5_loa.run),
+        ("moa_strategies", moa_strategies.run),
+        ("roofline", roofline.run),
+    ]
+    results = []
+    for name, fn in benches:
+        print(f"\n=== {name} " + "=" * (68 - len(name)))
+        try:
+            res = fn(verbose=True)
+            results.append((name, res["us_per_call"], res["derived"]))
+        except Exception as e:  # pragma: no cover
+            results.append((name, float("nan"), f"ERROR:{type(e).__name__}"))
+            print(f"[bench] {name} failed: {e}", file=sys.stderr)
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in results:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Benchmark/repro of paper Table 1: MOA census of AlexNet conv layers."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import dhm
+
+__all__ = ["run"]
+
+
+def run(verbose: bool = True):
+    t0 = time.perf_counter()
+    reports = dhm.analyze_network(
+        dhm.ALEXNET_CONV_SPECS, densities=dhm.paper_calibrated_densities())
+    elapsed_us = (time.perf_counter() - t0) * 1e6
+
+    rows = []
+    if verbose:
+        print("# Table 1 — MOAs and mean non-null operands per AlexNet layer")
+        print(f"{'layer':8s} {'N (MOAs)':>9s} {'C·J·K':>7s} {'n_opd':>8s} "
+              f"{'paper':>6s} {'err%':>6s} {'MOA frac':>9s}")
+    for r in reports:
+        paper = dhm.ALEXNET_PAPER_NOPD[r.spec.name]
+        err = 100 * abs(r.n_opd - paper) / paper
+        rows.append((r.spec.name, r.spec.n_filters, r.spec.operands,
+                     r.n_opd, paper, err, r.moa_fraction))
+        if verbose:
+            print(f"{r.spec.name:8s} {r.spec.n_filters:9d} "
+                  f"{r.spec.operands:7d} {r.n_opd:8.1f} {paper:6d} "
+                  f"{err:5.2f}% {r.moa_fraction:8.1%}")
+    max_err = max(r[5] for r in rows)
+    conv1_frac = rows[0][6]
+    return {
+        "us_per_call": elapsed_us,
+        "derived": (f"max_nopd_err={max_err:.2f}%"
+                    f";conv1_moa_frac={conv1_frac:.3f}(paper:0.69)"),
+    }

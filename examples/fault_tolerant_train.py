@@ -1,0 +1,52 @@
+"""Fault-tolerant training demo: two injected node failures, automatic
+checkpoint-restore, bit-exact resume, plus int8 gradient compression.
+
+  PYTHONPATH=src python examples/fault_tolerant_train.py
+"""
+
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs.registry import get_config, smoke_config
+from repro.launch.steps import TrainHyper
+from repro.launch.train import TrainLoop
+from repro.runtime import FailureInjector
+
+
+def main():
+    cfg = smoke_config(get_config("mamba2-370m"))
+    steps = 40
+    with tempfile.TemporaryDirectory() as d:
+        # clean reference run
+        ref = TrainLoop(cfg, steps=steps, global_batch=8, seq_len=48,
+                        ckpt_dir=os.path.join(d, "ref"), save_every=10,
+                        hyper=TrainHyper(peak_lr=3e-3, warmup_steps=4,
+                                         total_steps=steps,
+                                         compress_grads=True),
+                        log_every=10, async_save=False)
+        ref.run_segment(0, None)
+        ref_final = ref.metrics_history[-1]["loss"]
+
+        # faulty run: nodes die at steps 17 and 31
+        print("\n--- now with two injected node losses (steps 17, 31) ---")
+        faulty = TrainLoop(cfg, steps=steps, global_batch=8, seq_len=48,
+                           ckpt_dir=os.path.join(d, "faulty"), save_every=10,
+                           hyper=TrainHyper(peak_lr=3e-3, warmup_steps=4,
+                                            total_steps=steps,
+                                            compress_grads=True),
+                           injector=FailureInjector([17, 31]),
+                           log_every=10, async_save=False)
+        _, result = faulty.run(max_restarts=3)
+        faulty_final = faulty.metrics_history[-1]["loss"]
+        print(f"\nrestarts: {result.restarts}  "
+              f"completed: {result.completed}")
+        print(f"final loss clean={ref_final:.6f} faulty={faulty_final:.6f} "
+              f"({'BIT-EXACT resume' if ref_final == faulty_final else 'drift!'})")
+        print(f"straggler reports: {len(faulty.monitor.reports)}")
+
+
+if __name__ == "__main__":
+    main()

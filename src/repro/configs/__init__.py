@@ -1,0 +1,4 @@
+from repro.configs.base import (SHAPES, ModelConfig, ShapeSpec,
+                                shape_applicable)
+
+__all__ = ["SHAPES", "ModelConfig", "ShapeSpec", "shape_applicable"]

@@ -1,0 +1,12 @@
+"""AlexNet conv config — the paper's own Table-1 subject (not an LM arch).
+
+Used by the DHM benchmarks and the CNN smoke test; layout lives in
+``repro.models.cnn.ALEXNET_LAYOUT`` and the MOA census in
+``repro.core.dhm.ALEXNET_CONV_SPECS``.
+"""
+
+from repro.core.dhm import ALEXNET_CONV_SPECS, ALEXNET_PAPER_NOPD
+from repro.models.cnn import ALEXNET_LAYOUT, alexnet_forward, init_alexnet
+
+NAME = "alexnet"
+INPUT_SHAPE = (227, 227, 3)

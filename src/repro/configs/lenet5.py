@@ -1,0 +1,7 @@
+"""LeNet-5 conv config — the paper's ×8.6 SCM-optimization subject ([1])."""
+
+from repro.core.dhm import LENET5_CONV_SPECS
+from repro.models.cnn import LENET5_LAYOUT, init_lenet5, lenet5_forward
+
+NAME = "lenet5"
+INPUT_SHAPE = (32, 32, 1)

@@ -1,0 +1,128 @@
+"""Lower-part-OR approximate adder (LOA) — faithful bitwise port.
+
+Reference: Mahdiani et al., "Bio-Inspired Imprecise Computational Blocks for
+Efficient VLSI Implementation of Soft-Computing Applications", TCAS-I 2010 —
+the adder evaluated in §3.2 / Fig. 3 / Fig. 5 of the reproduced paper.
+
+Semantics for a ``b``-bit adder with ``l`` approximated low bits
+(0 <= l <= b), operands interpreted as unsigned ``b``-bit integers:
+
+    low  = (x & mask_l) | (y & mask_l)                 # bit-wise OR "sum"
+    cin  = (x >> (l-1)) & (y >> (l-1)) & 1  if l > 0   # AND of lower MSBs
+    high = (x >> l) + (y >> l) + cin                    # exact sub-adder
+    s̃   = (high << l) | low
+
+``l == 0`` degenerates to the exact adder. The exact sub-adder keeps its
+natural carry-out, so the result may occupy ``b+1`` bits — matching a
+hardware adder with carry-out.
+
+Everything here is pure jnp on integer dtypes and is the oracle for
+``repro.kernels.loa_add``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "loa_add",
+    "loa_sum",
+    "loa_error_bound",
+    "exact_bits_required",
+]
+
+
+def _as_int32(x):
+    """Promote to int32 container; LOA operates on unsigned b-bit values."""
+    return jnp.asarray(x).astype(jnp.int32)
+
+
+def loa_add(x, y, *, approx_bits: int, width: int = 8):
+    """Approximate LOA addition of unsigned ``width``-bit operands.
+
+    Args:
+      x, y: integer arrays holding values in ``[0, 2**width)``.
+      approx_bits: ``l`` — number of low bits processed with a bit-wise OR.
+      width: ``b`` — operand bit-width.
+
+    Returns:
+      int32 array with the (possibly ``width+1``-bit) approximate sum.
+    """
+    if not 0 <= approx_bits <= width:
+        raise ValueError(f"approx_bits={approx_bits} outside [0, width={width}]")
+    x = _as_int32(x)
+    y = _as_int32(y)
+    if approx_bits == 0:
+        return x + y
+    l = approx_bits
+    mask_l = jnp.int32((1 << l) - 1)
+    low = (x & mask_l) | (y & mask_l)
+    # AND gate on the most-significant *approximate* bit generates carry-in.
+    cin = ((x >> (l - 1)) & (y >> (l - 1))) & jnp.int32(1)
+    high = (x >> l) + (y >> l) + cin
+    return (high << l) | low
+
+
+def loa_sum(operands, *, approx_bits: int, width: int = 8, axis: int = -1):
+    """Multi-operand reduction through a *tree* of LOA adders.
+
+    Mirrors §3.2: every binary adder in the MOA tree of Fig. 1 is replaced by
+    an LOA. The reduction is a balanced binary tree (odd remainders pass
+    through), so the error profile matches the hardware structure rather than
+    a serial chain.
+
+    The intermediate width grows by one bit per tree level; ``approx_bits``
+    stays fixed per the paper (the approximate *lower* part is a property of
+    the adder instance, not of the operand magnitude).
+    """
+    x = _as_int32(operands)
+    x = jnp.moveaxis(x, axis, 0)
+    n = x.shape[0]
+    if n == 0:
+        raise ValueError("loa_sum needs at least one operand")
+    level_width = width
+    while x.shape[0] > 1:
+        m = x.shape[0]
+        half = m // 2
+        paired = loa_add(
+            x[: 2 * half : 2],
+            x[1 : 2 * half : 2],
+            approx_bits=approx_bits,
+            width=level_width,
+        )
+        if m % 2:  # odd leftover passes through to the next tree level
+            paired = jnp.concatenate([paired, x[2 * half :]], axis=0)
+        x = paired
+        level_width += 1  # sums occupy one more bit per level
+    return x[0]
+
+
+def loa_error_bound(approx_bits: int) -> int:
+    """Worst-case absolute error of a single LOA addition.
+
+    The OR of the low parts under-approximates their sum by at most
+    ``2**l - 1`` and the AND-carry can over-compensate by at most ``2**l - 1``
+    relative to the true carry; the combined deviation is ``< 2**l``.
+    """
+    if approx_bits == 0:
+        return 0
+    return (1 << approx_bits) - 1
+
+
+def exact_bits_required(n_operands: int, width: int) -> int:
+    """Bit-width of the exact sum of ``n`` unsigned ``width``-bit operands."""
+    import math
+
+    return width + max(0, math.ceil(math.log2(max(n_operands, 1))))
+
+
+def loa_add_reference_python(x: int, y: int, approx_bits: int) -> int:
+    """Scalar pure-python model (used by hypothesis tests as a third oracle)."""
+    l = approx_bits
+    if l == 0:
+        return x + y
+    mask = (1 << l) - 1
+    low = (x & mask) | (y & mask)
+    cin = (x >> (l - 1)) & (y >> (l - 1)) & 1
+    high = (x >> l) + (y >> l) + cin
+    return (high << l) | low

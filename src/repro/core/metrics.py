@@ -1,0 +1,41 @@
+"""Error metrics for approximate arithmetic (paper eq. 2 and relatives)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["mred", "nmed", "max_red", "error_rate"]
+
+
+def mred(s_hat, s, *, eps: float = 0.0):
+    """Mean Relative Error Distance —  mean(|ŝ − s| / s), paper eq. (2).
+
+    Zero exact sums are excluded from the mean (the paper draws positive
+    uniform operands, so s > 0 almost surely; we guard anyway).
+    """
+    s_hat = jnp.asarray(s_hat, jnp.float32)
+    s = jnp.asarray(s, jnp.float32)
+    valid = jnp.abs(s) > eps
+    rel = jnp.where(valid, jnp.abs(s_hat - s) / jnp.where(valid, jnp.abs(s), 1.0), 0.0)
+    return jnp.sum(rel) / jnp.maximum(jnp.sum(valid), 1)
+
+
+def nmed(s_hat, s, *, max_abs: float):
+    """Normalized Mean Error Distance: mean(|ŝ − s|) / max_abs."""
+    s_hat = jnp.asarray(s_hat, jnp.float32)
+    s = jnp.asarray(s, jnp.float32)
+    return jnp.mean(jnp.abs(s_hat - s)) / max_abs
+
+
+def max_red(s_hat, s):
+    """Worst-case relative error distance."""
+    s_hat = jnp.asarray(s_hat, jnp.float32)
+    s = jnp.asarray(s, jnp.float32)
+    valid = jnp.abs(s) > 0
+    rel = jnp.where(valid, jnp.abs(s_hat - s) / jnp.where(valid, jnp.abs(s), 1.0), 0.0)
+    return jnp.max(rel)
+
+
+def error_rate(s_hat, s):
+    """Fraction of results that differ at all (ER metric)."""
+    return jnp.mean((jnp.asarray(s_hat) != jnp.asarray(s)).astype(jnp.float32))

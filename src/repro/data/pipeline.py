@@ -1,0 +1,104 @@
+"""Deterministic, restart-safe synthetic data pipeline.
+
+Design constraints (the ones a real multi-pod pipeline must satisfy):
+
+  * **Stateless indexing** — ``batch_for_step(step)`` is a pure function of
+    ``(seed, step)``, so a restarted job resumes mid-epoch with zero drift
+    and no iterator state in the checkpoint.
+  * **Host sharding** — each host materializes only its slice of the global
+    batch (``host_shard``); the global batch is the concatenation across
+    hosts in host-id order.
+  * **Learnability** — tokens follow a noisy affine bigram process
+    (``next = (a·prev + c) mod V`` with probability ``1-noise``), so a ~1M
+    parameter model demonstrably reduces loss within tens of steps — used
+    by the integration tests and the quickstart example.
+
+Everything is jittable ``jax.random`` (threefry counter-mode): no files, no
+state, reproducible across process boundaries.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["SyntheticLMData", "host_shard"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticLMData:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    noise: float = 0.1
+    family: str = "dense"      # encoder family gets frames/mask/targets
+    d_model: int = 0           # encoder/vlm stub embedding dim
+    n_patches: int = 0         # vlm prefix
+
+    def _bigram_next(self, prev):
+        a = 2 * (self.seed % 1000) + 1  # odd multiplier → full-period affine map
+        c = (self.seed * 7919 + 13) % self.vocab
+        return (prev * a + c) % self.vocab
+
+    def batch_for_step(self, step: int) -> Dict[str, jax.Array]:
+        """Global batch for ``step`` (pure function)."""
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        if self.family == "encoder":
+            kf, km, kt = jax.random.split(key, 3)
+            frames = 0.02 * jax.random.normal(
+                kf, (self.global_batch, self.seq_len, self.d_model))
+            mask = jax.random.bernoulli(km, 0.35,
+                                        (self.global_batch, self.seq_len))
+            targets = jax.random.randint(
+                kt, (self.global_batch, self.seq_len), 0, self.vocab,
+                jnp.int32)
+            return {"frames": frames, "mask": mask, "targets": targets}
+
+        k0, kn, ku, kp = jax.random.split(key, 4)
+        s_text = self.seq_len - self.n_patches
+        first = jax.random.randint(k0, (self.global_batch, 1), 0, self.vocab,
+                                   jnp.int32)
+
+        def step_fn(prev, noise_key):
+            clean = self._bigram_next(prev)
+            kz, ku2 = jax.random.split(noise_key)
+            rand = jax.random.randint(ku2, prev.shape, 0, self.vocab,
+                                      jnp.int32)
+            use_noise = jax.random.bernoulli(kz, self.noise, prev.shape)
+            nxt = jnp.where(use_noise, rand, clean)
+            return nxt, nxt
+
+        # one extra token so labels are a clean shift
+        noise_keys = jax.random.split(kn, s_text)
+        _, rest = jax.lax.scan(step_fn, first[:, 0], noise_keys)
+        tokens_ext = jnp.concatenate([first, rest.T], axis=1)  # (B, s_text+1)
+        batch = {
+            "tokens": tokens_ext[:, :-1],
+            "labels": tokens_ext[:, 1:],
+        }
+        if self.n_patches:
+            batch["patches"] = 0.02 * jax.random.normal(
+                kp, (self.global_batch, self.n_patches, self.d_model))
+        return batch
+
+    def iterate(self, start_step: int = 0):
+        step = start_step
+        while True:
+            yield self.batch_for_step(step)
+            step += 1
+
+
+def host_shard(batch: Dict[str, jax.Array], host_id: int,
+               n_hosts: int) -> Dict[str, jax.Array]:
+    """This host's contiguous slice of the global batch (batch-dim split)."""
+    def slice_leaf(a):
+        b = a.shape[0]
+        assert b % n_hosts == 0, (b, n_hosts)
+        per = b // n_hosts
+        return a[host_id * per:(host_id + 1) * per]
+
+    return jax.tree.map(slice_leaf, batch)

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (MOA scheduling).
+
+Layout (per the framework convention):
+  * ``moa_reduce.py`` / ``loa_add.py`` / ``dot_moa.py`` — ``pl.pallas_call``
+    bodies with explicit BlockSpec VMEM tiling (TPU target);
+  * ``ops.py``  — jitted public wrappers (auto-interpret on CPU);
+  * ``ref.py``  — pure-jnp oracles used by the test sweeps.
+"""
+
+from repro.kernels.ops import (moa_reduce, loa_add, loa_reduce, dot_moa,
+                               flash_attention)
+
+__all__ = ["moa_reduce", "loa_add", "loa_reduce", "dot_moa",
+           "flash_attention"]

@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: flash-attention forward — §3.1 applied to softmax·V.
+
+The attention output for one query is a softmax-weighted MOA over up to
+524 288 value operands. This kernel schedules it exactly like the paper's
+serialized MOA, with the extra subtlety that softmax needs *renormalizable*
+partial sums: the running (max m, denominator l, accumulator acc) triple is
+carried across KV blocks in the output refs (the trailing grid dimension is
+sequential on TPU), and the accumulator is rescaled by ``exp(m_old−m_new)``
+at each fold — an MOA whose "carry" is a scaling factor instead of a bit.
+
+Grid: ``(B·H, q_blocks, kv_blocks)``; per-step VMEM working set is
+``(block_q + 2·block_k) × head_dim + block_q × block_k`` floats — the
+paper's cluster size ``n_c`` is ``block_k``. Layout: q/k/v arrive as
+``(BH, S, D)`` (GQA broadcast done by the wrapper).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["flash_attention_pallas"]
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
+                  block_q, block_k, sm_scale, causal, kv_len):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32) * sm_scale          # (bq, D)
+    k = k_ref[0].astype(jnp.float32)                     # (bk, D)
+    v = v_ref[0].astype(jnp.float32)                     # (bk, D)
+    s = q @ k.T                                          # (bq, bk)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    kv_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = kv_pos < kv_len
+    if causal:
+        mask &= kv_pos <= q_pos
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_ref[0]                                    # (bq,)
+    l_prev = l_ref[0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=-1)
+    acc = o_ref[0].astype(jnp.float32) * corr[:, None] + p @ v
+
+    m_ref[0] = m_new
+    l_ref[0] = l_new
+    n_kv_blocks = pl.num_programs(2)
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        o_ref[0] = (acc / jnp.maximum(l_new, 1e-30)[:, None]) \
+            .astype(o_ref.dtype)
+
+    @pl.when(ki != n_kv_blocks - 1)
+    def _carry():
+        o_ref[0] = acc.astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = False):
+    """q: (BH, Sq, D); k, v: (BH, Skv, D) → (BH, Sq, D).
+
+    Carries the accumulator in f32 through the output ref (the MXU-style
+    hard accumulation the paper's conclusion asks for); m/l side outputs
+    are discarded after the final normalization step.
+    """
+    BH, Sq, D = q.shape
+    _, Skv, _ = k.shape
+    sm_scale = D ** -0.5
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    pad_q = -Sq % block_q
+    pad_k = -Skv % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0)))
+    Sq_p, Skv_p = q.shape[1], k.shape[1]
+    grid = (BH, Sq_p // block_q, Skv_p // block_k)
+
+    out, _, _ = pl.pallas_call(
+        functools.partial(_flash_kernel, block_q=block_q, block_k=block_k,
+                          sm_scale=sm_scale, causal=causal, kv_len=Skv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_q), lambda b, i, j: (b, i)),
+            pl.BlockSpec((1, block_q), lambda b, i, j: (b, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, Sq_p, D), jnp.float32),
+            jax.ShapeDtypeStruct((BH, Sq_p), jnp.float32),
+            jax.ShapeDtypeStruct((BH, Sq_p), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :Sq].astype(q.dtype)

@@ -1,0 +1,73 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+``interpret`` is resolved automatically: on CPU backends the kernels run in
+interpret mode (Python evaluation of the kernel body — correctness path);
+on TPU they compile to Mosaic. Call sites never pass ``interpret``.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import dot_moa as _dot_moa
+from repro.kernels import flash_attention as _flash
+from repro.kernels import loa_add as _loa_add
+from repro.kernels import moa_reduce as _moa_reduce
+
+__all__ = ["moa_reduce", "loa_add", "loa_reduce", "dot_moa",
+           "flash_attention"]
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("block_n", "block_f"))
+def moa_reduce(x, *, block_n: int = 512, block_f: int = 256):
+    """Blocked MOA reduction ``(n, f) -> (f,)`` (f32 accumulate)."""
+    return _moa_reduce.moa_reduce_pallas(
+        x, block_n=block_n, block_f=block_f, interpret=_interpret()
+    )
+
+
+@partial(jax.jit, static_argnames=("approx_bits", "width", "block"))
+def loa_add(x, y, *, approx_bits: int, width: int = 8, block: int = 1024):
+    """Element-wise LOA approximate addition (int32)."""
+    return _loa_add.loa_add_pallas(
+        x, y, approx_bits=approx_bits, width=width, block=block,
+        interpret=_interpret(),
+    )
+
+
+@partial(jax.jit, static_argnames=("approx_bits", "width", "block_n", "block_f"))
+def loa_reduce(x, *, approx_bits: int, width: int = 8, block_n: int = 256,
+               block_f: int = 256):
+    """Approximate serialized MOA ``(n, f) -> (f,)`` (int32)."""
+    return _loa_add.loa_reduce_pallas(
+        x, approx_bits=approx_bits, width=width, block_n=block_n,
+        block_f=block_f, interpret=_interpret(),
+    )
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128):
+    """Flash-attention forward ``(BH, S, D)`` (serialized softmax MOA)."""
+    return _flash.flash_attention_pallas(
+        q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+        interpret=_interpret(),
+    )
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                   "approx_bits", "out_dtype"))
+def dot_moa(a, b, *, block_m: int = 256, block_n: int = 256,
+            block_k: int = 512, approx_bits: int = 0, out_dtype=None):
+    """K-blocked matmul with serialized-MOA contraction."""
+    return _dot_moa.dot_moa_pallas(
+        a, b, block_m=block_m, block_n=block_n, block_k=block_k,
+        approx_bits=approx_bits, out_dtype=out_dtype, interpret=_interpret(),
+    )

@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth for the kernel allclose sweeps in
+``tests/test_kernels.py``. They intentionally reuse :mod:`repro.core` (the
+LOA bitwise semantics live in exactly one place).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import loa as loa_lib
+
+__all__ = ["moa_reduce_ref", "loa_add_ref", "loa_reduce_ref", "dot_moa_ref",
+           "flash_attention_ref"]
+
+
+def moa_reduce_ref(x, *, accum_dtype=jnp.float32):
+    """Sum over axis 0 with ``accum_dtype`` accumulation: ``(n, f) -> (f,)``."""
+    return jnp.sum(x.astype(accum_dtype), axis=0)
+
+
+def loa_add_ref(x, y, *, approx_bits: int, width: int):
+    """Element-wise Lower-part-OR approximate addition (int32 containers)."""
+    return loa_lib.loa_add(x, y, approx_bits=approx_bits, width=width)
+
+
+def loa_reduce_ref(x, *, approx_bits: int, width: int, block_n: int):
+    """Serialized LOA MOA over axis 0: ``(n, f) -> (f,)``.
+
+    Semantics mirror the kernel exactly: within each block of ``block_n``
+    operands the sum is *exact* (the MXU/VPU hard adders — free), and each
+    block partial is folded into the running accumulator through one LOA
+    addition (the approximate serial accumulator of §3.1 + §3.2 combined).
+    ``n`` must be a multiple of ``block_n``.
+    """
+    n, f = x.shape
+    assert n % block_n == 0, (n, block_n)
+    x = x.astype(jnp.int32).reshape(n // block_n, block_n, f)
+    partials = jnp.sum(x, axis=1)
+    acc = partials[0]
+    for i in range(1, partials.shape[0]):
+        acc = loa_lib.loa_add(acc, partials[i], approx_bits=approx_bits, width=width)
+    return acc
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """One-shot softmax attention oracle: q/k/v ``(BH, S, D)``."""
+    D = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (D ** -0.5)
+    if causal:
+        Sq, Skv = q.shape[1], k.shape[1]
+        mask = jnp.arange(Skv)[None, :] <= jnp.arange(Sq)[:, None]
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def dot_moa_ref(a, b, *, accum_dtype=jnp.float32, out_dtype=None):
+    """Plain matmul with explicit accumulation dtype: ``(m,k) @ (k,n)``."""
+    out_dtype = out_dtype or a.dtype
+    return jnp.matmul(a, b, preferred_element_type=accum_dtype).astype(out_dtype)

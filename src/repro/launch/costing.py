@@ -1,0 +1,324 @@
+"""Analytic per-cell cost model: FLOPs (exact to our einsums), HBM bytes
+(first-order), collective wire bytes (structured ring model).
+
+WHY ANALYTIC: XLA's ``compiled.cost_analysis()`` counts every ``while``
+body ONCE, not × trip-count (verified: a length-8 scan reports exactly 1/8
+the FLOPs of its unrolled twin). Our models are scan-over-layers with
+scan-inside-layer (flash attention, SSD chunks), so raw HLO numbers are
+under by 1–3 orders of magnitude. The dry-run therefore records BOTH: the
+raw ``cost_analysis`` (labeled loop-undercounted) and this model, which is
+exact-by-construction for FLOPs (we wrote every contraction) and validated
+against ``cost_analysis`` on fully-unrolled single-layer variants in
+``tests/test_costing.py`` (±2 % — see EXPERIMENTS.md §Dry-run methodology).
+
+Conventions: 1 MAC = 2 FLOPs; all values are **per device per step** given
+the mesh meta; ring collectives move ``2·B·(k−1)/k`` (all-reduce) or
+``B·(k−1)/k`` (all-gather / reduce-scatter) bytes per device for a
+per-device-visible buffer of ``B`` bytes over a group of ``k``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+__all__ = ["CellCost", "estimate_cell"]
+
+BF16 = 2
+F32 = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshMeta:
+    pod: int
+    data: int
+    model: int
+    fsdp: bool = True
+    # hillclimb levers (EXPERIMENTS.md §Perf)
+    compress_grads: bool = False    # int8 gradient all-reduce (+err state)
+    attn_cp: bool = False           # context-parallel attention: a2a layout
+                                    # swap replaces the attn-out all-reduce
+    kv_dim_shard: bool = False      # shard cache head_dim over model when
+                                    # kv_heads doesn't divide it
+
+    @property
+    def chips(self) -> int:
+        return self.pod * self.data * self.model
+
+    @property
+    def dp(self) -> int:
+        return self.pod * self.data
+
+    def kv_shard_ways(self, cfg: "ModelConfig") -> int:
+        """How many ways the KV cache actually shards (divisibility!)."""
+        ways = self.dp if cfg.n_kv_heads else self.chips
+        if not cfg.n_kv_heads:
+            return ways
+        if cfg.n_kv_heads % self.model == 0:
+            return self.dp * self.model
+        if self.kv_dim_shard and cfg.head_dim % self.model == 0:
+            return self.dp * self.model
+        return self.dp  # kv heads replicated over the model axis
+
+
+@dataclasses.dataclass
+class CellCost:
+    flops: float                  # per device
+    hbm_bytes: float              # per device
+    collective_bytes: float       # per device (wire)
+    components: Dict[str, float]  # named breakdown (global FLOPs)
+    bytes_components: Dict[str, float]
+    collective_components: Dict[str, float]
+
+
+# ---------------------------------------------------------------------------
+# ring-collective wire models (bytes per device)
+# ---------------------------------------------------------------------------
+
+def ring_all_reduce(buf_bytes: float, k: int) -> float:
+    return 0.0 if k <= 1 else 2.0 * buf_bytes * (k - 1) / k
+
+
+def ring_all_gather(full_bytes: float, k: int) -> float:
+    """Gathering shards into ``full_bytes`` per device."""
+    return 0.0 if k <= 1 else full_bytes * (k - 1) / k
+
+
+ring_reduce_scatter = ring_all_gather
+
+
+def all_to_all(buf_bytes: float, k: int) -> float:
+    return 0.0 if k <= 1 else buf_bytes * (k - 1) / k
+
+
+# ---------------------------------------------------------------------------
+# forward FLOPs (global, per pass) — mirrors the model code exactly
+# ---------------------------------------------------------------------------
+
+def _attn_layer_flops(cfg: ModelConfig, T: float, S_attn: float) -> Dict[str, float]:
+    """One attention layer over T tokens attending to S_attn positions.
+
+    Our flash path computes *all* (q-chunk × kv-chunk) blocks — causal
+    blocks are masked, not skipped — so the score/PV term is the full
+    ``T × S_attn`` rectangle (the useful-compute ratio exposes this; chunk
+    skipping is a §Perf lever).
+    """
+    d, H, Kv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "attn_qkv": 2 * T * d * (H * Dh + 2 * Kv * Dh),
+        "attn_scores_pv": 4 * T * S_attn * H * Dh,
+        "attn_out": 2 * T * d * H * Dh,
+    }
+
+
+def _mlp_layer_flops(cfg: ModelConfig, T: float) -> float:
+    if cfg.family == "encoder":
+        return 4 * T * cfg.d_model * cfg.d_ff       # in + out
+    return 6 * T * cfg.d_model * cfg.d_ff           # swiglu: gate, up, down
+
+
+def _moe_layer_flops(cfg: ModelConfig, T: float) -> Dict[str, float]:
+    E, k, cf = cfg.n_experts, cfg.top_k, cfg.capacity_factor
+    slots = T * k * cf                               # E·C buffer rows
+    return {
+        "moe_router": 2 * T * cfg.d_model * E,
+        "moe_experts": 6 * slots * cfg.d_model * cfg.d_ff,
+    }
+
+
+def _ssd_layer_flops(cfg: ModelConfig, T: float, decode: bool) -> Dict[str, float]:
+    d, di = cfg.d_model, cfg.d_inner
+    H, P, N = cfg.n_ssm_heads, cfg.headdim, cfg.d_state
+    d_in_proj = 2 * di + 2 * cfg.n_groups * cfg.d_state + H
+    conv_dim = di + 2 * cfg.n_groups * cfg.d_state
+    out = {
+        "ssm_proj": 2 * T * d * d_in_proj + 2 * T * di * d,
+        "ssm_conv": 2 * T * cfg.d_conv * conv_dim,
+    }
+    if decode:
+        out["ssm_core"] = 4 * T * H * P * N          # state update + readout
+    else:
+        L = cfg.ssd_chunk
+        out["ssm_core"] = (2 * T * L * H * (N + P)   # intra-chunk quadratic
+                           + 4 * T * H * N * P)      # states in + out
+    return out
+
+
+def forward_flops(cfg: ModelConfig, *, tokens: float, s_attn: float,
+                  decode: bool = False) -> Dict[str, float]:
+    """Global FLOPs of one forward pass over ``tokens`` total tokens."""
+    comp: Dict[str, float] = {}
+    L = cfg.n_layers
+
+    def add(d: Dict[str, float], mult: float = 1.0):
+        for k, v in d.items():
+            comp[k] = comp.get(k, 0.0) + v * mult
+
+    if cfg.family in ("dense", "encoder", "vlm"):
+        add(_attn_layer_flops(cfg, tokens, s_attn), L)
+        comp["mlp"] = L * _mlp_layer_flops(cfg, tokens)
+    elif cfg.family == "moe":
+        add(_attn_layer_flops(cfg, tokens, s_attn), L)
+        add(_moe_layer_flops(cfg, tokens), L)
+    elif cfg.family == "ssm":
+        add(_ssd_layer_flops(cfg, tokens, decode), L)
+    elif cfg.family == "hybrid":
+        add(_ssd_layer_flops(cfg, tokens, decode), L)
+        n_apps = cfg.n_layers // cfg.attn_every
+        add(_attn_layer_flops(cfg, tokens, s_attn), n_apps)
+        comp["mlp"] = n_apps * _mlp_layer_flops(cfg, tokens)
+    # logits (VLM: text positions only — approximate with all tokens is
+    # wrong, so scale)
+    logits_tokens = tokens
+    if cfg.family == "vlm":
+        logits_tokens = tokens * max(
+            1 - cfg.n_patches / max(s_attn, 1), 0.05)
+    comp["logits"] = 2 * logits_tokens * cfg.d_model * cfg.vocab
+    return comp
+
+
+def _train_multiplier(cfg: ModelConfig) -> float:
+    """fwd=1, bwd=2, remat recompute: full≈+1, dots≈+0.5, none=+0."""
+    return {"full": 4.0, "dots": 3.5, "none": 3.0}[cfg.remat]
+
+
+# ---------------------------------------------------------------------------
+# cell-level estimate
+# ---------------------------------------------------------------------------
+
+
+def estimate_cell(cfg: ModelConfig, shape: ShapeSpec, mesh: MeshMeta) -> CellCost:
+    B, S = shape.global_batch, shape.seq_len
+    phase = shape.phase
+    decode = phase == "decode"
+    tokens = float(B) if decode else float(B * S)
+    s_attn = float(S)
+
+    comp = forward_flops(cfg, tokens=tokens, s_attn=s_attn, decode=decode)
+    fwd = sum(comp.values())
+    if phase == "train":
+        mult = _train_multiplier(cfg)
+        total_flops = (fwd - comp["logits"]) * mult + comp["logits"] * 3.0
+    else:
+        total_flops = fwd
+
+    # ---- HBM bytes (first-order) -------------------------------------------
+    pbytes_f32 = cfg.param_count() * F32
+    pbytes_bf16 = cfg.param_count() * BF16
+    chips = mesh.chips
+    bcomp: Dict[str, float] = {}
+    T_dev = tokens / max(mesh.dp, 1)
+    d = cfg.d_model
+    if phase == "train":
+        # weights ×2 (fwd+bwd reads), grad write, adam m/v r+w, param r+w
+        bcomp["params_opt"] = (2 * pbytes_bf16 + 8 * pbytes_f32) / chips
+        if mesh.compress_grads:
+            bcomp["error_feedback"] = 2 * pbytes_f32 / chips
+        # residual + ~8 intermediates per layer, fwd write + bwd read, ×2 remat
+        act_mult = {"full": 1.0, "dots": 1.5, "none": 2.0}[cfg.remat]
+        bcomp["activations"] = (cfg.n_layers * T_dev * d * BF16
+                                * 8 * 2 * act_mult) / mesh.model
+        # flash KV re-read: KV streamed once per q-chunk
+        if cfg.family in ("dense", "vlm", "moe", "encoder"):
+            nq = max(S // cfg.q_chunk, 1)
+            kv_b = tokens * cfg.n_kv_heads * cfg.head_dim * 2 * BF16
+            bcomp["kv_stream"] = (cfg.n_layers * nq * kv_b) / chips
+        bcomp["logits"] = 3 * T_dev * cfg.vocab * F32 / mesh.model
+    elif phase == "prefill":
+        bcomp["params"] = pbytes_bf16 / chips
+        bcomp["activations"] = (cfg.n_layers * T_dev * d * BF16 * 8) \
+            / mesh.model
+        if cfg.family in ("dense", "vlm", "moe"):
+            nq = max(S // cfg.q_chunk, 1)
+            kv_b = tokens * cfg.n_kv_heads * cfg.head_dim * 2 * BF16
+            bcomp["kv_stream"] = (cfg.n_layers * nq * kv_b) / chips
+            bcomp["kv_cache_write"] = (cfg.n_layers * tokens * cfg.n_kv_heads
+                                       * cfg.head_dim * 2 * BF16) / chips
+    else:  # decode
+        bcomp["params"] = pbytes_bf16 / chips
+        kv_elem = 1 if cfg.kv_cache_dtype == "int8" else BF16
+        kv_ways = mesh.kv_shard_ways(cfg)
+        if cfg.family in ("dense", "vlm", "moe"):
+            cache = cfg.n_layers * B * S * cfg.n_kv_heads * cfg.head_dim \
+                * 2 * kv_elem
+            bcomp["kv_cache_read"] = cache / kv_ways
+        if cfg.family in ("ssm", "hybrid"):
+            ssm_state = (cfg.n_layers * B * cfg.n_ssm_heads * cfg.headdim
+                         * cfg.d_state * F32)
+            bcomp["ssm_state"] = 2 * ssm_state / chips
+            if cfg.family == "hybrid":
+                n_apps = cfg.n_layers // cfg.attn_every
+                cache = n_apps * B * S * cfg.n_kv_heads * cfg.head_dim \
+                    * 2 * kv_elem
+                bcomp["kv_cache_read"] = cache / kv_ways
+
+    # ---- collective wire bytes ----------------------------------------------
+    ccomp: Dict[str, float] = {}
+    tp = mesh.model
+    n_attn = cfg.n_layers if cfg.family not in ("ssm", "hybrid") else \
+        (cfg.n_layers // cfg.attn_every if cfg.attn_every else 0)
+
+    def block_ar_count() -> float:
+        """Activation all-reduces per forward pass.
+
+        TP inserts one AR per sharded-output block: attention (attn-out)
+        and dense MLP (down-proj). MoE layers have NO mlp AR — the combine
+        is the all-to-all, charged separately. Context-parallel attention
+        (attn_cp) replaces the attn AR with a layout a2a, charged below.
+        """
+        attn_ar = 0 if mesh.attn_cp else n_attn
+        if cfg.family == "moe":
+            return attn_ar
+        if cfg.family == "ssm":
+            return cfg.n_layers  # ssm out_proj AR
+        if cfg.family == "hybrid":
+            return cfg.n_layers + attn_ar + n_attn  # mamba + shared mlp
+        return attn_ar + cfg.n_layers  # attn + mlp per layer
+
+    if phase == "train":
+        grad_shard = pbytes_f32 / tp          # per model-shard gradient bytes
+        grad_elem = 1.0 if mesh.compress_grads else 1.0 * F32
+        ccomp["grad_reduce"] = ring_all_reduce(
+            grad_shard * (grad_elem / F32), mesh.dp)
+        if mesh.fsdp:
+            # weights gathered over data axis fwd+bwd (bf16 compute copies)
+            ccomp["fsdp_allgather"] = 2 * ring_all_gather(
+                pbytes_bf16 / tp, mesh.data)
+        act = T_dev * d * BF16
+        ccomp["tp_activations"] = 2 * block_ar_count() * ring_all_reduce(
+            act, tp)
+        if mesh.attn_cp:
+            # layout swap: each device exchanges only its activation shard
+            ccomp["attn_cp_a2a"] = 2 * 2 * n_attn * all_to_all(act / tp, tp)
+        if cfg.loss_impl == "gather":
+            ccomp["logits_gather"] = ring_all_gather(
+                T_dev * cfg.vocab * F32, tp) * 3  # fwd + bwd scatter
+        else:
+            ccomp["vocab_parallel_ce"] = ring_all_reduce(T_dev * F32 * 2, tp)
+        if cfg.family == "moe":
+            ccomp["moe_all_to_all"] = 2 * 2 * cfg.n_layers * all_to_all(
+                T_dev * cfg.top_k * d * BF16, tp)
+    else:
+        act = (tokens / max(mesh.dp, 1)) * d * BF16
+        ccomp["tp_activations"] = block_ar_count() * ring_all_reduce(act, tp)
+        if mesh.attn_cp:
+            ccomp["attn_cp_a2a"] = 2 * n_attn * all_to_all(act / tp, tp)
+        if cfg.family == "moe":
+            ccomp["moe_all_to_all"] = 2 * cfg.n_layers * all_to_all(
+                (tokens / max(mesh.dp, 1)) * cfg.top_k * d * BF16, tp)
+        if decode and shape.global_batch < mesh.dp:
+            # SP decode: split-K softmax combine over the data axis
+            stats = cfg.n_heads * 2 * F32 * B
+            ccomp["sp_softmax_combine"] = n_attn * ring_all_reduce(
+                stats, mesh.data)
+
+    return CellCost(
+        flops=total_flops / chips,
+        hbm_bytes=sum(bcomp.values()),
+        collective_bytes=sum(ccomp.values()),
+        components=comp,
+        bytes_components=bcomp,
+        collective_components=ccomp,
+    )

@@ -1,0 +1,368 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT-lower + compile every (arch × shape × mesh) cell.
+
+MUST keep the two lines above as the very first statements — jax locks the
+device count at first init, and the production meshes need 512 placeholder
+host devices. Everything else (tests, benches) sees the real single CPU.
+
+Per cell this produces a JSON artifact with:
+  * memory_analysis()  — per-device argument/output/temp/peak bytes,
+  * cost_analysis()    — HLO FLOPs + bytes accessed (per device),
+  * collective census  — per-op-type per-device buffer bytes parsed from
+    the post-SPMD compiled HLO,
+  * the three roofline terms (seconds) + dominant term,
+  * MODEL_FLOPS (6·N·D train / 2·N·D inference) and the useful-compute
+    ratio MODEL_FLOPS / HLO_FLOPs.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh both --out artifacts/dryrun
+  ... --variant fsdp_off|gather_ce|full_attn|remat_none (hillclimb levers)
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeSpec, shape_applicable
+from repro.configs.registry import ARCHS, get_config
+from repro.core.cost_model import TPU_V5E
+from repro.launch import costing
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_production_mesh
+from repro.models.api import build_model
+from repro.parallel import DEFAULT_RULES, activate
+
+__all__ = ["run_cell", "collective_census", "roofline_terms"]
+
+_COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                   "collective-permute")
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8\w*|s32|s16|s8|u32|u16|u8|pred)"
+                       r"\[([\d,]*)\]")
+_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+          "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _BYTES.get(dtype, 4)
+
+
+def collective_census(hlo_text: str) -> Dict[str, int]:
+    """Per-device collective buffer bytes by op type, from post-SPMD HLO.
+
+    Counts the *result* buffer of every collective instruction (for
+    all-gather the result is the gathered buffer — the bytes that move;
+    for reduce-scatter the operand is bigger, but ring bytes-on-wire scale
+    with the large buffer either way, so we take max(result, operands)).
+    """
+    census = {op: 0 for op in _COLLECTIVE_OPS}
+    census["count"] = 0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        for op in _COLLECTIVE_OPS:
+            # match the instruction itself (" op(" / " op-start("), not the
+            # result name (%all-reduce.5) or metadata mentions
+            marker = None
+            for cand in (f" {op}(", f" {op}-start("):
+                if cand in stripped:
+                    marker = cand
+                    break
+            if marker is None:
+                continue
+            head, tail = stripped.split(marker, 1)
+            result_b = sum(_shape_bytes(d, s)
+                           for d, s in _SHAPE_RE.findall(head))
+            operand_b = sum(_shape_bytes(d, s)
+                            for d, s in _SHAPE_RE.findall(tail.split(
+                                ", replica_groups")[0]))
+            census[op] += max(result_b, operand_b)
+            census["count"] += 1
+            break
+    census["total_bytes"] = sum(census[o] for o in _COLLECTIVE_OPS)
+    return census
+
+
+def roofline_terms(*, hlo_flops: float, hlo_bytes: float,
+                   collective_bytes_per_device: float,
+                   spec=TPU_V5E) -> Dict[str, float]:
+    compute_s = hlo_flops / spec.peak_bf16_flops
+    memory_s = hlo_bytes / spec.hbm_bandwidth
+    collective_s = collective_bytes_per_device / spec.ici_link_bandwidth
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    terms["dominant"] = max(("compute_s", "memory_s", "collective_s"),
+                            key=lambda k: terms[k])
+    terms["bound_s"] = terms[terms["dominant"]]
+    return terms
+
+
+def _model_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    n = cfg.active_param_count()
+    if shape.phase == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.phase == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def apply_variant(cfg: ModelConfig, variant: str) -> ModelConfig:
+    """Hillclimb levers, selectable from the CLI (see EXPERIMENTS.md §Perf)."""
+    if variant == "baseline" or not variant:
+        return cfg
+    updates: dict = {}
+    for item in variant.split("+"):
+        if item == "gather_ce":
+            updates["loss_impl"] = "gather"
+        elif item == "full_attn":
+            updates["attn_impl"] = "full"
+        elif item == "remat_none":
+            updates["remat"] = "none"
+        elif item == "remat_dots":
+            updates["remat"] = "dots"
+        elif item == "kv_int8":
+            updates["kv_cache_dtype"] = "int8"
+        elif item == "attn_cp":
+            updates["attn_cp"] = True
+        elif item.startswith("moa_chunk="):
+            updates["moa_chunk"] = int(item.split("=")[1])
+        elif item.startswith("kv_chunk="):
+            updates["kv_chunk"] = int(item.split("=")[1])
+        elif item.startswith("q_chunk="):
+            updates["q_chunk"] = int(item.split("=")[1])
+        elif item.startswith("ssd_chunk="):
+            updates["ssd_chunk"] = int(item.split("=")[1])
+        elif item.startswith("capacity="):
+            updates["capacity_factor"] = float(item.split("=")[1])
+        elif item in ("fsdp_off", "compress_grads", "kv_dim_shard",
+                      "seq_shard") or item.startswith("micro="):
+            pass  # handled at sharding/step level via run_cell
+        else:
+            raise ValueError(f"unknown variant item {item!r}")
+    return dataclasses.replace(cfg, **updates)
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             variant: str = "baseline", fsdp: bool = True,
+             compress_grads: bool = False,
+             save_hlo: Optional[str] = None) -> dict:
+    cfg = apply_variant(get_config(arch), variant)
+    shape = SHAPES[shape_name]
+    if shape.phase != "train":
+        # serving runs on bf16 weights (f32 masters are a training artifact)
+        cfg = dataclasses.replace(cfg, param_dtype="bfloat16")
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": why}
+    if "fsdp_off" in variant:
+        fsdp = False
+    if "compress_grads" in variant:
+        compress_grads = True
+    kv_dim_shard = "kv_dim_shard" in variant
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = build_model(cfg)
+    rules = steps_lib.rules_for(cfg, shape, mesh, DEFAULT_RULES)
+    if kv_dim_shard:
+        rules = rules.with_overrides(head_dim="model", kv_heads_cache=None,
+                                     scale_seq="model")
+    if "seq_shard" in variant:
+        # Megatron-SP: the residual stream (and saved remat activations)
+        # shard their sequence dim over the model axis between blocks
+        rules = rules.with_overrides(seq="model")
+    t0 = time.monotonic()
+
+    with activate(mesh, rules):
+        specs = model.input_specs(shape)
+        batch_shardings = steps_lib.batch_specs(specs, mesh, rules)
+
+        if shape.phase == "train":
+            micro = 1
+            for item in variant.split("+"):
+                if item.startswith("micro="):
+                    micro = int(item.split("=")[1])
+            hyper = steps_lib.TrainHyper(compress_grads=compress_grads,
+                                         microbatches=micro)
+            state_spec = jax.eval_shape(
+                lambda: steps_lib.init_train_state(
+                    model, jax.random.PRNGKey(0), hyper=hyper))
+            axes = steps_lib.state_axes(state_spec)
+            state_shardings = steps_lib.build_shardings(
+                state_spec, axes, mesh, rules, fsdp=fsdp)
+            step_fn = steps_lib.build_train_step(model, hyper=hyper)
+            jitted = jax.jit(step_fn,
+                             in_shardings=(state_shardings, batch_shardings),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_spec, specs)
+        elif shape.phase == "prefill":
+            params_spec = model.abstract_params()
+            p_axes = steps_lib.infer_param_axes(params_spec)
+            param_shardings = steps_lib.build_shardings(
+                params_spec, p_axes, mesh, rules, fsdp=False)
+            step_fn = steps_lib.build_prefill_step(model,
+                                                   max_len=shape.seq_len)
+            jitted = jax.jit(step_fn,
+                             in_shardings=(param_shardings, batch_shardings))
+            lowered = jitted.lower(params_spec, specs)
+        else:  # decode
+            params_spec = model.abstract_params()
+            p_axes = steps_lib.infer_param_axes(params_spec)
+            param_shardings = steps_lib.build_shardings(
+                params_spec, p_axes, mesh, rules, fsdp=False)
+            cache_spec = specs["cache"]
+            cache_shardings = steps_lib.cache_specs(
+                {"cache": cache_spec}, mesh, rules)["cache"]
+            token_sharding = steps_lib.batch_specs(
+                {"tokens": specs["tokens"]}, mesh, rules)["tokens"]
+            step_fn = steps_lib.build_decode_step(model)
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(param_shardings, cache_shardings,
+                              token_sharding),
+                donate_argnums=(1,))
+            lowered = jitted.lower(params_spec, cache_spec, specs["tokens"])
+
+        t_lower = time.monotonic() - t0
+        compiled = lowered.compile()
+        t_compile = time.monotonic() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    census = collective_census(hlo)
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo)
+
+    n_chips = mesh.devices.size
+    hlo_flops = float(cost.get("flops", 0.0))
+    hlo_bytes = float(cost.get("bytes accessed", 0.0))
+
+    # Analytic cost model (primary): XLA cost_analysis counts while bodies
+    # once, so scan-over-layers models are loop-undercounted there — see
+    # costing.py docstring + tests/test_costing.py for the validation.
+    mesh_meta = costing.MeshMeta(
+        pod=2 if multi_pod else 1, data=16, model=16, fsdp=fsdp,
+        compress_grads=compress_grads, attn_cp=cfg.attn_cp,
+        kv_dim_shard=kv_dim_shard)
+    cell = costing.estimate_cell(cfg, shape, mesh_meta)
+    terms = roofline_terms(hlo_flops=cell.flops, hlo_bytes=cell.hbm_bytes,
+                           collective_bytes_per_device=cell.collective_bytes)
+    mflops = _model_flops(cfg, shape)
+    mflops_per_chip = mflops / n_chips
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "phase": shape.phase,
+        "mesh": "multi_pod_2x16x16" if multi_pod else "single_pod_16x16",
+        "n_chips": n_chips,
+        "variant": variant,
+        "fsdp": fsdp,
+        "skipped": False,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "cost_raw_hlo": {
+            # loop-undercounted: while bodies counted once by XLA
+            "flops_per_device": hlo_flops,
+            "bytes_per_device": hlo_bytes,
+        },
+        "cost_analytic": {
+            "flops_per_device": cell.flops,
+            "hbm_bytes_per_device": cell.hbm_bytes,
+            "collective_bytes_per_device": cell.collective_bytes,
+            "flops_components_global": cell.components,
+            "bytes_components": cell.bytes_components,
+            "collective_components": cell.collective_components,
+        },
+        "collectives_hlo_census": census,
+        "roofline": terms,
+        "model_flops_total": mflops,
+        "model_flops_per_chip": mflops_per_chip,
+        "useful_compute_ratio": (mflops_per_chip / cell.flops
+                                 if cell.flops else None),
+        "params_total": cfg.param_count(),
+        "params_active": cfg.active_param_count(),
+    }
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true",
+                    help="every valid (arch, shape) cell")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--save-hlo", default=None)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = []
+    if args.all:
+        for arch in sorted(ARCHS):
+            for shape_name in SHAPES:
+                cells.append((arch, shape_name))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    failures = 0
+    for arch, shape_name in cells:
+        for multi_pod in meshes:
+            tag = f"{arch}__{shape_name}__{'multi' if multi_pod else 'single'}"
+            if args.variant != "baseline":
+                tag += f"__{args.variant.replace('=', '-').replace('+', '_')}"
+            try:
+                res = run_cell(arch, shape_name, multi_pod=multi_pod,
+                               variant=args.variant,
+                               save_hlo=args.save_hlo)
+            except Exception as e:  # a failed cell is a bug — surface it
+                res = {"arch": arch, "shape": shape_name,
+                       "mesh": "multi" if multi_pod else "single",
+                       "error": f"{type(e).__name__}: {e}", "skipped": False}
+                failures += 1
+            path = os.path.join(args.out, tag + ".json")
+            with open(path, "w") as f:
+                json.dump(res, f, indent=1)
+            status = ("SKIP: " + res["reason"]) if res.get("skipped") else \
+                ("ERROR: " + res["error"][:120]) if "error" in res else \
+                (f"ok compile={res['compile_s']}s "
+                 f"dominant={res['roofline']['dominant']} "
+                 f"bound={res['roofline']['bound_s']:.4f}s")
+            print(f"[dryrun] {tag}: {status}", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} dry-run cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module constant — importing this module never touches jax
+device state (the dry-run sets XLA_FLAGS before first jax init; everything
+else sees the real single-device CPU).
+
+Topology model (TPU v5e): one pod = 16×16 = 256 chips; ``multi_pod`` adds a
+leading ``pod`` axis across 2 pods (512 chips) connected by DCI. Axis use:
+
+  pod    — outer data parallelism (gradient reduction crosses pods once)
+  data   — data parallelism + FSDP parameter sharding (intra-pod ICI)
+  model  — tensor/expert parallelism (highest-bandwidth dimension)
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+__all__ = ["make_production_mesh", "make_mesh", "SINGLE_POD", "MULTI_POD"]
+
+SINGLE_POD = (16, 16)
+MULTI_POD = (2, 16, 16)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...],
+              axes: Optional[Tuple[str, ...]] = None):
+    """Arbitrary (test-sized) mesh: shape (d, m) or (p, d, m)."""
+    if axes is None:
+        axes = ("pod", "data", "model")[-len(shape):] if len(shape) == 3 \
+            else ("data", "model")[-len(shape):]
+    return jax.make_mesh(shape, axes)

@@ -1,0 +1,356 @@
+"""Jitted step builders: train / prefill / decode, with sharding inference.
+
+``infer_param_axes`` maps every parameter leaf to logical axis names by
+path + rank (the tables below); ``build_shardings`` turns logical names
+into ``NamedSharding``s under the active rules, **dropping any axis that
+does not divide the dimension** (GQA kv=8 on a model=16 axis replicates
+rather than erroring) and optionally upgrading unsharded major dims to
+FSDP over the ``data`` axis (ZeRO-3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models.api import Model
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                         compressed_gradients, cosine_schedule,
+                         init_error_feedback)
+from repro.parallel import ShardingRules, logical_to_spec
+
+__all__ = [
+    "infer_param_axes", "build_shardings", "batch_specs", "cache_specs",
+    "TrainState", "init_train_state", "build_train_step",
+    "build_prefill_step", "build_decode_step", "rules_for",
+]
+
+
+# ---------------------------------------------------------------------------
+# Logical axes by parameter path
+# ---------------------------------------------------------------------------
+
+_NAME_TABLE = {
+    # attention
+    "wq": ("embed", "heads"), "wk": ("embed", "kv_heads"),
+    "wv": ("embed", "kv_heads"), "wo": ("heads", "embed"),
+    "bq": ("heads",), "bk": ("kv_heads",), "bv": ("kv_heads",),
+    # dense mlp
+    "w_gate": ("embed", "ff"), "w_up": ("embed", "ff"),
+    "w_down": ("ff", "embed"),
+    "w_in": ("embed", "ff"), "b_in": ("ff",),
+    "w_out": ("ff", "embed"), "b_out": ("embed",),
+    # embedding
+    "table": ("vocab", "embed"), "unembed": ("vocab", "embed"),
+    "pos_embed": (None, "embed"), "mask_embed": ("embed",),
+    # moe
+    "router": ("embed", "experts"),
+    # mamba2
+    "in_proj": ("embed", "ssm_inner"), "out_proj": ("ssm_inner", "embed"),
+    "conv_w": (None, "ssm_inner"), "conv_b": ("ssm_inner",),
+    "a_log": ("ssm_heads",), "dt_bias": ("ssm_heads",),
+    "d_skip": ("ssm_heads",),
+    # norms / misc
+    "scale": ("norm",), "bias": ("norm",), "w": ("embed", "embed_out"),
+    "b": ("embed_out",),
+}
+
+_MOE_TABLE = {
+    "w_gate": ("experts", "embed", "ff"), "w_up": ("experts", "embed", "ff"),
+    "w_down": ("experts", "ff", "embed"),
+}
+
+_STACKED_KEYS = ("layers", "app_norms")
+
+
+def infer_param_axes(params) -> Any:
+    """Pytree of logical-axis tuples matching ``params``' structure."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        name = keys[-1]
+        table = _MOE_TABLE if ("moe" in keys and name in _MOE_TABLE) \
+            else _NAME_TABLE
+        axes = table.get(name)
+        if axes is None:
+            axes = (None,) * leaf.ndim
+        stacked = any(k in _STACKED_KEYS for k in keys)
+        if stacked:
+            axes = (None,) + tuple(axes)
+        axes = tuple(axes)[: leaf.ndim]
+        axes = axes + (None,) * (leaf.ndim - len(axes))
+        out.append(axes)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _dedupe_spec(spec: P) -> P:
+    """A mesh axis may shard at most one dim: first occurrence wins (e.g.
+    MoE expert weights map both 'experts' and 'ff' to 'model' — EP takes
+    priority, the ff dim replicates)."""
+    seen = set()
+    out = []
+    for entry in spec:
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        if any(a in seen for a in axes):
+            out.append(None)
+            continue
+        seen.update(axes)
+        out.append(entry)
+    return P(*out)
+
+
+def _divisible_spec(shape, spec: P, mesh: Mesh) -> P:
+    """Drop axes that don't evenly divide their dim (replicate instead)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        total = 1
+        for a in axes:
+            total *= sizes[a]
+        out.append(entry if dim % total == 0 else None)
+    return P(*out)
+
+
+def build_shardings(tree, axes_tree, mesh: Mesh, rules: ShardingRules,
+                    *, fsdp: bool = False) -> Any:
+    """Logical axes + rules → NamedSharding pytree (divisibility-safe).
+
+    FSDP shards over ALL data-parallel mesh axes (the rules' ``fsdp``
+    entry, default ``(pod, data)`` — absent axes dropped), so optimizer
+    state halves again on the multi-pod mesh.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    fsdp_entry = rules.lookup("fsdp")
+    if fsdp_entry is None:
+        fsdp_axes: tuple = ()
+    elif isinstance(fsdp_entry, str):
+        fsdp_axes = (fsdp_entry,)
+    else:
+        fsdp_axes = tuple(fsdp_entry)
+    fsdp_axes = tuple(a for a in fsdp_axes if a in sizes)
+    fsdp_size = 1
+    for a in fsdp_axes:
+        fsdp_size *= sizes[a]
+    fsdp_spec_entry = (fsdp_axes[0] if len(fsdp_axes) == 1 else fsdp_axes) \
+        if fsdp_axes else None
+
+    def one(leaf, axes):
+        spec = _dedupe_spec(logical_to_spec(axes, rules, mesh))
+        spec = _divisible_spec(leaf.shape, spec, mesh)
+        if fsdp and leaf.ndim >= 2 and fsdp_axes:
+            entries = list(tuple(spec) + (None,) * (leaf.ndim - len(spec)))
+            flat_axes = [a for e in entries if e is not None
+                         for a in (e if isinstance(e, tuple) else (e,))]
+            if any(a in flat_axes for a in fsdp_axes):
+                return NamedSharding(mesh, P(*entries))
+            # never FSDP the scan (stacked-layer) axis: dim 0 of stacked
+            # leaves (axes was prepended with None and rank is >= 3)
+            start = 1 if (len(axes) and axes[0] is None and leaf.ndim >= 3) else 0
+            for i in range(start, leaf.ndim):
+                if entries[i] is None and leaf.shape[i] % fsdp_size == 0 \
+                        and leaf.shape[i] >= fsdp_size:
+                    entries[i] = fsdp_spec_entry
+                    break
+            spec = P(*entries)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(one, tree, axes_tree)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache shardings
+# ---------------------------------------------------------------------------
+
+_BATCH_TABLE = {
+    "tokens": ("batch", "seq"), "labels": ("batch", "seq"),
+    "loss_mask": ("batch", "seq"),
+    "frames": ("batch", "seq", "embed"), "mask": ("batch", "seq"),
+    "targets": ("batch", "seq"), "patches": ("batch", "seq", "embed"),
+}
+
+_CACHE_TABLE = {
+    # 'kv_heads_cache' is distinct from the weights' 'kv_heads' so the
+    # kv_dim_shard variant can re-layout the cache without un-sharding the
+    # (flattened, divisible) K/V projection weights
+    "k": (None, "batch", "kv_seq", "kv_heads_cache", "head_dim"),
+    "v": (None, "batch", "kv_seq", "kv_heads_cache", "head_dim"),
+    # scales have no head_dim — shard their seq dim instead (scale_seq),
+    # orthogonal to the cache's head_dim sharding (kv_dim_shard variant)
+    "k_scale": (None, "batch", "scale_seq", "kv_heads"),
+    "v_scale": (None, "batch", "scale_seq", "kv_heads"),
+    "h": (None, "batch", "ssm_heads", None, "state"),
+    "conv": (None, "batch", None, "ssm_inner"),
+    "pos": (),
+}
+
+
+def batch_specs(specs_tree, mesh: Mesh, rules: ShardingRules):
+    """ShapeDtypeStruct batch pytree → NamedSharding pytree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(specs_tree)
+    out = []
+    for path, leaf in flat:
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        name = keys[-1]
+        if "cache" in keys and name in _CACHE_TABLE:
+            axes = _CACHE_TABLE[name]
+        elif name in _CACHE_TABLE and name in ("k", "v", "h", "conv", "pos"):
+            axes = _CACHE_TABLE[name]
+        else:
+            axes = _BATCH_TABLE.get(name, (None,) * leaf.ndim)
+        axes = tuple(axes)[: leaf.ndim]
+        axes = axes + (None,) * (leaf.ndim - len(axes))
+        spec = _dedupe_spec(logical_to_spec(axes, rules, mesh))
+        spec = _divisible_spec(leaf.shape, spec, mesh)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+cache_specs = batch_specs  # same table handles cache entries
+
+
+def rules_for(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+              base: ShardingRules) -> ShardingRules:
+    """Per-(arch, shape) rule adjustments.
+
+    long-context decode with batch 1 cannot shard the batch axis — shard
+    the KV cache / sequence dimension over ``data`` instead (SP / split-K
+    decode).
+    """
+    rules = base
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    batch_ways = 1
+    for a in ("pod", "data"):
+        batch_ways *= axis_sizes.get(a, 1)
+    if shape.phase == "decode" and shape.global_batch < batch_ways:
+        rules = rules.with_overrides(batch=None, kv_seq="data", seq=None)
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# Train state / steps
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHyper:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    adamw: AdamWConfig = AdamWConfig()
+    compress_grads: bool = False
+    # gradient accumulation: the global batch is split into this many
+    # microbatches processed sequentially (lax.scan) — divides the live
+    # activation footprint by the same factor at identical math
+    # (loss/grads averaged); collective volume per step is unchanged
+    # except the gradient reduction, which still happens once.
+    microbatches: int = 1
+
+
+def init_train_state(model: Model, rng, *, hyper: TrainHyper) -> dict:
+    params = model.init(rng)
+    state = {
+        "params": params,
+        "opt": adamw_init(params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if hyper.compress_grads:
+        state["err"] = init_error_feedback(params)
+    return state
+
+
+def state_axes(state: dict) -> dict:
+    """Logical axes for the full train state (opt moments mirror params)."""
+    p_axes = infer_param_axes(state["params"])
+    out = {
+        "params": p_axes,
+        "opt": {"m": p_axes, "v": p_axes, "count": ()},
+        "step": (),
+    }
+    if "err" in state:
+        out["err"] = p_axes
+    return out
+
+
+def _accumulate_grads(model: Model, params, batch: dict, n_micro: int):
+    """lax.scan over microbatches; returns mean grads + last metrics."""
+    def split(a):
+        b = a.shape[0]
+        assert b % n_micro == 0, (b, n_micro)
+        return a.reshape((n_micro, b // n_micro) + a.shape[1:])
+
+    micro = jax.tree.map(split, batch)
+
+    def body(carry, mbatch):
+        gsum = carry
+
+        def loss_fn(p):
+            return model.loss(p, mbatch)
+
+        (_, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        gsum = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                            gsum, grads)
+        return gsum, metrics
+
+    gzero = jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32), params)
+    gsum, metrics_stacked = jax.lax.scan(body, gzero, micro)
+    grads = jax.tree.map(lambda a: a / n_micro, gsum)
+    metrics = jax.tree.map(lambda a: a[-1], metrics_stacked)
+    return grads, metrics
+
+
+def build_train_step(model: Model, *, hyper: TrainHyper) -> Callable:
+    def train_step(state: dict, batch: dict) -> Tuple[dict, dict]:
+        if hyper.microbatches > 1:
+            grads, metrics = _accumulate_grads(
+                model, state["params"], batch, hyper.microbatches)
+        else:
+            def loss_fn(p):
+                return model.loss(p, batch)
+
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state["params"])
+        new_err = None
+        if hyper.compress_grads:
+            grads, new_err = compressed_gradients(grads, state["err"])
+        lr = cosine_schedule(state["step"], peak_lr=hyper.peak_lr,
+                             warmup_steps=hyper.warmup_steps,
+                             total_steps=hyper.total_steps)
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, state["opt"], state["params"], lr=lr, config=hyper.adamw)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        if new_err is not None:
+            new_state["err"] = new_err
+        return new_state, {**metrics, **opt_metrics}
+
+    return train_step
+
+
+def build_prefill_step(model: Model, *, max_len: int) -> Callable:
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, max_len=max_len)
+
+    return prefill_step
+
+
+def build_decode_step(model: Model) -> Callable:
+    def decode_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+
+    return decode_step

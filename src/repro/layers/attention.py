@@ -1,0 +1,283 @@
+"""GQA attention: chunked (flash-style) softmax, full-softmax, and decode.
+
+The chunked path is the paper's §3.1 *done right on TPU*: the softmax·V
+contraction over the KV axis is a multi-operand reduction with up to 524 288
+operands (long_500k). Instead of materializing the (Sq × Skv) score matrix
+(the "adder tree" — maximal working set), KV blocks stream through a
+``lax.scan`` carrying a running (max, denominator, accumulator) triple in
+f32 — a serialized MOA whose "serializer" is the hard-wired HBM→VMEM
+pipeline. ``kv_chunk`` is the cluster size ``n_c``.
+
+Layouts: q ``(B, Sq, H, D)``, k/v ``(B, Skv, Hk, D)``; GQA groups
+``G = H // Hk`` are kept as a separate axis so the ``model``-axis sharding
+of Hk stays even.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.layers.common import Params, dense_init
+from repro.layers.rope import apply_rope
+
+__all__ = [
+    "init_attention", "attention_forward", "attention_decode",
+    "flash_attention", "full_attention", "init_kv_cache",
+]
+
+_NEG_INF = -1e30  # finite sentinel: keeps exp() well-defined on all-masked rows
+
+
+def init_attention(rng, *, d_model: int, n_heads: int, n_kv_heads: int,
+                   head_dim: int, qkv_bias: bool = False,
+                   dtype=jnp.float32) -> Params:
+    kq, kk, kv, ko = jax.random.split(rng, 4)
+    p = {
+        "wq": dense_init(kq, (d_model, n_heads * head_dim), dtype, fan_in=d_model),
+        "wk": dense_init(kk, (d_model, n_kv_heads * head_dim), dtype, fan_in=d_model),
+        "wv": dense_init(kv, (d_model, n_kv_heads * head_dim), dtype, fan_in=d_model),
+        "wo": dense_init(ko, (n_heads * head_dim, d_model), dtype,
+                         fan_in=n_heads * head_dim),
+    }
+    if qkv_bias:  # qwen1.5 style
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv_heads * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv_heads * head_dim,), dtype)
+    return p
+
+
+def full_attention(q, k, v, *, causal: bool, positions_q=None, positions_kv=None,
+                   kv_len=None):
+    """One-shot attention (the spatial "adder tree"): materializes scores.
+
+    Kept as the ``tree`` MOA strategy baseline and for tiny smoke shapes;
+    the memory roofline term it produces is the §Perf before/after foil.
+    """
+    B, Sq, H, D = q.shape
+    _, Skv, Hk, _ = k.shape
+    G = H // Hk
+    qg = q.reshape(B, Sq, Hk, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (D ** -0.5)
+    if positions_q is None:
+        positions_q = jnp.arange(Sq)
+    if positions_kv is None:
+        positions_kv = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= positions_kv[None, :] <= positions_q[:, None]
+    if kv_len is not None:
+        mask &= positions_kv[None, :] < kv_len
+    s = jnp.where(mask[None, None, None], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, q_chunk: int = 256,
+                    kv_chunk: int = 512, kv_len=None):
+    """Chunked-softmax attention (serialized MOA over the KV axis).
+
+    Works for any (Sq, Skv); sequences are padded up to chunk multiples and
+    padded KV positions are masked. f32 running statistics.
+    """
+    B, Sq, H, D = q.shape
+    _, Skv, Hk, _ = k.shape
+    G = H // Hk
+    scale = D ** -0.5
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    pad_q = -Sq % q_chunk
+    pad_k = -Skv % kv_chunk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    Sq_p, Skv_p = q.shape[1], k.shape[1]
+    nq, nk = Sq_p // q_chunk, Skv_p // kv_chunk
+    kv_valid = jnp.asarray(Skv if kv_len is None else kv_len, jnp.int32)
+
+    qg = (q.astype(jnp.float32) * scale).reshape(B, nq, q_chunk, Hk, G, D)
+    qg = jnp.moveaxis(qg, 1, 0)                      # (nq, B, qc, Hk, G, D)
+    kb = jnp.moveaxis(k.reshape(B, nk, kv_chunk, Hk, D), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nk, kv_chunk, Hk, D), 1, 0)
+
+    def outer(_, xs):
+        qi, q_blk = xs
+        q_pos = qi * q_chunk + jnp.arange(q_chunk)
+
+        def inner(carry, inner_xs):
+            m, l, acc = carry
+            kj, k_blk, v_blk = inner_xs
+            kv_pos = kj * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk,
+                           k_blk.astype(jnp.float32))
+            mask = kv_pos[None, :] < kv_valid
+            if causal:
+                mask &= kv_pos[None, :] <= q_pos[:, None]
+            s = jnp.where(mask[None, None, None], s, _NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, v_blk.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hk, G, q_chunk), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hk, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, Hk, G, q_chunk, D), jnp.float32)
+        (m, l, acc), _ = lax.scan(inner, (m0, l0, a0),
+                                  (jnp.arange(nk), kb, vb))
+        o_blk = acc / jnp.maximum(l, 1e-30)[..., None]   # (B,Hk,G,qc,D)
+        return None, jnp.moveaxis(o_blk, 3, 1)           # (B,qc,Hk,G,D)
+
+    _, o_blocks = lax.scan(outer, None, (jnp.arange(nq), qg))
+    o = jnp.moveaxis(o_blocks, 0, 1).reshape(B, Sq_p, H, D)
+    return o[:, :Sq].astype(q.dtype)
+
+
+def _project_qkv(params: Params, x, *, n_heads, n_kv_heads, head_dim,
+                 compute_dtype):
+    B, S, _ = x.shape
+    x = x.astype(compute_dtype)
+    q = x @ params["wq"].astype(compute_dtype)
+    k = x @ params["wk"].astype(compute_dtype)
+    v = x @ params["wv"].astype(compute_dtype)
+    if "bq" in params:
+        q = q + params["bq"].astype(compute_dtype)
+        k = k + params["bk"].astype(compute_dtype)
+        v = v + params["bv"].astype(compute_dtype)
+    q = q.reshape(B, S, n_heads, head_dim)
+    k = k.reshape(B, S, n_kv_heads, head_dim)
+    v = v.reshape(B, S, n_kv_heads, head_dim)
+    return q, k, v
+
+
+def attention_forward(params: Params, x, *, positions, n_heads: int,
+                      n_kv_heads: int, head_dim: int, causal: bool = True,
+                      rope_theta: float = 10000.0, use_rope: bool = True,
+                      q_chunk: int = 256, kv_chunk: int = 512,
+                      impl: str = "flash", compute_dtype=jnp.bfloat16,
+                      context_parallel: bool = False):
+    """Self-attention over ``x: (B, S, d_model)``.
+
+    ``context_parallel``: constrain Q to a model-axis-sharded *sequence*
+    layout (Ulysses-style). Heads stay unsharded; GSPMD inserts the layout
+    all-to-all (each device moves only its activation shard) in place of
+    the Megatron attn-out all-reduce (which moves the full activation
+    twice) — the §Perf collective lever for attention-heavy cells.
+    """
+    from repro.parallel import constrain
+
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(params, x, n_heads=n_heads, n_kv_heads=n_kv_heads,
+                           head_dim=head_dim, compute_dtype=compute_dtype)
+    if use_rope:
+        q = apply_rope(q, positions, theta=rope_theta)
+        k = apply_rope(k, positions, theta=rope_theta)
+    if context_parallel:
+        q = constrain(q, "batch", "seq_cp", None, None)
+        k = constrain(k, "batch", "seq_cp", None, None)
+        v = constrain(v, "batch", "seq_cp", None, None)
+    if impl == "flash":
+        o = flash_attention(q, k, v, causal=causal, q_chunk=q_chunk,
+                            kv_chunk=kv_chunk)
+    else:
+        o = full_attention(q, k, v, causal=causal)
+    o = o.reshape(B, S, n_heads * head_dim)
+    return o @ params["wo"].astype(compute_dtype)
+
+
+def init_kv_cache(batch: int, max_len: int, n_kv_heads: int, head_dim: int,
+                  dtype=jnp.bfloat16) -> Params:
+    """KV cache; ``dtype=int8`` stores quantized K/V with per-(pos, head)
+    f32 scales — halves the decode-time HBM stream (the memory-roofline
+    lever for decode shapes; see EXPERIMENTS.md §Perf cell C)."""
+    cache = {
+        "k": jnp.zeros((batch, max_len, n_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, n_kv_heads, head_dim), dtype),
+    }
+    if dtype == jnp.int8:
+        cache["k_scale"] = jnp.zeros((batch, max_len, n_kv_heads),
+                                     jnp.float32)
+        cache["v_scale"] = jnp.zeros((batch, max_len, n_kv_heads),
+                                     jnp.float32)
+    return cache
+
+
+def quantize_kv(x):
+    """Per-(batch, pos, head) symmetric int8 quantization of K or V."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q, scale, dtype=jnp.bfloat16):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def attention_decode(params: Params, x, cache: Params, pos, *, n_heads: int,
+                     n_kv_heads: int, head_dim: int,
+                     rope_theta: float = 10000.0, use_rope: bool = True,
+                     compute_dtype=jnp.bfloat16) -> Tuple[jax.Array, Params]:
+    """One decode step: ``x (B, 1, d)`` against a KV cache at position ``pos``.
+
+    The softmax over the cache is the *decode-time MOA* — a single-operand
+    append followed by a 32k–524k-operand reduction. Under SP the cache's
+    sequence axis is sharded and XLA's partial reductions realize the
+    split-K (parallel-MOA) combine.
+    """
+    B = x.shape[0]
+    q, k_new, v_new = _project_qkv(
+        params, x, n_heads=n_heads, n_kv_heads=n_kv_heads, head_dim=head_dim,
+        compute_dtype=compute_dtype)
+    pos_arr = jnp.full((B, 1), pos) if jnp.ndim(pos) == 0 else pos[:, None]
+    if use_rope:
+        q = apply_rope(q, pos_arr, theta=rope_theta)
+        k_new = apply_rope(k_new, pos_arr, theta=rope_theta)
+
+    quantized = "k_scale" in cache
+
+    def write(buf, new):
+        if jnp.ndim(pos) == 0:
+            return lax.dynamic_update_slice_in_dim(
+                buf, new.astype(buf.dtype), pos, axis=1)
+        return _scatter_per_batch(buf, new, pos)
+
+    new_cache = dict(cache)
+    if quantized:
+        kq, ks = quantize_kv(k_new)
+        vq, vs = quantize_kv(v_new)
+        new_cache["k"] = write(cache["k"], kq)
+        new_cache["v"] = write(cache["v"], vq)
+        new_cache["k_scale"] = write(cache["k_scale"], ks)
+        new_cache["v_scale"] = write(cache["v_scale"], vs)
+        k_cache = dequantize_kv(new_cache["k"], new_cache["k_scale"],
+                                compute_dtype)
+        v_cache = dequantize_kv(new_cache["v"], new_cache["v_scale"],
+                                compute_dtype)
+    else:
+        new_cache["k"] = k_cache = write(cache["k"], k_new)
+        new_cache["v"] = v_cache = write(cache["v"], v_new)
+
+    kv_len = pos + 1
+    o = full_attention(q, k_cache, v_cache, causal=False, kv_len=kv_len)
+    o = o.reshape(B, 1, n_heads * head_dim)
+    y = o @ params["wo"].astype(compute_dtype)
+    return y, new_cache
+
+
+def _scatter_per_batch(cache, new, pos):
+    """Per-sequence cache write when positions differ across the batch."""
+    B = cache.shape[0]
+    idx = pos.astype(jnp.int32)
+    return cache.at[jnp.arange(B), idx].set(new[:, 0].astype(cache.dtype))

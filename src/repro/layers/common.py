@@ -1,0 +1,77 @@
+"""Shared layer primitives: norms, initializers, dtype policy.
+
+Parameters are plain pytrees (nested dicts of jnp arrays) — no framework
+dependency. Every layer exposes ``init(rng, ...) -> params`` and a pure
+``apply``-style function.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+__all__ = ["Params", "DTypePolicy", "rms_norm", "layer_norm", "init_rms_norm",
+           "init_layer_norm", "dense_init", "truncated_normal_init", "split_keys"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DTypePolicy:
+    """Precision policy: f32 master params, bf16 compute (MXU-native)."""
+
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    # Accumulation is always f32 — the MXU hard-wires it; see DESIGN.md §2.
+    accum_dtype: Any = jnp.float32
+
+    def cast(self, x):
+        return jax.tree.map(
+            lambda a: a.astype(self.compute_dtype)
+            if jnp.issubdtype(a.dtype, jnp.floating) else a,
+            x,
+        )
+
+
+def split_keys(rng, n):
+    return list(jax.random.split(rng, n))
+
+
+def truncated_normal_init(rng, shape, stddev, dtype=jnp.float32):
+    return stddev * jax.random.truncated_normal(rng, -2.0, 2.0, shape, jnp.float32) \
+        .astype(dtype)
+
+
+def dense_init(rng, shape, dtype=jnp.float32, *, fan_in=None):
+    """Scaled initializer: stddev = 1/sqrt(fan_in)."""
+    fan_in = fan_in or shape[0]
+    return truncated_normal_init(rng, shape, stddev=fan_in ** -0.5, dtype=dtype)
+
+
+def init_rms_norm(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(params: Params, x, *, eps: float = 1e-6):
+    """RMSNorm in f32 (mixed_precision_sensitive: the 1/sqrt(mean(x²))
+    reduction is itself a multi-operand adder — always exact f32)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layer_norm(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layer_norm(params: Params, x, *, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mean), axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)

@@ -1,0 +1,24 @@
+"""Backend-aware numerics helpers.
+
+``einsum_f32``: contraction with f32 accumulation. On TPU this is the
+MXU-native ``preferred_element_type=f32`` on bf16 operands; the CPU
+runtime's DotThunk does not implement batched BF16×BF16→F32, so on CPU the
+operands are explicitly up-cast (same math, slower — correctness path
+only).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["einsum_f32"]
+
+
+def einsum_f32(spec: str, a, b, *, out_dtype=None):
+    out_dtype = out_dtype or a.dtype
+    if jax.default_backend() == "tpu":
+        y = jnp.einsum(spec, a, b, preferred_element_type=jnp.float32)
+    else:
+        y = jnp.einsum(spec, a.astype(jnp.float32), b.astype(jnp.float32))
+    return y.astype(out_dtype)

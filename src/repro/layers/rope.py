@@ -1,0 +1,29 @@
+"""Rotary position embeddings (RoPE)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["rope_frequencies", "apply_rope"]
+
+
+def rope_frequencies(head_dim: int, *, theta: float = 10000.0):
+    """Inverse frequencies for even ``head_dim``: shape ``(head_dim // 2,)``."""
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)
+
+
+def apply_rope(x, positions, *, theta: float = 10000.0):
+    """Rotate ``x: (..., seq, heads, head_dim)`` by ``positions: (..., seq)``.
+
+    Computed in f32 (sin/cos precision matters at 500k-token positions),
+    result cast back to the input dtype.
+    """
+    head_dim = x.shape[-1]
+    inv_freq = rope_frequencies(head_dim, theta=theta)
+    angles = positions[..., :, None].astype(jnp.float32) * inv_freq  # (..., S, D/2)
+    sin = jnp.sin(angles)[..., :, None, :]  # broadcast over heads
+    cos = jnp.cos(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    rotated = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return rotated.astype(x.dtype)

@@ -1,0 +1,165 @@
+"""Uniform model API: one entry point for train / serve / dry-run / tests.
+
+``build_model(cfg)`` dispatches on ``cfg.family`` and returns a
+:class:`Model` exposing:
+
+  init(rng) → params
+  loss(params, batch) → (loss, metrics)          [train phase]
+  forward(params, batch) → logits                 [prefill-shaped forward]
+  init_cache(batch, max_len) → cache
+  prefill(params, batch, max_len) → (logits, cache)
+  decode_step(params, cache, tokens) → (logits, cache)
+  input_specs(shape) → pytree of ShapeDtypeStruct  [dry-run stand-ins]
+  make_batch(rng, shape, scale=1.0) → concrete batch [smoke/integration]
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import losses, mamba2, moe_transformer, transformer, zamba2
+
+__all__ = ["Model", "build_model"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    _mod: Any
+
+    # ---- parameters -------------------------------------------------------
+    def init(self, rng):
+        return self._mod.init_params(rng, self.cfg)
+
+    def abstract_params(self):
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    # ---- training ---------------------------------------------------------
+    def forward(self, params, batch):
+        out = self._mod.forward(params, batch, self.cfg)
+        return out[0] if isinstance(out, tuple) else out
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        out = self._mod.forward(params, batch, cfg)
+        aux = None
+        logits = out
+        if isinstance(out, tuple):
+            logits, aux = out
+        if cfg.family == "encoder":
+            loss, metrics = losses.masked_lm_loss(
+                logits, batch["targets"], batch["mask"], impl=cfg.loss_impl)
+        else:
+            labels = batch["labels"]
+            loss, metrics = losses.softmax_cross_entropy(
+                logits, labels, mask=batch.get("loss_mask"),
+                impl=cfg.loss_impl)
+        if aux is not None:
+            loss = loss + 0.01 * aux
+            metrics = dict(metrics, aux_loss=aux)
+        metrics = dict(metrics, loss=loss)
+        return loss, metrics
+
+    # ---- serving ----------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int):
+        return self._mod.init_cache(self.cfg, batch, max_len)
+
+    def prefill(self, params, batch, *, max_len: int):
+        if self.cfg.family == "encoder":
+            # encoder "prefill" is a bidirectional encode: no KV cache, no
+            # decode step exists (assignment skip rule covers decode shapes)
+            logits = self._mod.forward(params, batch, self.cfg)
+            import jax.numpy as jnp
+
+            return logits, {"pos": jnp.asarray(logits.shape[1], jnp.int32)}
+        return self._mod.prefill(params, batch, self.cfg, max_len=max_len)
+
+    def decode_step(self, params, cache, tokens):
+        return self._mod.decode_step(params, cache, tokens, self.cfg)
+
+    # ---- shapes ------------------------------------------------------------
+    def _token_split(self, seq_len: int):
+        """VLM: split total sequence into (patch prefix, text)."""
+        cfg = self.cfg
+        if cfg.family == "vlm":
+            n_patches = min(cfg.n_patches, seq_len // 2)
+            return n_patches, seq_len - n_patches
+        return 0, seq_len
+
+    def input_specs(self, shape: ShapeSpec) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for the given phase (no allocation).
+
+        For decode shapes: the *cache* spec has sequence capacity
+        ``shape.seq_len`` and the step input is one token per sequence —
+        "one new token with a KV cache of seq_len" per the assignment.
+        """
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        f32, i32 = jnp.bfloat16, jnp.int32
+        sds = jax.ShapeDtypeStruct
+        if shape.phase == "decode":
+            cache = jax.eval_shape(lambda: self.init_cache(B, S))
+            return {"tokens": sds((B, 1), i32), "cache": cache}
+        if cfg.family == "encoder":
+            specs = {"frames": sds((B, S, cfg.d_model), f32),
+                     "mask": sds((B, S), jnp.bool_)}
+            if shape.phase == "train":
+                specs["targets"] = sds((B, S), i32)
+            return specs
+        n_patches, s_text = self._token_split(S)
+        specs: Dict[str, Any] = {"tokens": sds((B, s_text), i32)}
+        if n_patches:
+            specs["patches"] = sds((B, n_patches, cfg.d_model), f32)
+        if shape.phase == "train":
+            specs["labels"] = sds((B, s_text), i32)
+        return specs
+
+    def make_batch(self, rng, shape: ShapeSpec, *,
+                   batch_override: Optional[int] = None,
+                   seq_override: Optional[int] = None) -> Dict[str, Any]:
+        """Concrete random batch (smoke tests, examples)."""
+        cfg = self.cfg
+        B = batch_override or shape.global_batch
+        S = seq_override or shape.seq_len
+        ks = jax.random.split(rng, 4)
+        if cfg.family == "encoder":
+            out = {
+                "frames": 0.02 * jax.random.normal(
+                    ks[0], (B, S, cfg.d_model), jnp.float32),
+                "mask": jax.random.bernoulli(ks[1], 0.35, (B, S)),
+            }
+            if shape.phase == "train":
+                out["targets"] = jax.random.randint(
+                    ks[2], (B, S), 0, cfg.vocab, jnp.int32)
+            return out
+        n_patches, s_text = self._token_split(S)
+        out = {"tokens": jax.random.randint(ks[0], (B, s_text), 0,
+                                            cfg.vocab, jnp.int32)}
+        if n_patches:
+            out["patches"] = 0.02 * jax.random.normal(
+                ks[1], (B, n_patches, cfg.d_model), jnp.float32)
+        if shape.phase == "train":
+            out["labels"] = jax.random.randint(ks[2], (B, s_text), 0,
+                                               cfg.vocab, jnp.int32)
+        return out
+
+
+_FAMILY_MODULES = {
+    "dense": transformer,
+    "encoder": transformer,
+    "vlm": transformer,
+    "moe": moe_transformer,
+    "ssm": mamba2,
+    "hybrid": zamba2,
+}
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family not in _FAMILY_MODULES:
+        raise ValueError(f"unknown family {cfg.family!r}")
+    return Model(cfg=cfg, _mod=_FAMILY_MODULES[cfg.family])

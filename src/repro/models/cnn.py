@@ -1,0 +1,133 @@
+"""LeNet-5 and AlexNet in JAX — the paper's own experimental subjects.
+
+These exist for the DHM experiments (Table 1, Figs. 4/5 end-to-end): their
+conv layers are the MOAs under study. Forward supports two accumulation
+paths: the standard ``lax.conv`` (XLA's fused reduction) and an explicit
+im2col + :func:`repro.core.moa.moa_dot` path that makes the MOA strategy —
+including the quantized int8 + LOA variant — observable end-to-end.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.moa import ReductionStrategy, moa_dot
+from repro.layers.common import Params, dense_init
+
+__all__ = ["init_lenet5", "init_alexnet", "lenet5_forward", "alexnet_forward",
+           "im2col_conv", "LENET5_LAYOUT", "ALEXNET_LAYOUT"]
+
+# (name, out_ch, in_ch(per group), kh, kw, stride, groups, padding, pool)
+LENET5_LAYOUT = [
+    ("conv1", 6, 1, 5, 5, 1, 1, "VALID", True),
+    ("conv2", 16, 6, 5, 5, 1, 1, "VALID", True),
+]
+ALEXNET_LAYOUT = [
+    ("conv1", 96, 3, 11, 11, 4, 1, "VALID", True),
+    ("conv2", 256, 48, 5, 5, 1, 2, "SAME", True),
+    ("conv3", 384, 256, 3, 3, 1, 1, "SAME", False),
+    ("conv4", 384, 192, 3, 3, 1, 2, "SAME", False),
+    ("conv5", 256, 192, 3, 3, 1, 2, "SAME", True),
+]
+
+
+def _init_convnet(rng, layout, fc_dims, n_classes, dtype):
+    params = {}
+    keys = jax.random.split(rng, len(layout) + len(fc_dims) + 1)
+    for (name, oc, ic, kh, kw, *_), k in zip(layout, keys):
+        params[name] = {
+            "w": dense_init(k, (oc, ic, kh, kw), dtype, fan_in=ic * kh * kw),
+            "b": jnp.zeros((oc,), dtype),
+        }
+    prev = fc_dims[0]
+    for i, d in enumerate(fc_dims[1:], 1):
+        params[f"fc{i}"] = {
+            "w": dense_init(keys[len(layout) + i - 1], (prev, d), dtype,
+                            fan_in=prev),
+            "b": jnp.zeros((d,), dtype),
+        }
+        prev = d
+    params["head"] = {
+        "w": dense_init(keys[-1], (prev, n_classes), dtype, fan_in=prev),
+        "b": jnp.zeros((n_classes,), dtype),
+    }
+    return params
+
+
+def init_lenet5(rng, dtype=jnp.float32) -> Params:
+    # 32×32×1 → conv5×5 VALID → 28, pool → 14, conv5×5 VALID → 10, pool → 5:
+    # flatten 16·5·5 = 400 → 120 → 84 → 10
+    return _init_convnet(rng, LENET5_LAYOUT, [400, 120, 84], 10, dtype)
+
+
+def init_alexnet(rng, dtype=jnp.float32) -> Params:
+    # 227×227×3 → 55 → 27 → 13 → 13 → 13 → 6: flatten 6·6·256 = 9216.
+    # Classifier truncated to one hidden FC (the paper studies conv MOAs).
+    return _init_convnet(rng, ALEXNET_LAYOUT, [9216, 4096], 1000, dtype)
+
+
+def _conv(x, w, b, *, stride, groups, padding):
+    y = lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "OIHW", "NHWC"),
+        feature_group_count=groups)
+    return y + b
+
+
+def im2col_conv(x, w, b, *, stride: int,
+                strategy: Optional[ReductionStrategy] = None):
+    """Explicit DHM-style conv: unfold patches, then one MOA per filter.
+
+    ``x: (B, H, W, C)``, ``w: (O, C, kh, kw)``, VALID padding. The
+    ``C·kh·kw`` contraction is the paper's MOA; it routes through
+    ``moa_dot`` so tree/serial/LOA scheduling applies end-to-end.
+    """
+    B, H, W, C = x.shape
+    O, Ci, kh, kw = w.shape
+    assert Ci == C, (Ci, C)
+    patches = lax.conv_general_dilated_patches(
+        x, (kh, kw), (stride, stride), padding="VALID",
+        dimension_numbers=("NHWC", "OIHW", "NHWC"))  # (B, Ho, Wo, C*kh*kw)
+    Ho, Wo = patches.shape[1], patches.shape[2]
+    cols = patches.reshape(B * Ho * Wo, C * kh * kw)
+    wmat = w.reshape(O, C * kh * kw).T               # (CKK, O)
+    strategy = strategy or ReductionStrategy(kind="tree")
+    if jnp.issubdtype(cols.dtype, jnp.integer):
+        y = moa_dot(cols, wmat, strategy=strategy, out_dtype=jnp.int32)
+        return y.reshape(B, Ho, Wo, O) + b.astype(jnp.int32)
+    y = moa_dot(cols, wmat, strategy=strategy, out_dtype=jnp.float32)
+    return y.reshape(B, Ho, Wo, O) + b
+
+
+def _stack_forward(params: Params, x, layout, n_fc: int) -> jax.Array:
+    h = x
+    for name, oc, ic, kh, kw, stride, groups, padding, pool in layout:
+        p = params[name]
+        h = _conv(h, p["w"], p["b"], stride=stride, groups=groups,
+                  padding=padding)
+        h = jax.nn.relu(h)
+        if pool:
+            h = lax.reduce_window(
+                h, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    h = h.reshape(h.shape[0], -1)
+    for i in range(1, n_fc + 1):
+        p = params[f"fc{i}"]
+        assert h.shape[-1] == p["w"].shape[0], \
+            f"fc{i}: got {h.shape[-1]}, expected {p['w'].shape[0]}"
+        h = jax.nn.relu(h @ p["w"] + p["b"])
+    p = params["head"]
+    return h @ p["w"] + p["b"]
+
+
+def lenet5_forward(params: Params, x) -> jax.Array:
+    """``x: (B, 32, 32, 1)`` → logits ``(B, 10)``."""
+    return _stack_forward(params, x, LENET5_LAYOUT, n_fc=2)
+
+
+def alexnet_forward(params: Params, x) -> jax.Array:
+    """``x: (B, 227, 227, 3)`` → logits ``(B, 1000)``."""
+    return _stack_forward(params, x, ALEXNET_LAYOUT, n_fc=1)

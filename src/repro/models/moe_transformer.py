@@ -1,0 +1,154 @@
+"""MoE transformer LM (llama4-maverick 128e top-1, moonshot 64e top-6).
+
+Identical skeleton to the dense transformer; the MLP is replaced by the
+EP-shardable MoE layer. The router aux loss is accumulated through the
+layer scan and surfaced in metrics. The expert dispatch scatter is the
+cross-device MOA: under ``experts → model`` sharding the token permutation
+lowers to the all-to-all that the §Roofline collective term measures.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.layers import attention as attn_lib
+from repro.layers.common import Params, init_rms_norm, rms_norm
+from repro.layers.embedding import embed, init_embedding, unembed
+from repro.layers.moe import init_moe, moe_forward
+from repro.models import transformer as dense
+from repro.parallel import constrain
+
+__all__ = ["init_params", "forward", "init_cache", "prefill", "decode_step"]
+
+
+def _init_layer(rng, cfg: ModelConfig) -> Params:
+    ka, km = jax.random.split(rng)
+    return {
+        "attn_norm": init_rms_norm(cfg.d_model, cfg.pdtype),
+        "attn": attn_lib.init_attention(
+            ka, d_model=cfg.d_model, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+            qkv_bias=cfg.qkv_bias, dtype=cfg.pdtype),
+        "mlp_norm": init_rms_norm(cfg.d_model, cfg.pdtype),
+        "moe": init_moe(km, d_model=cfg.d_model, d_ff=cfg.d_ff,
+                        n_experts=cfg.n_experts, dtype=cfg.pdtype),
+    }
+
+
+def init_params(rng, cfg: ModelConfig) -> Params:
+    ke, kl = jax.random.split(rng)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    layers = jax.vmap(lambda k: _init_layer(k, cfg))(layer_keys)
+    return {
+        "embed": init_embedding(ke, cfg.vocab, cfg.d_model,
+                                tie=cfg.tie_embeddings, dtype=cfg.pdtype),
+        "layers": layers,
+        "final_norm": init_rms_norm(cfg.d_model, cfg.pdtype),
+    }
+
+
+def _layer_fwd(layer: Params, h, *, cfg: ModelConfig, positions):
+    hn = rms_norm(layer["attn_norm"], h)
+    a = attn_lib.attention_forward(
+        layer["attn"], hn, positions=positions, n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim, causal=True,
+        rope_theta=cfg.rope_theta, q_chunk=cfg.q_chunk,
+        kv_chunk=cfg.kv_chunk, impl=cfg.attn_impl, compute_dtype=cfg.cdtype,
+        context_parallel=cfg.attn_cp)
+    h = h + constrain(a, "batch", "seq", "embed")
+    hn = rms_norm(layer["mlp_norm"], h)
+    m, aux = moe_forward(layer["moe"], hn, n_experts=cfg.n_experts,
+                         top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+                         compute_dtype=cfg.cdtype)
+    h = h + constrain(m, "batch", "seq", "embed")
+    return h, aux
+
+
+def forward(params: Params, batch: dict, cfg: ModelConfig):
+    """→ (logits, aux_loss_mean)."""
+    h = embed(params["embed"], batch["tokens"], compute_dtype=cfg.cdtype)
+    h = constrain(h, "batch", "seq", "embed")
+    positions = jnp.arange(h.shape[1])
+
+    def body(carry, layer):
+        h, aux_sum = carry
+        h, aux = _layer_fwd(layer, h, cfg=cfg, positions=positions)
+        return (h, aux_sum + aux), None
+
+    (h, aux_sum), _ = lax.scan(dense._remat(body, cfg),
+                               (h, jnp.zeros((), jnp.float32)),
+                               params["layers"])
+    h = rms_norm(params["final_norm"], h)
+    logits = unembed(params["embed"], h, compute_dtype=cfg.cdtype)
+    return constrain(logits, "batch", "seq", "vocab"), aux_sum / cfg.n_layers
+
+
+init_cache = dense.init_cache
+
+
+def prefill(params: Params, batch: dict, cfg: ModelConfig, *, max_len: int):
+    from repro.layers.rope import apply_rope
+
+    h = embed(params["embed"], batch["tokens"], compute_dtype=cfg.cdtype)
+    h = constrain(h, "batch", "seq", "embed")
+    positions = jnp.arange(h.shape[1])
+
+    def body(carry, layer):
+        hn = rms_norm(layer["attn_norm"], carry)
+        q, k, v = attn_lib._project_qkv(
+            layer["attn"], hn, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+            compute_dtype=cfg.cdtype)
+        q = apply_rope(q, positions, theta=cfg.rope_theta)
+        k = apply_rope(k, positions, theta=cfg.rope_theta)
+        o = attn_lib.flash_attention(q, k, v, causal=True,
+                                     q_chunk=cfg.q_chunk,
+                                     kv_chunk=cfg.kv_chunk)
+        B, S, _, _ = o.shape
+        o = o.reshape(B, S, cfg.n_heads * cfg.head_dim)
+        h2 = carry + o @ layer["attn"]["wo"].astype(cfg.cdtype)
+        hn = rms_norm(layer["mlp_norm"], h2)
+        m, _ = moe_forward(layer["moe"], hn, n_experts=cfg.n_experts,
+                           top_k=cfg.top_k,
+                           capacity_factor=cfg.capacity_factor,
+                           compute_dtype=cfg.cdtype)
+        h2 = h2 + m
+        pad = max_len - k.shape[1]
+        kv = {"k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+              "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))}
+        return h2, kv
+
+    h, kv_layers = lax.scan(dense._remat(body, cfg), h, params["layers"])
+    h = rms_norm(params["final_norm"], h)
+    logits = unembed(params["embed"], h[:, -1:], compute_dtype=cfg.cdtype)
+    return (constrain(logits, "batch", None, "vocab"),
+            {"layers": kv_layers, "pos": jnp.asarray(h.shape[1], jnp.int32)})
+
+
+def decode_step(params: Params, cache: Params, tokens, cfg: ModelConfig):
+    pos = cache["pos"]
+    h = embed(params["embed"], tokens, compute_dtype=cfg.cdtype)
+
+    def body(carry, xs):
+        layer, layer_cache = xs
+        hn = rms_norm(layer["attn_norm"], carry)
+        a, new_cache = attn_lib.attention_decode(
+            layer["attn"], hn, layer_cache, pos, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+            rope_theta=cfg.rope_theta, compute_dtype=cfg.cdtype)
+        h2 = carry + a
+        hn = rms_norm(layer["mlp_norm"], h2)
+        m, _ = moe_forward(layer["moe"], hn, n_experts=cfg.n_experts,
+                           top_k=cfg.top_k,
+                           capacity_factor=cfg.capacity_factor,
+                           compute_dtype=cfg.cdtype)
+        return h2 + m, new_cache
+
+    h, new_layers = lax.scan(body, h, (params["layers"], cache["layers"]))
+    h = rms_norm(params["final_norm"], h)
+    logits = unembed(params["embed"], h, compute_dtype=cfg.cdtype)
+    return (constrain(logits, "batch", None, "vocab"),
+            {"layers": new_layers, "pos": pos + 1})

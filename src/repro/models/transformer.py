@@ -1,0 +1,243 @@
+"""Dense GQA transformer LM — also the encoder (HuBERT) and VLM backbone.
+
+Structure per layer (pre-norm):  h += attn(rms(h));  h += mlp(rms(h)).
+Layers are *stacked* (leading L axis) and executed with ``lax.scan`` so the
+HLO is O(1) in depth — llama3-405b's 126 layers compile as one layer.
+Remat policy per config. Every contraction routes through the MOA strategy.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.layers import attention as attn_lib
+from repro.layers.common import Params, init_rms_norm, rms_norm, split_keys
+from repro.layers.embedding import embed, init_embedding, unembed
+from repro.layers.mlp import gelu_mlp, init_gelu_mlp, init_swiglu, swiglu
+from repro.parallel import constrain
+
+__all__ = [
+    "init_params", "forward", "init_cache", "prefill", "decode_step",
+    "init_layer", "layer_forward",
+]
+
+
+# ---------------------------------------------------------------------------
+# Layer
+# ---------------------------------------------------------------------------
+
+
+def init_layer(rng, cfg: ModelConfig) -> Params:
+    ka, km = jax.random.split(rng)
+    mlp_init = init_gelu_mlp if cfg.family == "encoder" else init_swiglu
+    return {
+        "attn_norm": init_rms_norm(cfg.d_model, cfg.pdtype),
+        "attn": attn_lib.init_attention(
+            ka, d_model=cfg.d_model, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+            qkv_bias=cfg.qkv_bias, dtype=cfg.pdtype),
+        "mlp_norm": init_rms_norm(cfg.d_model, cfg.pdtype),
+        "mlp": mlp_init(km, cfg.d_model, cfg.d_ff, cfg.pdtype),
+    }
+
+
+def layer_forward(layer: Params, h, *, cfg: ModelConfig, positions):
+    hn = rms_norm(layer["attn_norm"], h)
+    a = attn_lib.attention_forward(
+        layer["attn"], hn, positions=positions, n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+        causal=cfg.is_causal, rope_theta=cfg.rope_theta,
+        use_rope=(cfg.family != "encoder"), q_chunk=cfg.q_chunk,
+        kv_chunk=cfg.kv_chunk, impl=cfg.attn_impl,
+        compute_dtype=cfg.cdtype, context_parallel=cfg.attn_cp)
+    h = h + constrain(a, "batch", "seq", "embed")
+    hn = rms_norm(layer["mlp_norm"], h)
+    mlp_fn = gelu_mlp if cfg.family == "encoder" else swiglu
+    m = mlp_fn(layer["mlp"], hn, strategy=cfg.moa_strategy,
+               compute_dtype=cfg.cdtype)
+    h = h + constrain(m, "batch", "seq", "embed")
+    return h, None
+
+
+def _remat(f, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return f
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            f, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(f)
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+
+def init_params(rng, cfg: ModelConfig) -> Params:
+    ke, kl = jax.random.split(rng)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    layers = jax.vmap(lambda k: init_layer(k, cfg))(layer_keys)
+    params = {
+        "embed": init_embedding(ke, cfg.vocab, cfg.d_model,
+                                tie=cfg.tie_embeddings, dtype=cfg.pdtype),
+        "layers": layers,
+        "final_norm": init_rms_norm(cfg.d_model, cfg.pdtype),
+    }
+    if cfg.family == "encoder":
+        # learned absolute positions (conv-positional stub) + mask embedding
+        kp, km2 = jax.random.split(ke)
+        pos_len = min(cfg.max_position, 32768)
+        params["pos_embed"] = 0.02 * jax.random.normal(
+            kp, (pos_len, cfg.d_model), cfg.pdtype)
+        params["mask_embed"] = 0.02 * jax.random.normal(
+            km2, (cfg.d_model,), cfg.pdtype)
+    if cfg.family == "vlm":
+        kv2 = jax.random.fold_in(ke, 7)
+        params["mm_projector"] = {
+            "w": 0.02 * jax.random.normal(
+                kv2, (cfg.d_model, cfg.d_model), cfg.pdtype)}
+    return params
+
+
+def _run_layers(params: Params, h, *, cfg: ModelConfig, positions):
+    def body(carry, layer):
+        out, _ = layer_forward(layer, carry, cfg=cfg, positions=positions)
+        return out, None
+
+    h, _ = lax.scan(_remat(body, cfg), h, params["layers"])
+    return h
+
+
+def embed_inputs(params: Params, batch: dict, cfg: ModelConfig):
+    """Token (+ modality prefix) embedding → (h, positions, text_offset)."""
+    if cfg.family == "encoder":
+        frames = batch["frames"].astype(cfg.cdtype)       # (B, T, d) stub
+        if "mask" in batch:
+            m = batch["mask"][..., None]
+            frames = jnp.where(m, params["mask_embed"].astype(cfg.cdtype),
+                               frames)
+        T = frames.shape[1]
+        pos_tab = params["pos_embed"][:T].astype(cfg.cdtype)
+        h = frames + pos_tab[None]
+        return h, jnp.arange(T), 0
+    tok = embed(params["embed"], batch["tokens"], compute_dtype=cfg.cdtype)
+    if cfg.family == "vlm":
+        patches = batch["patches"].astype(cfg.cdtype)     # (B, P, d) stub
+        patches = patches @ params["mm_projector"]["w"].astype(cfg.cdtype)
+        h = jnp.concatenate([patches, tok], axis=1)
+        S = h.shape[1]
+        return h, jnp.arange(S), patches.shape[1]
+    S = tok.shape[1]
+    return tok, jnp.arange(S), 0
+
+
+def forward(params: Params, batch: dict, cfg: ModelConfig):
+    """Full forward → logits ``(B, S_text, V)`` (VLM: text positions only)."""
+    h, positions, text_off = embed_inputs(params, batch, cfg)
+    h = constrain(h, "batch", "seq", "embed")
+    h = _run_layers(params, h, cfg=cfg, positions=positions)
+    h = rms_norm(params["final_norm"], h)
+    if text_off:
+        h = h[:, text_off:]
+    logits = unembed(params["embed"], h, compute_dtype=cfg.cdtype)
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    kv_dtype = jnp.int8 if cfg.kv_cache_dtype == "int8" else cfg.cdtype
+    one = attn_lib.init_kv_cache(batch, max_len, cfg.n_kv_heads, cfg.head_dim,
+                                 dtype=kv_dtype)
+    return {
+        "layers": jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), one),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def _layer_prefill(layer: Params, h, *, cfg: ModelConfig, positions, max_len):
+    """Layer forward that also emits its (post-rope) K/V for the cache."""
+    from repro.layers.rope import apply_rope
+
+    hn = rms_norm(layer["attn_norm"], h)
+    q, k, v = attn_lib._project_qkv(
+        layer["attn"], hn, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.head_dim, compute_dtype=cfg.cdtype)
+    q = apply_rope(q, positions, theta=cfg.rope_theta)
+    k = apply_rope(k, positions, theta=cfg.rope_theta)
+    o = attn_lib.flash_attention(q, k, v, causal=True, q_chunk=cfg.q_chunk,
+                                 kv_chunk=cfg.kv_chunk)
+    B, S, _, _ = o.shape
+    o = o.reshape(B, S, cfg.n_heads * cfg.head_dim)
+    h = h + constrain(o @ layer["attn"]["wo"].astype(cfg.cdtype),
+                      "batch", "seq", "embed")
+    hn = rms_norm(layer["mlp_norm"], h)
+    m = swiglu(layer["mlp"], hn, strategy=cfg.moa_strategy,
+               compute_dtype=cfg.cdtype)
+    h = h + constrain(m, "batch", "seq", "embed")
+    pad = max_len - k.shape[1]
+
+    def pad_seq(t):
+        return jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+
+    if cfg.kv_cache_dtype == "int8":
+        kq, ks = attn_lib.quantize_kv(k)
+        vq, vs = attn_lib.quantize_kv(v)
+        return h, {"k": pad_seq(kq), "v": pad_seq(vq),
+                   "k_scale": pad_seq(ks), "v_scale": pad_seq(vs)}
+    return h, {"k": pad_seq(k), "v": pad_seq(v)}
+
+
+def prefill(params: Params, batch: dict, cfg: ModelConfig, *, max_len: int):
+    """Prefill the cache; returns (last-position logits, cache)."""
+    h, positions, text_off = embed_inputs(params, batch, cfg)
+    h = constrain(h, "batch", "seq", "embed")
+
+    def body(carry, layer):
+        out, kv = _layer_prefill(layer, carry, cfg=cfg, positions=positions,
+                                 max_len=max_len)
+        return out, kv
+
+    h, kv_layers = lax.scan(_remat(body, cfg), h, params["layers"])
+    h = rms_norm(params["final_norm"], h)
+    logits = unembed(params["embed"], h[:, -1:], compute_dtype=cfg.cdtype)
+    cache = {"layers": kv_layers,
+             "pos": jnp.asarray(h.shape[1], jnp.int32)}
+    return constrain(logits, "batch", "seq", "vocab"), cache
+
+
+def decode_step(params: Params, cache: Params, tokens, cfg: ModelConfig):
+    """One token step for the whole batch. ``tokens: (B, 1)`` int32."""
+    pos = cache["pos"]
+    h = embed(params["embed"], tokens, compute_dtype=cfg.cdtype)
+    h = constrain(h, "batch", None, "embed")
+
+    def body(carry, xs):
+        layer, layer_cache = xs
+        hn = rms_norm(layer["attn_norm"], carry)
+        a, new_cache = attn_lib.attention_decode(
+            layer["attn"], hn, layer_cache, pos, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+            rope_theta=cfg.rope_theta, compute_dtype=cfg.cdtype)
+        h2 = carry + a
+        hn = rms_norm(layer["mlp_norm"], h2)
+        mlp_fn = gelu_mlp if cfg.family == "encoder" else swiglu
+        m = mlp_fn(layer["mlp"], hn, strategy=cfg.moa_strategy,
+                   compute_dtype=cfg.cdtype)
+        return h2 + m, new_cache
+
+    h, new_layers = lax.scan(body, h, (params["layers"], cache["layers"]))
+    h = rms_norm(params["final_norm"], h)
+    logits = unembed(params["embed"], h, compute_dtype=cfg.cdtype)
+    new_cache = {"layers": new_layers, "pos": pos + 1}
+    return constrain(logits, "batch", None, "vocab"), new_cache

@@ -1,0 +1,258 @@
+"""Zamba2-style hybrid: Mamba-2 backbone + one *shared* attention block.
+
+Structure (arXiv:2411.15242, simplified as documented in DESIGN.md):
+``n_layers`` Mamba-2 blocks; after every ``attn_every`` of them the single
+shared (attention + SwiGLU) block is applied, with small *per-application*
+input norms (stand-in for Zamba2's per-invocation LoRA). Weight sharing
+keeps parameter count at 1.2B-class while giving the hybrid periodic global
+mixing.
+
+The shared block's KV caches (one per application point) are the only
+sequence-length-proportional state — they, not the SSM states, dominate the
+long_500k memory roofline term.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.layers import attention as attn_lib
+from repro.layers.common import Params, init_rms_norm, rms_norm
+from repro.layers.embedding import embed, init_embedding, unembed
+from repro.layers.mlp import init_swiglu, swiglu
+from repro.layers.ssd import (init_mamba2_block, init_ssm_state,
+                              mamba2_decode, mamba2_forward)
+from repro.models import mamba2 as mamba_lm
+from repro.models import transformer as dense
+from repro.parallel import constrain
+
+__all__ = ["init_params", "forward", "init_cache", "prefill", "decode_step",
+           "n_applications"]
+
+
+def n_applications(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.attn_every
+
+
+def _grouped(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """(n_apps, per_group, tail) — layers split into uniform groups + tail."""
+    n_apps = n_applications(cfg)
+    per_group = cfg.attn_every
+    tail = cfg.n_layers - n_apps * per_group
+    return n_apps, per_group, tail
+
+
+def init_params(rng, cfg: ModelConfig) -> Params:
+    ke, kl, ka, km, kn = jax.random.split(rng, 5)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    layers = jax.vmap(lambda k: mamba_lm._init_layer(k, cfg))(layer_keys)
+    n_apps = n_applications(cfg)
+    app_norm_keys = jax.random.split(kn, n_apps)
+    app_norms = jax.vmap(
+        lambda k: {"attn": init_rms_norm(cfg.d_model, cfg.pdtype),
+                   "mlp": init_rms_norm(cfg.d_model, cfg.pdtype)}
+    )(app_norm_keys)
+    return {
+        "embed": init_embedding(ke, cfg.vocab, cfg.d_model,
+                                tie=cfg.tie_embeddings, dtype=cfg.pdtype),
+        "layers": layers,
+        "shared_attn": attn_lib.init_attention(
+            ka, d_model=cfg.d_model, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+            dtype=cfg.pdtype),
+        "shared_mlp": init_swiglu(km, cfg.d_model, cfg.d_ff, cfg.pdtype),
+        "app_norms": app_norms,
+        "final_norm": init_rms_norm(cfg.d_model, cfg.pdtype),
+    }
+
+
+def _split_layers(params: Params, cfg: ModelConfig):
+    """Stacked (L, ...) mamba params → ((n_apps, per_group, ...), tail)."""
+    n_apps, per_group, tail = _grouped(cfg)
+    head = jax.tree.map(
+        lambda a: a[: n_apps * per_group].reshape(
+            (n_apps, per_group) + a.shape[1:]), params["layers"])
+    tail_p = jax.tree.map(lambda a: a[n_apps * per_group:], params["layers"]) \
+        if tail else None
+    return head, tail_p
+
+
+def _shared_block(params: Params, app_norm: Params, h, *, cfg: ModelConfig,
+                  positions):
+    hn = rms_norm(app_norm["attn"], h)
+    a = attn_lib.attention_forward(
+        params["shared_attn"], hn, positions=positions, n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim, causal=True,
+        rope_theta=cfg.rope_theta, q_chunk=cfg.q_chunk,
+        kv_chunk=cfg.kv_chunk, impl=cfg.attn_impl, compute_dtype=cfg.cdtype,
+        context_parallel=cfg.attn_cp)
+    h = h + constrain(a, "batch", "seq", "embed")
+    hn = rms_norm(app_norm["mlp"], h)
+    m = swiglu(params["shared_mlp"], hn, strategy=cfg.moa_strategy,
+               compute_dtype=cfg.cdtype)
+    return h + constrain(m, "batch", "seq", "embed")
+
+
+def forward(params: Params, batch: dict, cfg: ModelConfig):
+    h = embed(params["embed"], batch["tokens"], compute_dtype=cfg.cdtype)
+    h = constrain(h, "batch", "seq", "embed")
+    positions = jnp.arange(h.shape[1])
+    head, tail_p = _split_layers(params, cfg)
+
+    def mamba_body(carry, layer):
+        out, _ = mamba_lm._layer_fwd(layer, carry, cfg=cfg)
+        return out, None
+
+    def group_body(carry, xs):
+        group_layers, app_norm = xs
+        out, _ = lax.scan(dense._remat(mamba_body, cfg), carry, group_layers)
+        out = _shared_block(params, app_norm, out, cfg=cfg,
+                            positions=positions)
+        return out, None
+
+    h, _ = lax.scan(group_body, h, (head, params["app_norms"]))
+    if tail_p is not None:
+        h, _ = lax.scan(dense._remat(mamba_body, cfg), h, tail_p)
+    h = rms_norm(params["final_norm"], h)
+    logits = unembed(params["embed"], h, compute_dtype=cfg.cdtype)
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    n_apps = n_applications(cfg)
+    ssm_one = init_ssm_state(batch, d_model=cfg.d_model, d_state=cfg.d_state,
+                             headdim=cfg.headdim, n_groups=cfg.n_groups,
+                             d_conv=cfg.d_conv, expand=cfg.expand)
+    kv_one = attn_lib.init_kv_cache(batch, max_len, cfg.n_kv_heads,
+                                    cfg.head_dim, dtype=cfg.cdtype)
+    return {
+        "ssm": jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), ssm_one),
+        "kv": jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_apps,) + a.shape), kv_one),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params: Params, batch: dict, cfg: ModelConfig, *, max_len: int):
+    """Prefill both the SSM states and the shared-block KV caches.
+
+    Implemented as the forward pass with explicit state capture per group.
+    """
+    from repro.layers.rope import apply_rope
+
+    h = embed(params["embed"], batch["tokens"], compute_dtype=cfg.cdtype)
+    h = constrain(h, "batch", "seq", "embed")
+    S = h.shape[1]
+    positions = jnp.arange(S)
+    head, tail_p = _split_layers(params, cfg)
+
+    def mamba_body(carry, layer):
+        out, h_last = mamba_lm._layer_fwd(layer, carry, cfg=cfg)
+        hn = rms_norm(layer["norm"], carry)[:, -(cfg.d_conv - 1):]
+        proj = hn.astype(cfg.cdtype) @ layer["mixer"]["in_proj"] \
+            .astype(cfg.cdtype)
+        d_inner = cfg.d_inner
+        bs = cfg.n_groups * cfg.d_state
+        conv_state = jnp.concatenate(
+            [proj[..., d_inner:2 * d_inner],
+             proj[..., 2 * d_inner:2 * d_inner + 2 * bs]], axis=-1)
+        return out, {"h": h_last, "conv": conv_state.astype(cfg.cdtype)}
+
+    def group_body(carry, xs):
+        group_layers, app_norm = xs
+        out, ssm_states = lax.scan(dense._remat(mamba_body, cfg), carry,
+                                   group_layers)
+        # shared block with KV capture
+        hn = rms_norm(app_norm["attn"], out)
+        q, k, v = attn_lib._project_qkv(
+            params["shared_attn"], hn, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+            compute_dtype=cfg.cdtype)
+        q = apply_rope(q, positions, theta=cfg.rope_theta)
+        k = apply_rope(k, positions, theta=cfg.rope_theta)
+        o = attn_lib.flash_attention(q, k, v, causal=True,
+                                     q_chunk=cfg.q_chunk,
+                                     kv_chunk=cfg.kv_chunk)
+        B = o.shape[0]
+        o = o.reshape(B, S, cfg.n_heads * cfg.head_dim)
+        out = out + o @ params["shared_attn"]["wo"].astype(cfg.cdtype)
+        hn = rms_norm(app_norm["mlp"], out)
+        out = out + swiglu(params["shared_mlp"], hn,
+                           strategy=cfg.moa_strategy,
+                           compute_dtype=cfg.cdtype)
+        pad = max_len - S
+        kv = {"k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+              "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))}
+        return out, (ssm_states, kv)
+
+    h, (ssm_head, kv_layers) = lax.scan(group_body, h,
+                                        (head, params["app_norms"]))
+    # ssm_head: (n_apps, per_group, ...) → flatten to (n_apps*per_group, ...)
+    ssm_states = jax.tree.map(
+        lambda a: a.reshape((-1,) + a.shape[2:]), ssm_head)
+    if tail_p is not None:
+        h, ssm_tail = lax.scan(dense._remat(mamba_body, cfg), h, tail_p)
+        ssm_states = jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b], axis=0), ssm_states, ssm_tail)
+    h = rms_norm(params["final_norm"], h)
+    logits = unembed(params["embed"], h[:, -1:], compute_dtype=cfg.cdtype)
+    cache = {"ssm": ssm_states, "kv": kv_layers,
+             "pos": jnp.asarray(S, jnp.int32)}
+    return constrain(logits, "batch", None, "vocab"), cache
+
+
+def decode_step(params: Params, cache: Params, tokens, cfg: ModelConfig):
+    pos = cache["pos"]
+    h = embed(params["embed"], tokens, compute_dtype=cfg.cdtype)
+    n_apps, per_group, tail = _grouped(cfg)
+    head_states = jax.tree.map(
+        lambda a: a[: n_apps * per_group].reshape(
+            (n_apps, per_group) + a.shape[1:]), cache["ssm"])
+    tail_states = jax.tree.map(lambda a: a[n_apps * per_group:],
+                               cache["ssm"]) if tail else None
+    head, tail_p = _split_layers(params, cfg)
+
+    def mamba_body(carry, xs):
+        layer, state = xs
+        hn = rms_norm(layer["norm"], carry)
+        y, new_state = mamba2_decode(
+            layer["mixer"], hn, state, d_state=cfg.d_state,
+            headdim=cfg.headdim, n_groups=cfg.n_groups, expand=cfg.expand,
+            compute_dtype=cfg.cdtype)
+        return carry + y, new_state
+
+    def group_body(carry, xs):
+        group_layers, group_states, app_norm, kv = xs
+        out, new_states = lax.scan(mamba_body, carry,
+                                   (group_layers, group_states))
+        hn = rms_norm(app_norm["attn"], out)
+        a, new_kv = attn_lib.attention_decode(
+            params["shared_attn"], hn, kv, pos, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+            rope_theta=cfg.rope_theta, compute_dtype=cfg.cdtype)
+        out = out + a
+        hn = rms_norm(app_norm["mlp"], out)
+        out = out + swiglu(params["shared_mlp"], hn,
+                           strategy=cfg.moa_strategy,
+                           compute_dtype=cfg.cdtype)
+        return out, (new_states, new_kv)
+
+    h, (new_head_states, new_kv) = lax.scan(
+        group_body, h,
+        (head, head_states, params["app_norms"], cache["kv"]))
+    new_ssm = jax.tree.map(lambda a: a.reshape((-1,) + a.shape[2:]),
+                           new_head_states)
+    if tail_states is not None:
+        h, new_tail = lax.scan(mamba_body, h, (tail_p, tail_states))
+        new_ssm = jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=0),
+                               new_ssm, new_tail)
+    h = rms_norm(params["final_norm"], h)
+    logits = unembed(params["embed"], h, compute_dtype=cfg.cdtype)
+    return (constrain(logits, "batch", None, "vocab"),
+            {"ssm": new_ssm, "kv": new_kv, "pos": pos + 1})

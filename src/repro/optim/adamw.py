@@ -1,0 +1,79 @@
+"""AdamW with decoupled weight decay, global-norm clipping, f32 moments.
+
+Pure-pytree implementation (no optax dependency in this container). The
+moment tensors share the parameters' sharding — under FSDP the optimizer
+state is ZeRO-style sharded for free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    # decay is skipped for 1-D params (norm scales, biases) per convention
+    decay_min_ndim: int = 2
+
+
+def adamw_init(params) -> dict:
+    zeros = lambda p: jax.tree.map(
+        lambda a: jnp.zeros(a.shape, jnp.float32), p)
+    return {"m": zeros(params), "v": zeros(params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    """sqrt(Σ‖g‖²) — itself a cross-device MOA under data parallelism."""
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(grads, opt_state: dict, params, *, lr,
+                 config: AdamWConfig = AdamWConfig()) -> Tuple[Any, dict, dict]:
+    """One AdamW step → (new_params, new_opt_state, metrics)."""
+    count = opt_state["count"] + 1
+    gnorm = global_norm(grads)
+    if config.clip_norm is not None:
+        scale = jnp.minimum(1.0, config.clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+    b1, b2 = config.b1, config.b2
+    bc1 = 1.0 - b1 ** count.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g32
+        v_new = b2 * v + (1 - b2) * jnp.square(g32)
+        m_hat = m_new / bc1
+        v_hat = v_new / bc2
+        step = m_hat / (jnp.sqrt(v_hat) + config.eps)
+        if p.ndim >= config.decay_min_ndim:
+            step = step + config.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * step
+        return p_new.astype(p.dtype), m_new, v_new
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p)
+           for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": jnp.asarray(lr, jnp.float32)}
+    return new_params, {"m": new_m, "v": new_v, "count": count}, metrics

@@ -1,0 +1,9 @@
+from repro.parallel.sharding import (
+    ShardingRules, DEFAULT_RULES, activate, active_context, constrain,
+    logical_to_spec, param_shardings,
+)
+
+__all__ = [
+    "ShardingRules", "DEFAULT_RULES", "activate", "active_context",
+    "constrain", "logical_to_spec", "param_shardings",
+]

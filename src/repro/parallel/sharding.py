@@ -1,0 +1,181 @@
+"""Logical-axis sharding rules → NamedSharding (DP / FSDP / TP / EP / SP).
+
+Models annotate activations with *logical* axis names
+(``constrain(x, "batch", "seq", "embed")``); a :class:`ShardingRules` table
+maps logical names to mesh axes. Swapping the table is a one-line sharding
+experiment — the §Perf hillclimb lever.
+
+The mesh context is self-managed (module global set by :func:`activate`);
+outside a context every ``constrain`` is a no-op, so all model code runs
+unchanged on a single CPU device.
+
+Default mapping (single pod ``(data=16, model=16)``; multi-pod adds ``pod``
+as an outer data axis):
+
+  batch   → (pod, data)     DP
+  vocab   → model           TP (embedding + logits + vocab-parallel CE)
+  heads   → model           TP attention (q heads)
+  kv_heads→ model            (replicated automatically when kv < axis — GSPMD)
+  ff      → model           TP MLP
+  experts → model           EP
+  fsdp    → data            parameter/optimizer-state sharding (ZeRO-3)
+  seq     → None             (SP variants map seq → data for long-context)
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["ShardingRules", "DEFAULT_RULES", "activate", "active_context",
+           "constrain", "logical_to_spec", "param_shardings"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Mapping logical axis name → mesh axis (or tuple of axes, or None)."""
+
+    rules: Tuple[Tuple[str, Optional[Tuple[str, ...]]], ...]
+
+    @staticmethod
+    def make(mapping: Dict[str, Optional[Tuple[str, ...] | str]]) -> "ShardingRules":
+        norm = []
+        for k, v in mapping.items():
+            if v is None:
+                norm.append((k, None))
+            elif isinstance(v, str):
+                norm.append((k, (v,)))
+            else:
+                norm.append((k, tuple(v)))
+        return ShardingRules(tuple(norm))
+
+    def lookup(self, name: Optional[str]):
+        if name is None:
+            return None
+        for k, v in self.rules:
+            if k == name:
+                if v is None:
+                    return None
+                return v[0] if len(v) == 1 else v
+        return None  # unknown logical names replicate
+
+    def with_overrides(self, **overrides) -> "ShardingRules":
+        d = {k: v for k, v in self.rules}
+        for k, v in overrides.items():
+            d[k] = (v,) if isinstance(v, str) else v
+        return ShardingRules(tuple(d.items()))
+
+
+DEFAULT_RULES = ShardingRules.make({
+    "batch": ("pod", "data"),
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "ff": "model",
+    "experts": "model",
+    "expert_capacity": None,
+    "fsdp": ("pod", "data"),
+    "embed": None,
+    "seq": None,
+    "seq_cp": "model",   # context-parallel attention (Ulysses-style layout)
+    "kv_seq": None,
+    "kv_heads_cache": "model",  # cache head axis (≠ the weights' kv_heads)
+    "scale_seq": None,   # int8 KV scales' seq dim (kv_dim_shard → "model")
+    "head_dim": None,    # kv_dim_shard variant maps this to "model"
+    "state": None,
+    "ssm_heads": "model",
+    "ssm_inner": "model",
+})
+
+
+class _Ctx(threading.local):
+    mesh: Optional[Mesh] = None
+    rules: Optional[ShardingRules] = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def activate(mesh: Mesh, rules: ShardingRules = DEFAULT_RULES):
+    """Enable sharding constraints inside this context (and `with mesh`)."""
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, rules
+    try:
+        with mesh:
+            yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def active_context():
+    return _CTX.mesh, _CTX.rules
+
+
+def logical_to_spec(names, rules: Optional[ShardingRules] = None,
+                    mesh: Optional[Mesh] = None) -> P:
+    """Logical names tuple → PartitionSpec, dropping axes absent from mesh."""
+    rules = rules or _CTX.rules or DEFAULT_RULES
+    mesh = mesh or _CTX.mesh
+    mesh_axes = set(mesh.axis_names) if mesh is not None else None
+    out = []
+    for n in names:
+        ax = rules.lookup(n)
+        if ax is not None and mesh_axes is not None:
+            if isinstance(ax, tuple):
+                ax = tuple(a for a in ax if a in mesh_axes) or None
+                if ax is not None and len(ax) == 1:
+                    ax = ax[0]
+            elif ax not in mesh_axes:
+                ax = None
+        out.append(ax)
+    return P(*out)
+
+
+def _dedupe(spec: P) -> P:
+    """A mesh axis may shard at most one dim — first occurrence wins (e.g.
+    under SP the residual's seq→model takes priority; a later vocab→model
+    on the same tensor replicates instead of erroring)."""
+    seen = set()
+    out = []
+    for entry in spec:
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        if any(a in seen for a in axes):
+            out.append(None)
+            continue
+        seen.update(axes)
+        out.append(entry)
+    return P(*out)
+
+
+def constrain(x, *names):
+    """with_sharding_constraint by logical names; no-op without a context."""
+    if _CTX.mesh is None or _CTX.rules is None:
+        return x
+    spec = _dedupe(logical_to_spec(names))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_CTX.mesh, spec))
+
+
+def param_shardings(logical_tree, mesh: Optional[Mesh] = None,
+                    rules: Optional[ShardingRules] = None):
+    """Map a pytree of logical-name tuples to NamedShardings."""
+    mesh = mesh or _CTX.mesh
+    rules = rules or _CTX.rules or DEFAULT_RULES
+    if mesh is None:
+        raise ValueError("param_shardings requires an active or explicit mesh")
+    return jax.tree.map(
+        lambda names: NamedSharding(
+            mesh, logical_to_spec(names, rules, mesh)),
+        logical_tree,
+        is_leaf=lambda t: isinstance(t, tuple) and all(
+            n is None or isinstance(n, str) for n in t),
+    )

@@ -1,0 +1,27 @@
+"""Elastic re-meshing: pick a mesh for however many devices survived.
+
+Policy: keep the model axis fixed if possible (TP degree is dictated by
+memory-per-chip), shrink the data axis; fall back to shrinking the model
+axis when too few devices remain. Checkpoint restore onto the new mesh is
+``CheckpointManager.restore(shardings=...)`` — parameters re-shard via
+``device_put``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+__all__ = ["plan_mesh_shape"]
+
+
+def plan_mesh_shape(n_devices: int, *, model_parallel: int = 16,
+                    min_model_parallel: int = 1) -> Tuple[int, int]:
+    """→ (data, model) using as many of ``n_devices`` as possible."""
+    if n_devices < 1:
+        raise ValueError("no devices")
+    mp = min(model_parallel, n_devices)
+    while mp >= min_model_parallel:
+        if n_devices % mp == 0:
+            return (n_devices // mp, mp)
+        mp -= 1
+    return (n_devices, 1)

@@ -1,0 +1,66 @@
+"""Restart supervisor: checkpoint-restore training loop with retry budget.
+
+The control plane a real cluster job runs under, scaled to in-process:
+
+  run → (SimulatedFailure | crash) → restore latest checkpoint →
+  re-plan mesh for surviving devices (elastic) → resume at ckpt step.
+
+The training function is handed ``(start_step, restored_state)`` and must
+checkpoint through the provided manager; determinism of the data pipeline
+by step (see data/pipeline.py) guarantees bit-identical resume, which the
+integration tests assert.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, List, Optional
+
+from repro.checkpoint import CheckpointManager
+from repro.runtime.failures import SimulatedFailure
+
+__all__ = ["Supervisor", "RunResult"]
+
+
+@dataclasses.dataclass
+class RunResult:
+    final_state: Any
+    restarts: int
+    failures: List[str]
+    completed: bool
+    wall_time_s: float
+
+
+class Supervisor:
+    def __init__(self, manager: CheckpointManager, *, max_restarts: int = 3):
+        self.manager = manager
+        self.max_restarts = max_restarts
+
+    def run(self, train_fn: Callable[[int, Optional[Any]], Any],
+            *, restore_fn: Optional[Callable[[int], Any]] = None) -> RunResult:
+        """``train_fn(start_step, restored_state) -> final_state``.
+
+        ``restore_fn(step) -> state`` rebuilds state from the checkpoint
+        (the supervisor does not assume a state pytree structure).
+        """
+        restarts = 0
+        failures: List[str] = []
+        t0 = time.monotonic()
+        while True:
+            start_step = 0
+            restored = None
+            latest = self.manager.latest_step()
+            if latest is not None and restore_fn is not None:
+                restored = restore_fn(latest)
+                start_step = latest + 1
+            try:
+                final_state = train_fn(start_step, restored)
+                return RunResult(final_state, restarts, failures, True,
+                                 time.monotonic() - t0)
+            except SimulatedFailure as e:
+                failures.append(str(e))
+                restarts += 1
+                if restarts > self.max_restarts:
+                    return RunResult(None, restarts, failures, False,
+                                     time.monotonic() - t0)

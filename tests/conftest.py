@@ -1,0 +1,15 @@
+import os
+import sys
+
+# NOTE: deliberately NO xla_force_host_platform_device_count here — tests
+# and benches must see the real single CPU device; only launch/dryrun.py
+# (run as its own process) requests 512 placeholder devices.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,97 @@
+"""Validation of the analytic cost model against XLA's cost_analysis.
+
+Methodology (see costing.py docstring): XLA counts while-loop bodies once,
+so validation uses LOOP-FREE configs — n_layers=1 (trip-count-1 scans),
+one attention chunk, one SSD chunk, no MOA serialization. On such configs
+``cost_analysis`` is exact and the analytic model must agree. The analytic
+model deliberately skips elementwise/norm FLOPs so it sits slightly BELOW
+HLO (ratio in [0.85, 1.02])."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ShapeSpec
+from repro.configs.registry import ARCHS, smoke_config
+from repro.launch import costing
+from repro.models.api import build_model
+
+S, B = 256, 2
+
+
+def _loop_free(cfg0):
+    return dataclasses.replace(
+        cfg0, n_layers=1, attn_every=1 if cfg0.attn_every else 0,
+        q_chunk=S, kv_chunk=S, ssd_chunk=S, remat="none", moa_chunk=1 << 20,
+        d_model=128, n_heads=4 if cfg0.n_heads else 0,
+        n_kv_heads=cfg0.n_kv_heads and 2,
+        head_dim=32 if cfg0.head_dim else 0,
+        d_ff=512 if cfg0.d_ff else 0, vocab=1024,
+        n_patches=32 if cfg0.n_patches else 0)
+
+
+def _hlo_flops(f, *specs):
+    c = jax.jit(f).lower(*specs).compile()
+    ca = c.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return float(ca.get("flops", 0.0))
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_analytic_flops_match_hlo_on_loop_free_config(arch):
+    cfg = _loop_free(smoke_config(ARCHS[arch]))
+    model = build_model(cfg)
+    specs = model.input_specs(ShapeSpec("val", S, B, "train"))
+    batch = {k: v for k, v in specs.items() if k not in ("labels", "targets")}
+    if cfg.family == "encoder":
+        batch = {k: specs[k] for k in ("frames", "mask")}
+    hlo = _hlo_flops(lambda p, b: model.forward(p, b),
+                     model.abstract_params(), batch)
+    analytic = sum(costing.forward_flops(cfg, tokens=B * S, s_attn=S).values())
+    ratio = analytic / hlo
+    assert 0.85 <= ratio <= 1.02, (arch, ratio, analytic, hlo)
+
+
+def test_train_multiplier_ordering():
+    base = smoke_config(ARCHS["llama3-8b"])
+    shape = ShapeSpec("t", 128, 4, "train")
+    mesh = costing.MeshMeta(pod=1, data=2, model=2)
+    flops = {}
+    for remat in ("none", "dots", "full"):
+        cfg = dataclasses.replace(base, remat=remat)
+        flops[remat] = costing.estimate_cell(cfg, shape, mesh).flops
+    assert flops["none"] < flops["dots"] < flops["full"]
+
+
+def test_decode_flops_linear_in_batch():
+    cfg = smoke_config(ARCHS["llama3-8b"])
+    mesh = costing.MeshMeta(pod=1, data=1, model=1)
+    f1 = costing.estimate_cell(cfg, ShapeSpec("d", 1024, 8, "decode"),
+                               mesh).flops
+    f2 = costing.estimate_cell(cfg, ShapeSpec("d", 1024, 16, "decode"),
+                               mesh).flops
+    assert abs(f2 / f1 - 2.0) < 0.05
+
+
+def test_moe_flops_scale_with_topk():
+    cfg = smoke_config(ARCHS["moonshot-v1-16b-a3b"])
+    mesh = costing.MeshMeta(pod=1, data=1, model=1)
+    shape = ShapeSpec("t", 128, 4, "train")
+    f2 = costing.estimate_cell(cfg, shape, mesh)
+    f1 = costing.estimate_cell(dataclasses.replace(cfg, top_k=1), shape,
+                               mesh)
+    assert f2.components["moe_experts"] / f1.components["moe_experts"] == 2.0
+
+
+def test_collective_model_sees_gather_ce_penalty():
+    """gather-CE must cost far more wire than vocab-parallel CE."""
+    cfg = smoke_config(ARCHS["llama3-8b"])
+    mesh = costing.MeshMeta(pod=1, data=4, model=4)
+    shape = ShapeSpec("t", 256, 8, "train")
+    vp = costing.estimate_cell(cfg, shape, mesh)
+    ga = costing.estimate_cell(
+        dataclasses.replace(cfg, loss_impl="gather"), shape, mesh)
+    assert ga.collective_bytes > 2 * vp.collective_bytes

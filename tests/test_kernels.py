@@ -1,0 +1,177 @@
+"""Pallas kernel sweeps: shapes × dtypes × block sizes vs the jnp oracles.
+
+All kernels execute in interpret mode on CPU (the kernel body runs in
+Python) — the TPU lowering path (BlockSpec tiling, grid accumulation) is
+identical code.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _rtol(dtype):
+    return {jnp.float32: 1e-5, jnp.bfloat16: 2e-2}.get(dtype, 0)
+
+
+# ---------------------------------------------------------------------------
+# moa_reduce
+# ---------------------------------------------------------------------------
+
+class TestMoaReduce:
+    @pytest.mark.parametrize("shape", [(8, 16), (100, 33), (1000, 256),
+                                       (4096, 128), (7, 5), (513, 129)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+    def test_matches_oracle(self, rng, shape, dtype):
+        if jnp.issubdtype(dtype, jnp.integer):
+            x = jax.random.randint(rng, shape, -100, 100, dtype)
+        else:
+            x = jax.random.normal(rng, shape, jnp.float32).astype(dtype)
+        got = ops.moa_reduce(x)
+        want = ref.moa_reduce_ref(x)
+        if jnp.issubdtype(dtype, jnp.integer):
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        else:
+            np.testing.assert_allclose(np.asarray(got, np.float32),
+                                       np.asarray(want, np.float32),
+                                       rtol=_rtol(dtype), atol=1e-2)
+
+    @pytest.mark.parametrize("block_n,block_f", [(64, 64), (512, 256),
+                                                 (128, 512), (1024, 32)])
+    def test_block_shape_invariance(self, rng, block_n, block_f):
+        """The serialized-MOA cluster size n_c must not change the result."""
+        x = jax.random.normal(rng, (777, 130), jnp.float32)
+        got = ops.moa_reduce(x, block_n=block_n, block_f=block_f)
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(ref.moa_reduce_ref(x)),
+                                   rtol=1e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# loa_add / loa_reduce
+# ---------------------------------------------------------------------------
+
+class TestLoaKernels:
+    @pytest.mark.parametrize("n", [16, 100, 1024, 5000])
+    @pytest.mark.parametrize("l", [0, 1, 3, 6, 8])
+    def test_loa_add_matches_oracle(self, rng, n, l):
+        kx, ky = jax.random.split(rng)
+        x = jax.random.randint(kx, (n,), 0, 256, jnp.int32)
+        y = jax.random.randint(ky, (n,), 0, 256, jnp.int32)
+        got = ops.loa_add(x, y, approx_bits=l)
+        want = ref.loa_add_ref(x, y, approx_bits=l, width=8)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("shape", [(256, 64), (512, 100), (1024, 256)])
+    @pytest.mark.parametrize("l", [0, 2, 4])
+    def test_loa_reduce_matches_oracle(self, rng, shape, l):
+        x = jax.random.randint(rng, shape, 0, 128, jnp.int32)
+        got = ops.loa_reduce(x, approx_bits=l, block_n=min(256, shape[0]))
+        want = ref.loa_reduce_ref(x, approx_bits=l, width=8,
+                                  block_n=min(256, shape[0]))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_loa_reduce_exact_when_l0(self, rng):
+        x = jax.random.randint(rng, (512, 32), 0, 128, jnp.int32)
+        got = ops.loa_reduce(x, approx_bits=0, block_n=128)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(jnp.sum(x, axis=0)))
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("sq,skv,d", [(64, 64, 32), (100, 100, 16),
+                                          (128, 256, 64), (37, 53, 32)])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_matches_oracle(self, rng, sq, skv, d, causal):
+        if causal and sq != skv:
+            pytest.skip("causal requires aligned q/kv positions here")
+        kq, kk, kv = jax.random.split(rng, 3)
+        q = jax.random.normal(kq, (3, sq, d), jnp.float32)
+        k = jax.random.normal(kk, (3, skv, d), jnp.float32)
+        v = jax.random.normal(kv, (3, skv, d), jnp.float32)
+        got = ops.flash_attention(q, k, v, causal=causal, block_q=32,
+                                  block_k=32)
+        want = ref.flash_attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("bq,bk", [(16, 64), (64, 16), (128, 128)])
+    def test_block_shape_invariance(self, rng, bq, bk):
+        """The serialized-softmax cluster size must not change the math."""
+        kq, kk, kv = jax.random.split(rng, 3)
+        q = jax.random.normal(kq, (2, 128, 32), jnp.float32)
+        k = jax.random.normal(kk, (2, 128, 32), jnp.float32)
+        v = jax.random.normal(kv, (2, 128, 32), jnp.float32)
+        got = ops.flash_attention(q, k, v, block_q=bq, block_k=bk)
+        want = ref.flash_attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_bf16_inputs(self, rng):
+        kq, kk, kv = jax.random.split(rng, 3)
+        q = jax.random.normal(kq, (2, 64, 32)).astype(jnp.bfloat16)
+        k = jax.random.normal(kk, (2, 64, 32)).astype(jnp.bfloat16)
+        v = jax.random.normal(kv, (2, 64, 32)).astype(jnp.bfloat16)
+        got = ops.flash_attention(q, k, v, block_q=32, block_k=32)
+        want = ref.flash_attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=3e-2, atol=3e-2)
+
+
+# ---------------------------------------------------------------------------
+# dot_moa
+# ---------------------------------------------------------------------------
+
+class TestDotMoa:
+    @pytest.mark.parametrize("m,k,n", [(32, 64, 16), (100, 700, 130),
+                                       (256, 1024, 256), (17, 33, 9)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_float_matches_oracle(self, rng, m, k, n, dtype):
+        ka, kb = jax.random.split(rng)
+        a = jax.random.normal(ka, (m, k), jnp.float32).astype(dtype)
+        b = jax.random.normal(kb, (k, n), jnp.float32).astype(dtype)
+        got = ops.dot_moa(a, b, block_m=64, block_n=64, block_k=256)
+        want = ref.dot_moa_ref(a, b)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+                                   atol=1e-1 if dtype == jnp.bfloat16 else 1e-4)
+
+    @pytest.mark.parametrize("block_k", [64, 128, 512])
+    def test_int8_exact(self, rng, block_k):
+        ka, kb = jax.random.split(rng)
+        a = jax.random.randint(ka, (64, 512), -8, 8, jnp.int8)
+        b = jax.random.randint(kb, (512, 48), -8, 8, jnp.int8)
+        got = ops.dot_moa(a, b, block_k=block_k)
+        want = np.asarray(a, np.int32) @ np.asarray(b, np.int32)
+        np.testing.assert_array_equal(np.asarray(got), want)
+
+    def test_loa_accumulation_bounded_error(self, rng):
+        """Serialized LOA MOA: error bounded by (#folds) · 2^l."""
+        ka, kb = jax.random.split(rng)
+        a = jax.random.randint(ka, (16, 512), 0, 8, jnp.int32)
+        b = jax.random.randint(kb, (512, 16), 0, 8, jnp.int32)
+        l, block_k = 4, 128
+        got = np.asarray(ops.dot_moa(a, b, block_k=block_k, approx_bits=l))
+        want = np.asarray(a) @ np.asarray(b)
+        n_folds = 512 // block_k - 1
+        assert np.all(np.abs(got - want) <= n_folds * (1 << l))
+
+    def test_block_shape_invariance_f32(self, rng):
+        ka, kb = jax.random.split(rng)
+        a = jax.random.normal(ka, (128, 1000), jnp.float32)
+        b = jax.random.normal(kb, (1000, 64), jnp.float32)
+        outs = [np.asarray(ops.dot_moa(a, b, block_m=bm, block_n=bn,
+                                       block_k=bk))
+                for bm, bn, bk in [(32, 32, 128), (128, 64, 500),
+                                   (64, 64, 1000)]]
+        for o in outs[1:]:
+            np.testing.assert_allclose(o, outs[0], rtol=1e-5, atol=1e-4)

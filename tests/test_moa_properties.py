@@ -1,0 +1,120 @@
+"""Hypothesis property tests for the MOA/LOA invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import loa, metrics, moa
+
+_INTS = st.integers(min_value=0, max_value=255)
+
+
+class TestLoaProperties:
+    @given(x=_INTS, y=_INTS, l=st.integers(0, 8))
+    @settings(max_examples=200, deadline=None)
+    def test_matches_scalar_gate_model(self, x, y, l):
+        got = int(loa.loa_add(jnp.int32(x), jnp.int32(y),
+                              approx_bits=l, width=8))
+        want = loa.loa_add_reference_python(x, y, l)
+        assert got == want
+
+    @given(x=_INTS, y=_INTS, l=st.integers(0, 8))
+    @settings(max_examples=200, deadline=None)
+    def test_error_bound(self, x, y, l):
+        """|ŝ − s| < 2^l — the LOA deviation bound."""
+        s_hat = loa.loa_add_reference_python(x, y, l)
+        assert abs(s_hat - (x + y)) < max(1 << l, 1)
+
+    @given(x=_INTS, y=_INTS, l=st.integers(0, 8))
+    @settings(max_examples=100, deadline=None)
+    def test_commutative(self, x, y, l):
+        assert loa.loa_add_reference_python(x, y, l) == \
+            loa.loa_add_reference_python(y, x, l)
+
+    @given(x=_INTS, y=_INTS)
+    @settings(max_examples=50, deadline=None)
+    def test_exact_at_l0(self, x, y):
+        assert loa.loa_add_reference_python(x, y, 0) == x + y
+
+    @given(n=st.integers(2, 64), l=st.integers(0, 4),
+           seed=st.integers(0, 1000))
+    @settings(max_examples=30, deadline=None)
+    def test_tree_reduction_error_bound(self, n, l, seed):
+        """Tree of LOAs: worst case error < (n−1)·2^l (one deviation per
+        adder instance; widths grow so the bound is conservative)."""
+        rng = np.random.default_rng(seed)
+        xs = rng.integers(0, 255, size=(n, 1)).astype(np.int32)
+        got = int(loa.loa_sum(jnp.asarray(xs), approx_bits=l, width=8,
+                              axis=0)[0])
+        exact = int(xs.sum())
+        assert abs(got - exact) < max((n - 1) * (1 << l), 1)
+
+
+class TestMoaEquivalence:
+    @given(n=st.integers(1, 300), chunk=st.integers(1, 64),
+           seed=st.integers(0, 100))
+    @settings(max_examples=30, deadline=None)
+    def test_serial_equals_tree_equals_sum_int(self, n, chunk, seed):
+        """Integer reductions are exactly schedule-invariant."""
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.integers(-1000, 1000, size=(n, 3)), jnp.int32)
+        want = np.asarray(jnp.sum(x, axis=0))
+        tree = moa.moa_sum(x, axis=0, strategy=moa.ReductionStrategy(
+            kind="tree", accum_dtype=jnp.int32))
+        serial = moa.moa_sum(x, axis=0, strategy=moa.ReductionStrategy(
+            kind="serial", chunk=chunk, accum_dtype=jnp.int32))
+        np.testing.assert_array_equal(np.asarray(tree), want)
+        np.testing.assert_array_equal(np.asarray(serial), want)
+
+    @given(n=st.integers(1, 200), chunk=st.integers(1, 64),
+           seed=st.integers(0, 100))
+    @settings(max_examples=20, deadline=None)
+    def test_serial_close_to_sum_float(self, n, chunk, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal((n, 4)), jnp.float32)
+        want = np.asarray(jnp.sum(x, axis=0))
+        for kind in ("tree", "serial"):
+            got = moa.moa_sum(x, axis=0, strategy=moa.ReductionStrategy(
+                kind=kind, chunk=chunk))
+            np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4,
+                                       atol=1e-4)
+
+    @given(m=st.integers(1, 16), k=st.integers(1, 128),
+           n=st.integers(1, 16), chunk=st.integers(1, 64),
+           seed=st.integers(0, 100))
+    @settings(max_examples=20, deadline=None)
+    def test_moa_dot_equals_matmul(self, m, k, n, chunk, seed):
+        rng = np.random.default_rng(seed)
+        a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+        got = moa.moa_dot(a, b, strategy=moa.ReductionStrategy(
+            kind="serial", chunk=chunk))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(a @ b),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_loa_dot_exact_when_l0(self):
+        rng = np.random.default_rng(0)
+        a = jnp.asarray(rng.integers(0, 10, (4, 33)), jnp.int32)
+        b = jnp.asarray(rng.integers(0, 10, (33, 5)), jnp.int32)
+        got = moa.moa_dot(a, b, strategy=moa.ReductionStrategy(
+            kind="loa", approx_bits=0))
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(a) @ np.asarray(b))
+
+
+class TestMetrics:
+    @given(seed=st.integers(0, 1000))
+    @settings(max_examples=20, deadline=None)
+    def test_mred_zero_iff_equal(self, seed):
+        rng = np.random.default_rng(seed)
+        s = jnp.asarray(rng.integers(1, 1000, 50), jnp.int32)
+        assert float(metrics.mred(s, s)) == 0.0
+
+    @given(seed=st.integers(0, 100), scale=st.floats(0.01, 0.5))
+    @settings(max_examples=20, deadline=None)
+    def test_mred_scales_with_perturbation(self, seed, scale):
+        rng = np.random.default_rng(seed)
+        s = rng.integers(100, 1000, 100).astype(np.float32)
+        s_hat = s * (1 + scale)
+        assert abs(float(metrics.mred(s_hat, s)) - scale) < 1e-3

@@ -1,0 +1,238 @@
+"""Per-architecture smoke tests (reduced configs) + serving parity + CNNs.
+
+One test per assigned architecture: instantiate the REDUCED same-family
+config, run one forward/train step on CPU, assert output shapes and no
+NaNs — per the assignment. Full configs are exercised only by the dry-run.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES, ShapeSpec, shape_applicable
+from repro.configs.registry import ARCHS, get_config, list_archs, smoke_config
+from repro.models import cnn
+from repro.models.api import build_model
+
+TRAIN = SHAPES["train_4k"]
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+class TestArchSmoke:
+    def test_train_step(self, key, arch):
+        cfg = smoke_config(get_config(arch))
+        model = build_model(cfg)
+        params = model.init(key)
+        batch = model.make_batch(key, TRAIN, batch_override=2,
+                                 seq_override=32)
+        loss, metrics = model.loss(params, batch)
+        assert loss.shape == ()
+        assert bool(jnp.isfinite(loss)), arch
+        grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+        leaves = jax.tree.leaves(grads)
+        assert leaves, arch
+        assert all(bool(jnp.all(jnp.isfinite(g.astype(jnp.float32))))
+                   for g in leaves), arch
+
+    def test_forward_shapes(self, key, arch):
+        cfg = smoke_config(get_config(arch))
+        model = build_model(cfg)
+        params = model.init(key)
+        batch = model.make_batch(key, TRAIN, batch_override=2,
+                                 seq_override=32)
+        logits = model.forward(params, batch)
+        if cfg.family == "encoder":
+            expect_s = batch["frames"].shape[1]
+        elif cfg.family == "vlm":
+            expect_s = batch["tokens"].shape[1]
+        else:
+            expect_s = batch["tokens"].shape[1]
+        assert logits.shape == (2, expect_s, cfg.vocab), arch
+        assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32)))), arch
+
+
+@pytest.mark.parametrize("arch", [a for a in sorted(ARCHS)
+                                  if ARCHS[a].family != "encoder"])
+def test_prefill_decode_matches_forward(key, arch):
+    """Serving correctness: prefill + stepwise decode reproduce the full
+    forward logits (exact for attention archs; bf16-state drift tolerance
+    for SSM/hybrid)."""
+    cfg = smoke_config(get_config(arch))
+    model = build_model(cfg)
+    params = model.init(key)
+    B, S = 2, 24
+    batch = model.make_batch(key, SHAPES["prefill_32k"], batch_override=B,
+                             seq_override=S)
+    logits_full = model.forward(params, batch)
+    n_text = batch["tokens"].shape[1]
+    n_gen = 4
+    pre = dict(batch)
+    pre["tokens"] = batch["tokens"][:, : n_text - n_gen]
+    lg, cache = model.prefill(params, pre, max_len=S)
+    errs = [float(jnp.max(jnp.abs(lg[:, -1] -
+                                  logits_full[:, n_text - n_gen - 1])))]
+    for t in range(n_gen):
+        tok = batch["tokens"][:, n_text - n_gen + t][:, None]
+        lg, cache = model.decode_step(params, cache, tok)
+        errs.append(float(jnp.max(jnp.abs(
+            lg[:, 0] - logits_full[:, n_text - n_gen + t]))))
+    # bf16 compute: logits carry ~bf16 eps (≈8e-3) × O(10) magnitudes of
+    # reassociation drift between the flash (chunked) and decode (full)
+    # softmax paths; SSM/hybrid additionally carry bf16 recurrent state.
+    tol = 0.15 if cfg.family in ("ssm", "hybrid") else 0.05
+    assert max(errs) < tol, (arch, errs)
+
+
+def test_int8_kv_cache_decode_parity(key):
+    """Quantized KV cache (the decode memory-roofline lever): decode stays
+    within int8 quantization noise of the bf16 forward."""
+    import dataclasses
+
+    cfg = dataclasses.replace(smoke_config(get_config("llama3-8b")),
+                              kv_cache_dtype="int8")
+    model = build_model(cfg)
+    params = model.init(key)
+    B, S, n_gen = 2, 24, 3
+    batch = model.make_batch(key, SHAPES["prefill_32k"], batch_override=B,
+                             seq_override=S)
+    logits_full = model.forward(params, batch)
+    n_text = batch["tokens"].shape[1]
+    pre = dict(batch)
+    pre["tokens"] = batch["tokens"][:, : n_text - n_gen]
+    lg, cache = model.prefill(params, pre, max_len=S)
+    # quantized layout: int8 K/V + f32 scales live in the cache pytree
+    assert "k_scale" in str(jax.tree_util.tree_structure(cache))
+    assert cache["layers"]["k"].dtype == jnp.int8
+    errs = []
+    for t in range(n_gen):
+        tok = batch["tokens"][:, n_text - n_gen + t][:, None]
+        lg, cache = model.decode_step(params, cache, tok)
+        errs.append(float(jnp.max(jnp.abs(
+            lg[:, 0] - logits_full[:, n_text - n_gen + t]))))
+    assert max(errs) < 0.25, errs
+
+
+def test_skip_rules_match_assignment():
+    """The DESIGN.md §5 skip table, executable."""
+    expected_skips = {
+        ("hubert-xlarge", "decode_32k"), ("hubert-xlarge", "long_500k"),
+        ("qwen1.5-32b", "long_500k"), ("yi-34b", "long_500k"),
+        ("llama3-8b", "long_500k"), ("llama3-405b", "long_500k"),
+        ("llava-next-34b", "long_500k"),
+        ("llama4-maverick-400b-a17b", "long_500k"),
+        ("moonshot-v1-16b-a3b", "long_500k"),
+    }
+    actual = set()
+    for arch, cfg in ARCHS.items():
+        for sname, shape in SHAPES.items():
+            ok, _ = shape_applicable(cfg, shape)
+            if not ok:
+                actual.add((arch, sname))
+    assert actual == expected_skips
+    # → 40 − 9 skips = 31 valid cells… plus the two SSM long_500k runs
+    assert len(ARCHS) * len(SHAPES) - len(actual) == 31
+
+
+def test_exact_assigned_configs():
+    """The registry carries the EXACT assigned dimensions."""
+    c = get_config("qwen1.5-32b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab, c.qkv_bias) == (64, 5120, 40, 40, 27392, 152064, True)
+    c = get_config("yi-34b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (60, 7168, 56, 8, 20480, 64000)
+    c = get_config("llama3-405b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (126, 16384, 128, 8, 53248, 128256)
+    c = get_config("llama4-maverick-400b-a17b")
+    assert (c.n_experts, c.top_k, c.vocab, c.d_ff) == (128, 1, 202048, 8192)
+    c = get_config("moonshot-v1-16b-a3b")
+    assert (c.n_experts, c.top_k, c.vocab, c.d_ff) == (64, 6, 163840, 1408)
+    c = get_config("mamba2-370m")
+    assert (c.n_layers, c.d_model, c.d_state, c.vocab) == (48, 1024, 128,
+                                                           50280)
+    c = get_config("zamba2-1.2b")
+    assert (c.n_layers, c.d_model, c.d_state, c.vocab) == (38, 2048, 64,
+                                                           32000)
+    c = get_config("hubert-xlarge")
+    assert (c.n_layers, c.d_model, c.n_heads, c.d_ff, c.vocab) == \
+        (48, 1280, 16, 5120, 504)
+
+
+def test_param_counts_in_expected_range():
+    """Sanity: analytic parameter counts match the model names."""
+    expect = {
+        "llama3-8b": (7e9, 9e9),
+        "llama3-405b": (380e9, 420e9),
+        "yi-34b": (32e9, 36e9),
+        # MHA (kv=40) + 152k vocab push the assigned dims slightly above
+        # the "32b" name: 35.2B
+        "qwen1.5-32b": (30e9, 37e9),
+        "mamba2-370m": (0.3e9, 0.45e9),
+        "zamba2-1.2b": (1.0e9, 1.5e9),
+        "hubert-xlarge": (0.9e9, 1.1e9),
+        # NOTE: the *assigned* dims (48L × 128 experts × d_ff 8192 each)
+        # give 778B total / 11B active — the HF "400b-a17b" card uses a
+        # different layer mix (interleaved dense/MoE); we implement the
+        # assignment's numbers and document the delta in EXPERIMENTS.md.
+        "llama4-maverick-400b-a17b": (700e9, 830e9),
+        "moonshot-v1-16b-a3b": (26e9, 30e9),  # 64e × d_ff 1408 as assigned
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, (arch, n)
+    active = get_config("llama4-maverick-400b-a17b").active_param_count()
+    assert 9e9 <= active <= 14e9, active  # "a17b" under assigned dims
+    active = get_config("moonshot-v1-16b-a3b").active_param_count()
+    assert 2e9 <= active <= 5e9, active  # "a3b"
+
+
+class TestCNN:
+    def test_lenet5_forward(self, key):
+        params = cnn.init_lenet5(key)
+        x = jax.random.normal(key, (2, 32, 32, 1))
+        logits = cnn.lenet5_forward(params, x)
+        assert logits.shape == (2, 10)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_alexnet_forward(self, key):
+        params = cnn.init_alexnet(key)
+        x = jax.random.normal(key, (1, 227, 227, 3))
+        logits = cnn.alexnet_forward(params, x)
+        assert logits.shape == (1, 1000)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_im2col_conv_matches_lax_conv(self, key):
+        """The DHM-style explicit-MOA conv equals XLA's fused conv."""
+        from jax import lax
+
+        kx, kw = jax.random.split(key)
+        x = jax.random.normal(kx, (2, 16, 16, 3))
+        w = jax.random.normal(kw, (8, 3, 5, 5))
+        b = jnp.zeros((8,))
+        got = cnn.im2col_conv(x, w, b, stride=1)
+        want = lax.conv_general_dilated(
+            x, w, (1, 1), "VALID",
+            dimension_numbers=("NHWC", "OIHW", "NHWC"))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_im2col_conv_serial_strategy(self, key):
+        from repro.core.moa import ReductionStrategy
+
+        kx, kw = jax.random.split(key)
+        x = jax.random.normal(kx, (1, 12, 12, 3))
+        w = jax.random.normal(kw, (4, 3, 3, 3))
+        b = jnp.zeros((4,))
+        tree = cnn.im2col_conv(x, w, b, stride=1)
+        serial = cnn.im2col_conv(
+            x, w, b, stride=1,
+            strategy=ReductionStrategy(kind="serial", chunk=8))
+        np.testing.assert_allclose(np.asarray(serial), np.asarray(tree),
+                                   rtol=1e-4, atol=1e-4)
