@@ -5,11 +5,13 @@ burying the accumulator's savings at every cluster size — the paper's first
 negative result.
 
 TPU side (the inversion): the *same schedule* — serial accumulation over
-operand clusters — is measured via the Pallas ``moa_reduce`` kernel (grid-
-serialized accumulator; the DMA pipeline is the hard-wired serializer)
-against the one-shot jnp reduction. On TPU serialization costs nothing and
-bounds the working set; we report the kernel-vs-oracle timing ratio and
-the VMEM working-set reduction.
+operand clusters — is measured through the registry
+(``resolve("serial?backend=pallas&chunk=512")`` → the Pallas ``moa_reduce``
+kernel: grid-serialized accumulator; the DMA pipeline is the hard-wired
+serializer) against the one-shot ``tree`` strategy. On TPU serialization
+costs nothing and bounds the working set; we report the kernel-vs-oracle
+timing ratio and the VMEM working-set reduction straight from
+``strategy.cost``.
 """
 
 from __future__ import annotations
@@ -21,7 +23,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import cost_model
-from repro.kernels import ops, ref
+from repro.kernels import ref
+from repro.moa import resolve
 
 __all__ = ["run"]
 
@@ -56,16 +59,24 @@ def run(verbose: bool = True):
             print(f"{n:6d} {tree:7d} {ser:10d} {acc:6d} {serial:7d} "
                   f"{'SERIAL' if serial < tree else 'tree':>9s}")
 
-    # TPU inversion: serialized Pallas reduction vs one-shot oracle
+    # TPU inversion: serialized Pallas reduction vs one-shot oracle, both
+    # resolved from the strategy registry
+    serial = resolve("serial?backend=pallas&chunk=512")
+    tree = resolve("tree")
     x = jax.random.normal(jax.random.PRNGKey(0), (4096, 256), jnp.float32)
-    t_kernel = _time(lambda a: ops.moa_reduce(a, block_n=512), x)
+    t_kernel = _time(lambda a: serial.sum(a, axis=0), x)
+    # timing oracle stays the fused one-shot reduction (XLA's hard adder
+    # tree) — tree.sum's explicit per-level jnp path fixes reassociation
+    # order for parity tests but is a multi-dispatch eager loop, not a fair
+    # latency baseline
     t_oracle = _time(lambda a: jnp.sum(a, axis=0), x)
-    got = np.asarray(ops.moa_reduce(x, block_n=512))
+    got = np.asarray(serial.sum(x, axis=0))
     np.testing.assert_allclose(got, np.asarray(ref.moa_reduce_ref(x)),
                                rtol=1e-5, atol=1e-4)
-    # working set: serial processes block_n×block_f at a time vs full array
-    ws_serial = 512 * 256 * 4
-    ws_tree = 4096 * 256 * 4
+    # working set straight from the strategies' own cost model
+    # (live operands per sequential step × feature width × f32)
+    ws_serial = serial.cost(4096, "float32")["working_set_operands"] * 256 * 4
+    ws_tree = tree.cost(4096, "float32")["working_set_operands"] * 256 * 4
     if verbose:
         print(f"# TPU analogue (interpret-mode timing, structural VMEM):")
         print(f"#   serialized kernel {t_kernel:.0f}us vs one-shot "

@@ -1,14 +1,51 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived``
 # CSV (plus verbose per-benchmark detail above each block).
+#
+#   PYTHONPATH=src python -m benchmarks.run                       # full suite
+#   PYTHONPATH=src python -m benchmarks.run --list-strategies     # registry
+#   PYTHONPATH=src python -m benchmarks.run --strategy "serial?chunk=256"
+#
+# ``--strategy`` runs the whole suite under a ``repro.moa.moa_scope``
+# override, so every MOA-routed contraction (model losses included) uses
+# the given spec regardless of the per-benchmark defaults.
 
 from __future__ import annotations
 
+import argparse
+import contextlib
 import sys
 
 
-def main() -> None:
+def _list_strategies() -> None:
+    from repro.moa import available_strategies, get_strategy_class
+
+    print("registered MOA strategies (spec grammar: name?key=val&key=val):")
+    for name in available_strategies():
+        cls = get_strategy_class(name)
+        doc = (cls.__doc__ or "").strip().splitlines()[0]
+        print(f"  {name:<8s} {doc}")
+        print(f"  {'':<8s}   bench variants: {', '.join(cls.bench_specs())}")
+
+
+def main(argv=None) -> None:
+    parser = argparse.ArgumentParser(
+        description="Paper table/figure benchmarks (MOA scheduling study)")
+    parser.add_argument(
+        "--strategy", metavar="SPEC", default=None,
+        help="repro.moa spec string; run all benchmarks under "
+             "moa_scope(SPEC), e.g. 'serial?chunk=256' or 'tree'")
+    parser.add_argument(
+        "--list-strategies", action="store_true",
+        help="print the strategy registry and exit")
+    args = parser.parse_args(argv)
+
+    if args.list_strategies:
+        _list_strategies()
+        return
+
     from benchmarks import (fig4_serialization, fig5_loa, moa_strategies,
                             roofline, table1_moa_counts)
+    from repro.moa import moa_scope, resolve
 
     benches = [
         ("table1_moa_counts", table1_moa_counts.run),
@@ -17,15 +54,20 @@ def main() -> None:
         ("moa_strategies", moa_strategies.run),
         ("roofline", roofline.run),
     ]
+    scope = (moa_scope(resolve(args.strategy)) if args.strategy
+             else contextlib.nullcontext())
+    if args.strategy:
+        print(f"# moa_scope override: {resolve(args.strategy).spec}")
     results = []
-    for name, fn in benches:
-        print(f"\n=== {name} " + "=" * (68 - len(name)))
-        try:
-            res = fn(verbose=True)
-            results.append((name, res["us_per_call"], res["derived"]))
-        except Exception as e:  # pragma: no cover
-            results.append((name, float("nan"), f"ERROR:{type(e).__name__}"))
-            print(f"[bench] {name} failed: {e}", file=sys.stderr)
+    with scope:
+        for name, fn in benches:
+            print(f"\n=== {name} " + "=" * (68 - len(name)))
+            try:
+                res = fn(verbose=True)
+                results.append((name, res["us_per_call"], res["derived"]))
+            except Exception as e:  # pragma: no cover
+                results.append((name, float("nan"), f"ERROR:{type(e).__name__}"))
+                print(f"[bench] {name} failed: {e}", file=sys.stderr)
 
     print("\nname,us_per_call,derived")
     for name, us, derived in results:

@@ -16,7 +16,9 @@ impact on real dot products (LeNet-5 conv1).
 import os
 import sys
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, _ROOT)                      # benchmarks package
+sys.path.insert(0, os.path.join(_ROOT, "src"))
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +26,6 @@ import numpy as np
 
 from benchmarks import fig4_serialization, fig5_loa, table1_moa_counts
 from repro.core import metrics
-from repro.core.moa import ReductionStrategy
 from repro.core.scm import quantize_symmetric
 from repro.models import cnn
 
@@ -43,13 +44,12 @@ def loa_conv_end_to_end():
     wq = jnp.asarray(np.abs(quantize_symmetric(np.asarray(w), 4)),
                      jnp.int32)
     exact = cnn.im2col_conv(xq, wq, jnp.zeros((8,), jnp.int32), stride=1,
-                            strategy=ReductionStrategy(kind="tree",
-                                                       accum_dtype=jnp.int32))
+                            strategy="tree")
     print(f"{'l':>3s} {'MRED':>9s}")
     for l in (0, 2, 4, 6):
         approx = cnn.im2col_conv(
             xq, wq, jnp.zeros((8,), jnp.int32), stride=1,
-            strategy=ReductionStrategy(kind="loa", approx_bits=l, width=8))
+            strategy=f"loa?approx_bits={l}&width=8")
         m = float(metrics.mred(approx, exact))
         print(f"{l:3d} {m:9.5f}")
     print("→ graceful error growth, exactly as Fig. 5 predicts — but on "

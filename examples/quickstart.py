@@ -27,8 +27,8 @@ def main():
     cfg = smoke_config(get_config("llama3-8b"))
     print(f"arch: {cfg.name} ({cfg.n_layers}L d={cfg.d_model}, "
           f"{cfg.param_count()/1e3:.0f}k params)")
-    print(f"MOA strategy: {cfg.moa_kind} (cluster n_c={cfg.moa_chunk}) — "
-          "the paper's §3.1 knob, framework-wide")
+    print(f"MOA strategy: {cfg.moa_strategy.spec} — the paper's §3.1 knob, "
+          "resolved from the repro.moa registry framework-wide")
 
     steps = 60
     with tempfile.TemporaryDirectory() as ckpt_dir:

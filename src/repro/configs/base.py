@@ -3,13 +3,23 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Mapping, Optional, Tuple, Union
 
 import jax.numpy as jnp
 
-from repro.core.moa import ReductionStrategy
+from repro.moa import MOAStrategy, resolve
 
-__all__ = ["ModelConfig", "ShapeSpec", "SHAPES", "shape_applicable"]
+__all__ = ["ModelConfig", "ShapeSpec", "SHAPES", "MOA_SITES",
+           "shape_applicable"]
+
+#: call sites that consult a per-site MOA override in ``moa_overrides``
+#: (attention q/k/v/out projections; dense-MLP up/down; MoE router/experts/
+#: combine). Grows as more call sites gain strategy routing — validation
+#: rejects sites nothing would read.
+MOA_SITES = ("attention", "mlp", "moe")
+
+#: ``moa`` / ``moa_overrides`` values: a spec string or a strategy instance
+MOASpec = Union[str, MOAStrategy]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,10 +59,14 @@ class ModelConfig:
     # embeddings
     tie_embeddings: bool = False
     max_position: int = 1 << 20
-    # MOA strategy (the paper's knob)
-    moa_kind: str = "serial"
-    moa_chunk: int = 4096
-    loa_bits: int = 0
+    # MOA strategy (the paper's knob): a repro.moa spec string (e.g.
+    # "serial?chunk=4096", "tree", "loa?approx_bits=4&width=8") or an
+    # MOAStrategy instance, plus optional per-site overrides keyed by
+    # MOA_SITES (e.g. moa_overrides={"attention": "tree", "mlp": ...}).
+    # Overrides may be given as a dict; they are normalized to a sorted
+    # tuple of (site, spec) pairs so the config stays hashable.
+    moa: MOASpec = "serial?chunk=4096"
+    moa_overrides: Tuple[Tuple[str, MOASpec], ...] = ()
     # serving
     kv_cache_dtype: str = "bfloat16"   # bfloat16 | int8 (quantized cache)
     # context-parallel attention (Ulysses-style): attention computed over
@@ -65,11 +79,30 @@ class ModelConfig:
     param_dtype: str = "float32"
     compute_dtype: str = "bfloat16"
 
+    def __post_init__(self):
+        overrides = self.moa_overrides
+        if isinstance(overrides, Mapping):
+            overrides = tuple(sorted(overrides.items()))
+            object.__setattr__(self, "moa_overrides", overrides)
+        for site, spec in overrides:
+            if site not in MOA_SITES:
+                raise ValueError(f"unknown MOA site {site!r}; "
+                                 f"expected one of {MOA_SITES}")
+            resolve(spec)   # validate eagerly — typos fail at config time
+        resolve(self.moa)
+
     # ---- derived ----------------------------------------------------------
     @property
-    def moa_strategy(self) -> ReductionStrategy:
-        return ReductionStrategy(kind=self.moa_kind, chunk=self.moa_chunk,
-                                 approx_bits=self.loa_bits)
+    def moa_strategy(self) -> MOAStrategy:
+        """The model-wide default strategy (``moa_for`` adds per-site)."""
+        return resolve(self.moa)
+
+    def moa_for(self, site: str) -> MOAStrategy:
+        """Strategy for a call site, honouring ``moa_overrides``."""
+        for key, spec in self.moa_overrides:
+            if key == site:
+                return resolve(spec)
+        return resolve(self.moa)
 
     @property
     def d_inner(self) -> int:

@@ -70,7 +70,7 @@ def smoke_config(cfg: ModelConfig) -> ModelConfig:
         q_chunk=16,
         kv_chunk=16,
         ssd_chunk=8,
-        moa_chunk=32,
+        moa="serial?chunk=32",
         remat="none",
         max_position=2048,
         name=cfg.name + "-smoke",

@@ -1,62 +1,56 @@
-"""Multi-Operand Adder (MOA) reduction strategies — the paper's core object.
+"""DEPRECATED shim — the MOA API moved to :mod:`repro.moa`.
 
-The paper (§2) identifies the MOA — a reduction node with hundreds to
-thousands of operands — as the dominant resource sink of a direct-mapped CNN,
-and evaluates two scheduling strategies for it:
+The string-kind :class:`ReductionStrategy` and its ``if/elif`` dispatch were
+replaced by the registry-backed strategy classes in :mod:`repro.moa`
+(``resolve("serial?chunk=512")``, ``TreeStrategy``, ``SerialStrategy``,
+``LOAStrategy``) with jnp/pallas backend dispatch. This module keeps the old
+surface importable and working:
 
-  * ``tree``   — the synthesis-tool default: a spatial binary adder tree
-                 (n-1 two-operand adders). On TPU this corresponds to a
-                 one-shot reduction that materializes all partial products
-                 (maximal working set, minimal sequentialization).
-  * ``serial`` — §3.1: time-multiplex a *cluster* of ``n_c`` operands into a
-                 single accumulator. On FPGA this failed (the serializer costs
-                 more fabric than it saves). On TPU the serializer is the
-                 hard-wired DMA/address path, so serial accumulation — a
-                 ``lax.scan`` carrying an f32 accumulator, or a Pallas grid
-                 loop — is the *native* idiom. ``chunk`` plays the paper's
-                 ``n_c`` role (the clock-domain ratio f_c = n_c · f_0 has no
-                 TPU analogue; grid sequentialization replaces it).
-  * ``loa``    — §3.2: approximate the adders (Lower-part-OR). Integer paths
-                 only; faithful bitwise semantics from :mod:`repro.core.loa`.
+  * ``ReductionStrategy`` still constructs and validates exactly as before;
+    ``.to_strategy()`` converts it to the new API (and every new-API entry
+    point accepts legacy instances directly).
+  * ``moa_sum`` / ``moa_dot`` / ``chunked_matmul`` delegate to the new
+    engine; ``TREE`` / ``SERIAL`` remain the old defaults.
 
-Every dot-product-bearing layer in the framework takes a
-:class:`ReductionStrategy`, making the paper's design space a first-class
-config knob (``model.moa.kind``, ``model.moa.chunk``).
+Importing this module emits a :class:`DeprecationWarning`. Migrate::
 
-All float variants are exact up to reassociation; tests assert
-``serial == tree == jnp.sum`` within dtype tolerance and exact equality for
-integer dtypes.
+    from repro.core.moa import ReductionStrategy, moa_dot      # old
+    y = moa_dot(a, b, strategy=ReductionStrategy(kind="serial", chunk=512))
+
+    from repro.moa import resolve                               # new
+    y = resolve("serial?chunk=512").dot(a, b)
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
-from repro.core import loa as loa_lib
+from repro import moa as _moa
+from repro.moa.backends import chunked_matmul  # noqa: F401  (re-export)
 
 __all__ = ["ReductionStrategy", "moa_sum", "moa_dot", "chunked_matmul", "TREE", "SERIAL"]
+
+warnings.warn(
+    "repro.core.moa is deprecated; use repro.moa (e.g. "
+    "`repro.moa.resolve('serial?chunk=512')`) instead",
+    DeprecationWarning, stacklevel=2)
 
 
 @dataclasses.dataclass(frozen=True)
 class ReductionStrategy:
-    """How a large-fan-in reduction is scheduled.
+    """Legacy string-kind strategy description (see :mod:`repro.moa`).
 
     Attributes:
       kind: ``"tree"`` | ``"serial"`` | ``"loa"``.
-      chunk: serialization cluster size ``n_c`` (contraction-dim block). Only
-        meaningful for ``serial``; the reduction processes ``chunk`` operands
-        per sequential step, accumulating in ``accum_dtype``.
-      accum_dtype: accumulator precision. The MXU hard-wires f32 accumulation
-        — setting bf16 here models the paper's "approximate adder" at the
-        precision level and is surfaced in benchmarks as *costing nothing
-        less* (same op count), the TPU analogue of the flat-ALM result.
-      approx_bits: LOA ``l`` (low bits OR-approximated); ``loa`` kind only.
-      width: LOA operand bit-width ``b``; ``loa`` kind only.
+      chunk: serialization cluster size ``n_c`` (``serial`` only).
+      accum_dtype: accumulator precision (float kinds).
+      approx_bits: LOA ``l`` (``loa`` only).
+      width: LOA operand bit-width ``b`` (``loa`` only).
     """
 
     kind: str = "serial"
@@ -71,145 +65,24 @@ class ReductionStrategy:
         if self.chunk < 1:
             raise ValueError("chunk must be >= 1")
 
+    def to_strategy(self) -> "_moa.MOAStrategy":
+        """Convert to the new registry-backed API."""
+        return _moa.resolve(self)
+
 
 TREE = ReductionStrategy(kind="tree")
 SERIAL = ReductionStrategy(kind="serial")
 
 
-def _tree_sum(x: jax.Array, accum_dtype) -> jax.Array:
-    """Explicit balanced binary adder tree over axis 0.
-
-    Structurally mirrors Fig. 1's adder tree: ``ceil(log2 n)`` levels of
-    pairwise adds, odd leftovers passing through. For floats this fixes the
-    reassociation order to the hardware tree's order.
-    """
-    x = x.astype(accum_dtype)
-    while x.shape[0] > 1:
-        m = x.shape[0]
-        half = m // 2
-        paired = x[: 2 * half : 2] + x[1 : 2 * half : 2]
-        if m % 2:
-            paired = jnp.concatenate([paired, x[2 * half :]], axis=0)
-        x = paired
-    return x[0]
-
-
-def _serial_sum(x: jax.Array, chunk: int, accum_dtype) -> jax.Array:
-    """§3.1 serialized MOA: scan over clusters of ``chunk`` operands.
-
-    The carried accumulator lives in ``accum_dtype`` — the TPU analogue of
-    the single accumulator in the fast clock domain. Ragged tails are
-    zero-padded (padding is exact for addition).
-    """
-    n = x.shape[0]
-    chunk = min(chunk, n)
-    n_chunks = -(-n // chunk)
-    pad = n_chunks * chunk - n
-    if pad:
-        x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
-    x = x.reshape((n_chunks, chunk) + x.shape[1:]).astype(accum_dtype)
-
-    def body(acc, block):
-        # In-cluster reduction is a tree (the paper's serializer feeds the
-        # accumulator one *cluster* at a time); across clusters we serialize.
-        return acc + jnp.sum(block, axis=0), None
-
-    init = jnp.zeros(x.shape[2:], accum_dtype)
-    acc, _ = lax.scan(body, init, x)
-    return acc
-
-
 def moa_sum(operands: jax.Array, *, axis: int = -1,
             strategy: ReductionStrategy = SERIAL) -> jax.Array:
     """Reduce ``operands`` over ``axis`` with the configured MOA strategy."""
-    x = jnp.moveaxis(jnp.asarray(operands), axis, 0)
-    if strategy.kind == "tree":
-        return _tree_sum(x, strategy.accum_dtype)
-    if strategy.kind == "serial":
-        return _serial_sum(x, strategy.chunk, strategy.accum_dtype)
-    if strategy.kind == "loa":
-        if not jnp.issubdtype(x.dtype, jnp.integer):
-            raise TypeError("LOA strategy requires integer operands")
-        return loa_lib.loa_sum(
-            x, approx_bits=strategy.approx_bits, width=strategy.width, axis=0
-        )
-    raise AssertionError(strategy.kind)
-
-
-def chunked_matmul(a: jax.Array, b: jax.Array, *, chunk: int,
-                   accum_dtype=jnp.float32,
-                   out_dtype: Optional[jnp.dtype] = None) -> jax.Array:
-    """K-blocked matmul: ``a @ b`` with a serialized-MOA contraction.
-
-    ``a: (..., M, K)``, ``b: (K, N)``. The contraction dimension is processed
-    ``chunk`` operands at a time by a ``lax.scan`` carrying an f32
-    accumulator — §3.1 realized on hardware whose "serializer" (DMA) and
-    "accumulator" (MXU) are hard-wired. Differentiable (scan has a transpose
-    rule), so it is usable in training.
-    """
-    k = a.shape[-1]
-    if b.shape[0] != k:
-        raise ValueError(f"contraction mismatch: {a.shape} @ {b.shape}")
-    out_dtype = out_dtype or a.dtype
-    chunk = min(chunk, k)
-    n_chunks = -(-k // chunk)
-    pad = n_chunks * chunk - k
-    if pad:
-        a = jnp.concatenate([a, jnp.zeros(a.shape[:-1] + (pad,), a.dtype)], axis=-1)
-        b = jnp.concatenate([b, jnp.zeros((pad,) + b.shape[1:], b.dtype)], axis=0)
-    a_blocks = jnp.moveaxis(
-        a.reshape(a.shape[:-1] + (n_chunks, chunk)), -2, 0
-    )  # (n_chunks, ..., M, chunk)
-    b_blocks = b.reshape((n_chunks, chunk) + b.shape[1:])
-
-    def body(acc, blocks):
-        a_blk, b_blk = blocks
-        acc = acc + jnp.matmul(
-            a_blk, b_blk, preferred_element_type=accum_dtype
-        ).astype(accum_dtype)
-        return acc, None
-
-    init = jnp.zeros(a_blocks.shape[1:-1] + (b.shape[-1],), accum_dtype)
-    acc, _ = lax.scan(body, init, (a_blocks, b_blocks))
-    return acc.astype(out_dtype)
+    return _moa.resolve(strategy).sum(operands, axis=axis)
 
 
 def moa_dot(a: jax.Array, b: jax.Array, *,
             strategy: ReductionStrategy = SERIAL,
             out_dtype: Optional[jnp.dtype] = None) -> jax.Array:
-    """Matrix product whose contraction is scheduled per ``strategy``.
-
-    ``tree``   → one-shot ``jnp.matmul`` with f32 accumulation (XLA emits the
-                 spatial reduction; on the MXU this is the hard adder tree).
-    ``serial`` → :func:`chunked_matmul` with ``strategy.chunk``.
-    ``loa``    → integer partial products reduced through LOA adders
-                 (int8 × int8 → int32 with approximate accumulation). Used by
-                 the quantized path and the Fig.-5 end-to-end experiments.
-    """
+    """Matrix product whose contraction is scheduled per ``strategy``."""
     out_dtype = out_dtype or a.dtype
-    if strategy.kind == "tree":
-        return jnp.matmul(
-            a, b, preferred_element_type=strategy.accum_dtype
-        ).astype(out_dtype)
-    if strategy.kind == "serial":
-        if a.shape[-1] <= strategy.chunk:
-            return jnp.matmul(
-                a, b, preferred_element_type=strategy.accum_dtype
-            ).astype(out_dtype)
-        return chunked_matmul(
-            a, b, chunk=strategy.chunk, accum_dtype=strategy.accum_dtype,
-            out_dtype=out_dtype,
-        )
-    if strategy.kind == "loa":
-        if not (jnp.issubdtype(a.dtype, jnp.integer)
-                and jnp.issubdtype(b.dtype, jnp.integer)):
-            raise TypeError("LOA moa_dot requires integer operands")
-        # Partial products (…, M, K, N) reduced over K through the LOA tree.
-        partials = a[..., None].astype(jnp.int32) * b.astype(jnp.int32)
-        return loa_lib.loa_sum(
-            partials,
-            approx_bits=strategy.approx_bits,
-            width=strategy.width,
-            axis=-2,
-        ).astype(out_dtype)
-    raise AssertionError(strategy.kind)
+    return _moa.resolve(strategy).dot(a, b, out_dtype=out_dtype)

@@ -15,6 +15,14 @@ Conventions: 1 MAC = 2 FLOPs; all values are **per device per step** given
 the mesh meta; ring collectives move ``2·B·(k−1)/k`` (all-reduce) or
 ``B·(k−1)/k`` (all-gather / reduce-scatter) bytes per device for a
 per-device-visible buffer of ``B`` bytes over a group of ``k``.
+
+MOA scheduling: the dense-contraction FLOPs are **not** assumed to be a
+one-shot matmul — each site queries its configured
+:meth:`repro.moa.MOAStrategy.cost` and scales by the strategy's hardware
+ops per add. Exact strategies (tree, serial — the paper's TPU result:
+scheduling is free) multiply by exactly 1.0; approximate strategies pay
+(LOA: ~6 VPU ops per fold where the hard add is one — the §3.2 inversion),
+surfaced as a per-component FLOPs increase.
 """
 
 from __future__ import annotations
@@ -146,9 +154,29 @@ def _ssd_layer_flops(cfg: ModelConfig, T: float, decode: bool) -> Dict[str, floa
     return out
 
 
+def _moa_flops_multiplier(cfg: ModelConfig, site: str,
+                          n_operands: int) -> float:
+    """Strategy-scheduled FLOPs over exact one-shot FLOPs for one MOA.
+
+    Queries ``cfg.moa_for(site).cost(...)``: an ``n``-operand dot-product
+    output costs ``n`` mults + ``n-1`` adds exactly; the strategy reports
+    what its adds actually cost on the substrate (LOA: ~6 ops each).
+    """
+    if n_operands < 2:
+        return 1.0
+    cost = cfg.moa_for(site).cost(n_operands, cfg.compute_dtype)
+    exact = 2.0 * n_operands - 1.0
+    return float(cost["flops"]) / exact
+
+
 def forward_flops(cfg: ModelConfig, *, tokens: float, s_attn: float,
                   decode: bool = False) -> Dict[str, float]:
-    """Global FLOPs of one forward pass over ``tokens`` total tokens."""
+    """Global FLOPs of one forward pass over ``tokens`` total tokens.
+
+    Per-site MOA strategies scale their components (see
+    :func:`_moa_flops_multiplier`); with the default exact strategies the
+    multipliers are identically 1.0.
+    """
     comp: Dict[str, float] = {}
     L = cfg.n_layers
 
@@ -176,6 +204,20 @@ def forward_flops(cfg: ModelConfig, *, tokens: float, s_attn: float,
         logits_tokens = tokens * max(
             1 - cfg.n_patches / max(s_attn, 1), 0.05)
     comp["logits"] = 2 * logits_tokens * cfg.d_model * cfg.vocab
+
+    # ---- MOA strategy scheduling costs (per-site cfg.moa_for query) --------
+    m_attn = _moa_flops_multiplier(cfg, "attention", cfg.d_model)
+    for key in ("attn_qkv", "attn_out"):
+        if key in comp:
+            comp[key] *= m_attn
+    m_mlp = _moa_flops_multiplier(cfg, "mlp", max(cfg.d_ff, cfg.d_model))
+    if "mlp" in comp:
+        comp["mlp"] *= m_mlp
+    if "moe_experts" in comp:
+        # moe_forward routes the router contraction (d_model operands) and
+        # the expert matmuls (d_ff) through the same "moe" site strategy
+        comp["moe_experts"] *= _moa_flops_multiplier(cfg, "moe", cfg.d_ff)
+        comp["moe_router"] *= _moa_flops_multiplier(cfg, "moe", cfg.d_model)
     return comp
 
 

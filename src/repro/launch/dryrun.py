@@ -138,8 +138,12 @@ def apply_variant(cfg: ModelConfig, variant: str) -> ModelConfig:
             updates["kv_cache_dtype"] = "int8"
         elif item == "attn_cp":
             updates["attn_cp"] = True
+        elif item.startswith("moa="):
+            # full repro.moa spec string, e.g. moa=serial?chunk=512
+            updates["moa"] = item.split("=", 1)[1]
         elif item.startswith("moa_chunk="):
-            updates["moa_chunk"] = int(item.split("=")[1])
+            # legacy alias for the serialization cluster size
+            updates["moa"] = f"serial?chunk={int(item.split('=')[1])}"
         elif item.startswith("kv_chunk="):
             updates["kv_chunk"] = int(item.split("=")[1])
         elif item.startswith("q_chunk="):

@@ -143,13 +143,31 @@ def flash_attention(q, k, v, *, causal: bool = True, q_chunk: int = 256,
     return o[:, :Sq].astype(q.dtype)
 
 
+def _moa_dot(x, w, *, strategy, compute_dtype):
+    """Dense projection routed through the MOA engine (scope-aware).
+
+    The d_model contraction of every attention projection is itself an MOA;
+    delegates to :func:`repro.layers.linear.project` so strategy dispatch
+    (and the f32-accumulating fallback) lives in exactly one place.
+    """
+    from repro.layers.linear import project
+
+    return project({"w": w}, x, strategy=strategy,
+                   compute_dtype=compute_dtype)
+
+
 def _project_qkv(params: Params, x, *, n_heads, n_kv_heads, head_dim,
-                 compute_dtype):
+                 compute_dtype, strategy=None):
     B, S, _ = x.shape
     x = x.astype(compute_dtype)
-    q = x @ params["wq"].astype(compute_dtype)
-    k = x @ params["wk"].astype(compute_dtype)
-    v = x @ params["wv"].astype(compute_dtype)
+
+    def dot(w):
+        return _moa_dot(x, w.astype(compute_dtype), strategy=strategy,
+                        compute_dtype=compute_dtype)
+
+    q = dot(params["wq"])
+    k = dot(params["wk"])
+    v = dot(params["wv"])
     if "bq" in params:
         q = q + params["bq"].astype(compute_dtype)
         k = k + params["bk"].astype(compute_dtype)
@@ -165,7 +183,7 @@ def attention_forward(params: Params, x, *, positions, n_heads: int,
                       rope_theta: float = 10000.0, use_rope: bool = True,
                       q_chunk: int = 256, kv_chunk: int = 512,
                       impl: str = "flash", compute_dtype=jnp.bfloat16,
-                      context_parallel: bool = False):
+                      context_parallel: bool = False, strategy=None):
     """Self-attention over ``x: (B, S, d_model)``.
 
     ``context_parallel``: constrain Q to a model-axis-sharded *sequence*
@@ -178,7 +196,8 @@ def attention_forward(params: Params, x, *, positions, n_heads: int,
 
     B, S, _ = x.shape
     q, k, v = _project_qkv(params, x, n_heads=n_heads, n_kv_heads=n_kv_heads,
-                           head_dim=head_dim, compute_dtype=compute_dtype)
+                           head_dim=head_dim, compute_dtype=compute_dtype,
+                           strategy=strategy)
     if use_rope:
         q = apply_rope(q, positions, theta=rope_theta)
         k = apply_rope(k, positions, theta=rope_theta)
@@ -192,7 +211,8 @@ def attention_forward(params: Params, x, *, positions, n_heads: int,
     else:
         o = full_attention(q, k, v, causal=causal)
     o = o.reshape(B, S, n_heads * head_dim)
-    return o @ params["wo"].astype(compute_dtype)
+    return _moa_dot(o, params["wo"].astype(compute_dtype),
+                    strategy=strategy, compute_dtype=compute_dtype)
 
 
 def init_kv_cache(batch: int, max_len: int, n_kv_heads: int, head_dim: int,
@@ -228,7 +248,8 @@ def dequantize_kv(q, scale, dtype=jnp.bfloat16):
 def attention_decode(params: Params, x, cache: Params, pos, *, n_heads: int,
                      n_kv_heads: int, head_dim: int,
                      rope_theta: float = 10000.0, use_rope: bool = True,
-                     compute_dtype=jnp.bfloat16) -> Tuple[jax.Array, Params]:
+                     compute_dtype=jnp.bfloat16,
+                     strategy=None) -> Tuple[jax.Array, Params]:
     """One decode step: ``x (B, 1, d)`` against a KV cache at position ``pos``.
 
     The softmax over the cache is the *decode-time MOA* — a single-operand
@@ -239,7 +260,7 @@ def attention_decode(params: Params, x, cache: Params, pos, *, n_heads: int,
     B = x.shape[0]
     q, k_new, v_new = _project_qkv(
         params, x, n_heads=n_heads, n_kv_heads=n_kv_heads, head_dim=head_dim,
-        compute_dtype=compute_dtype)
+        compute_dtype=compute_dtype, strategy=strategy)
     pos_arr = jnp.full((B, 1), pos) if jnp.ndim(pos) == 0 else pos[:, None]
     if use_rope:
         q = apply_rope(q, pos_arr, theta=rope_theta)
@@ -272,7 +293,8 @@ def attention_decode(params: Params, x, cache: Params, pos, *, n_heads: int,
     kv_len = pos + 1
     o = full_attention(q, k_cache, v_cache, causal=False, kv_len=kv_len)
     o = o.reshape(B, 1, n_heads * head_dim)
-    y = o @ params["wo"].astype(compute_dtype)
+    y = _moa_dot(o, params["wo"].astype(compute_dtype),
+                 strategy=strategy, compute_dtype=compute_dtype)
     return y, new_cache
 
 

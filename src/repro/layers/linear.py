@@ -1,12 +1,16 @@
 """MOA-strategy-aware linear layer.
 
 Every dense contraction in the framework goes through :func:`project`, which
-schedules its K-dimension reduction per the model's
-:class:`repro.core.moa.ReductionStrategy` — the paper's design knob made a
-framework-wide config. With the default ``serial`` strategy and ``chunk >= K``
-this lowers to a single MXU matmul (zero overhead); smaller chunks serialize
-the contraction via ``lax.scan`` (useful to bound the live working set of
-very wide reductions, e.g. d_ff=53248 on llama3-405b).
+schedules its K-dimension reduction per a :mod:`repro.moa` strategy — the
+paper's design knob made a framework-wide config. ``strategy`` accepts a
+spec string (``"serial?chunk=512"``), an :class:`repro.moa.MOAStrategy`, or
+a legacy :class:`repro.core.moa.ReductionStrategy`; an ambient
+:func:`repro.moa.moa_scope` override wins over all of them. With the
+default ``serial`` strategy and ``chunk >= K`` the jnp backend lowers to a
+single MXU matmul (zero overhead); smaller chunks serialize the contraction
+(bounding the live working set of very wide reductions, e.g. d_ff=53248 on
+llama3-405b), and ``backend="pallas"`` (or ``auto`` on TPU) executes the
+``dot_moa`` kernel.
 """
 
 from __future__ import annotations
@@ -16,8 +20,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.moa import ReductionStrategy, chunked_matmul
 from repro.layers.common import Params, dense_init
+from repro.moa import active_strategy
 
 __all__ = ["init_linear", "project"]
 
@@ -30,24 +34,22 @@ def init_linear(rng, d_in: int, d_out: int, *, bias: bool = False,
     return p
 
 
-def project(params: Params, x, *, strategy: Optional[ReductionStrategy] = None,
+def project(params: Params, x, *, strategy=None,
             compute_dtype=jnp.bfloat16):
     """``x @ w (+ b)`` with the contraction scheduled per ``strategy``.
 
     ``x: (..., d_in)``; weights are cast to ``compute_dtype`` at use
     (master copy stays f32), accumulation is f32 (MXU hard-wired).
+    ``strategy=None`` (and no active scope) is the plain one-shot matmul.
     """
     w = params["w"].astype(compute_dtype)
     x = x.astype(compute_dtype)
-    k = x.shape[-1]
-    if strategy is not None and strategy.kind == "serial" and strategy.chunk < k:
-        y = chunked_matmul(
-            x, w, chunk=strategy.chunk,
-            accum_dtype=strategy.accum_dtype, out_dtype=compute_dtype,
-        )
-    else:
+    strat = active_strategy(strategy)
+    if strat is None:
         y = jnp.matmul(x, w, preferred_element_type=jnp.float32) \
             .astype(compute_dtype)
+    else:
+        y = strat.dot(x, w, out_dtype=compute_dtype)
     if "b" in params:
         y = y + params["b"].astype(compute_dtype)
     return y

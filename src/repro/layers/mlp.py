@@ -1,8 +1,10 @@
 """Feed-forward blocks: SwiGLU (llama family) and GELU (encoder family).
 
 The d_ff contraction of ``w_down`` is the widest MOA in most dense archs
-(llama3-405b: 53 248 operands) — it routes through the model's
-ReductionStrategy via :func:`repro.layers.linear.project`.
+(llama3-405b: 53 248 operands) — it routes through the model's MOA
+strategy (``cfg.moa_for("mlp")``) via :func:`repro.layers.linear.project`.
+``strategy`` accepts anything :func:`repro.moa.resolve` does (spec string,
+strategy instance, legacy ReductionStrategy).
 """
 
 from __future__ import annotations
@@ -10,7 +12,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.moa import ReductionStrategy
 from repro.layers.common import Params, dense_init
 from repro.layers.linear import project
 
@@ -26,7 +27,7 @@ def init_swiglu(rng, d_model: int, d_ff: int, dtype=jnp.float32) -> Params:
     }
 
 
-def swiglu(params: Params, x, *, strategy: ReductionStrategy = None,
+def swiglu(params: Params, x, *, strategy=None,
            compute_dtype=jnp.bfloat16):
     g = project({"w": params["w_gate"]}, x, strategy=strategy,
                 compute_dtype=compute_dtype)
@@ -47,7 +48,7 @@ def init_gelu_mlp(rng, d_model: int, d_ff: int, dtype=jnp.float32) -> Params:
     }
 
 
-def gelu_mlp(params: Params, x, *, strategy: ReductionStrategy = None,
+def gelu_mlp(params: Params, x, *, strategy=None,
              compute_dtype=jnp.bfloat16):
     h = project({"w": params["w_in"], "b": params["b_in"]}, x,
                 strategy=strategy, compute_dtype=compute_dtype)

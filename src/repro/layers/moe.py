@@ -26,6 +26,7 @@ import jax.numpy as jnp
 
 from repro.layers.common import Params, dense_init
 from repro.layers.numerics import einsum_f32
+from repro.moa import active_strategy
 
 __all__ = ["init_moe", "moe_forward"]
 
@@ -43,7 +44,8 @@ def init_moe(rng, *, d_model: int, d_ff: int, n_experts: int,
 
 def moe_forward(params: Params, x, *, n_experts: int, top_k: int,
                 capacity_factor: float = 1.25, group_size: int = 4096,
-                compute_dtype=jnp.bfloat16) -> Tuple[jax.Array, jax.Array]:
+                compute_dtype=jnp.bfloat16,
+                strategy=None) -> Tuple[jax.Array, jax.Array]:
     """Apply the MoE to ``x: (B, S, d)``. Returns ``(y, aux_loss)``.
 
     GShard-style grouping: tokens are split into G groups of ``group_size``
@@ -52,6 +54,11 @@ def moe_forward(params: Params, x, *, n_experts: int, top_k: int,
     at 1M train tokens the global version is both 0.5 TB and a serial
     dependency chain; grouped, it is embarrassingly parallel over data
     shards).
+
+    ``strategy`` (``cfg.moa_for("moe")``; anything :func:`repro.moa.resolve`
+    accepts) schedules the expert d/d_ff contractions — vmapped over the
+    expert axis since each expert has its own weights — and the token-side
+    top-k combine. ``None`` with no active scope keeps the einsum paths.
     """
     B, S, d = x.shape
     T = B * S
@@ -60,11 +67,32 @@ def moe_forward(params: Params, x, *, n_experts: int, top_k: int,
         G -= 1
     tg = T // G                                                    # tokens/group
     xt = x.reshape(G, tg, d).astype(compute_dtype)
+    strat = active_strategy(strategy)
+
+    def expert_dot(spec, operands, weights):
+        """Per-expert contraction ``(G, E, C, a) x (E, a, b)`` → (G, E, C, b).
+
+        Each expert owns its weight matrix, so the strategy's 2-D ``dot``
+        is vmapped over the expert axis (jnp scan and Pallas kernels both
+        batch cleanly under vmap).
+        """
+        if strat is None:
+            return einsum_f32(spec, operands,
+                              weights.astype(compute_dtype),
+                              out_dtype=compute_dtype)
+        return jax.vmap(
+            lambda xe, we: strat.dot(xe, we.astype(compute_dtype),
+                                     out_dtype=compute_dtype),
+            in_axes=(1, 0), out_axes=1)(operands, weights)
 
     # --- routing -------------------------------------------------------------
-    logits = jnp.einsum("gtd,de->gte", xt,
-                        params["router"].astype(compute_dtype)) \
-        .astype(jnp.float32)
+    if strat is None:
+        logits = jnp.einsum("gtd,de->gte", xt,
+                            params["router"].astype(compute_dtype)) \
+            .astype(jnp.float32)
+    else:
+        logits = strat.dot(xt, params["router"].astype(compute_dtype),
+                           out_dtype=jnp.float32)
     probs = jax.nn.softmax(logits, axis=-1)                        # (G, tg, E)
     gate_vals, expert_ids = jax.lax.top_k(probs, top_k)            # (G, tg, k)
     gate_vals = gate_vals / jnp.maximum(
@@ -87,23 +115,21 @@ def moe_forward(params: Params, x, *, n_experts: int, top_k: int,
     buf = buf.at[g_idx, flat_ids, safe_slot].add(contrib)
 
     # --- expert compute ----------------------------------------------------------
-    gates = einsum_f32("gecd,edf->gecf", buf,
-                       params["w_gate"].astype(compute_dtype),
-                       out_dtype=compute_dtype)
-    ups = einsum_f32("gecd,edf->gecf", buf,
-                     params["w_up"].astype(compute_dtype),
-                     out_dtype=compute_dtype)
+    gates = expert_dot("gecd,edf->gecf", buf, params["w_gate"])
+    ups = expert_dot("gecd,edf->gecf", buf, params["w_up"])
     h = jax.nn.silu(gates.astype(jnp.float32)).astype(compute_dtype) * ups
-    out_buf = einsum_f32("gecf,efd->gecd", h,
-                         params["w_down"].astype(compute_dtype),
-                         out_dtype=compute_dtype)
+    out_buf = expert_dot("gecf,efd->gecd", h, params["w_down"])
 
     # --- combine (token-side MOA over k expert outputs) -------------------------
     gathered = out_buf[g_idx, flat_ids, safe_slot]                 # (G, tk, d)
     gathered = jnp.where(keep[..., None], gathered, 0)
     weighted = gathered * gate_vals.reshape(G, tg * top_k, 1) \
         .astype(compute_dtype)
-    y = jnp.sum(weighted.reshape(G, tg, top_k, d), axis=2)
+    weighted = weighted.reshape(G, tg, top_k, d)
+    if strat is None:
+        y = jnp.sum(weighted, axis=2)
+    else:
+        y = strat.sum(weighted, axis=2).astype(compute_dtype)
 
     # --- Switch-style load-balance auxiliary loss --------------------------------
     density = jnp.mean(

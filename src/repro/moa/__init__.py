@@ -1,0 +1,34 @@
+"""Pluggable Multi-Operand-Adder engine — the paper's design space as an API.
+
+Public surface::
+
+    from repro.moa import (
+        MOAStrategy,                      # abstract base (sum / dot / cost)
+        TreeStrategy, SerialStrategy, LOAStrategy,
+        register_strategy,                # add your own in ~50 lines
+        resolve,                          # "serial?chunk=512" -> strategy
+        available_strategies, get_strategy_class,
+        moa_scope, active_strategy,       # scoped experiment overrides
+        registry_stats,
+    )
+
+Every dense contraction in the model stack routes through a strategy
+resolved from :class:`repro.configs.base.ModelConfig` (``cfg.moa`` spec
+string plus per-site ``cfg.moa_overrides``), with the Pallas kernels
+selected automatically on TPU (``backend="auto"``). The legacy string-kind
+API survives as a deprecation shim in :mod:`repro.core.moa`.
+"""
+
+from repro.moa.base import BACKENDS, MOAStrategy, resolved_backend
+from repro.moa.backends import chunked_matmul
+from repro.moa.registry import (active_strategy, available_strategies,
+                                get_strategy_class, moa_scope,
+                                register_strategy, registry_stats, resolve)
+from repro.moa.strategies import LOAStrategy, SerialStrategy, TreeStrategy
+
+__all__ = [
+    "MOAStrategy", "TreeStrategy", "SerialStrategy", "LOAStrategy",
+    "BACKENDS", "resolved_backend", "chunked_matmul",
+    "register_strategy", "resolve", "available_strategies",
+    "get_strategy_class", "moa_scope", "active_strategy", "registry_stats",
+]

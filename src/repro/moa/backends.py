@@ -1,0 +1,187 @@
+"""Backend execution paths for MOA strategies: jnp reference and Pallas.
+
+Two substrates realize every strategy:
+
+  * **jnp** — pure-jnp reference schedules (explicit binary tree,
+    ``lax.scan`` serialization, K-blocked matmul). Differentiable, run
+    anywhere, and are the numerical oracles for the kernels.
+  * **pallas** — the TPU kernels in :mod:`repro.kernels` (grid-serialized
+    accumulators, BlockSpec VMEM tiling). On CPU they execute in interpret
+    mode through the auto-detecting wrappers in :mod:`repro.kernels.ops`.
+    The float kernels carry a ``jax.custom_vjp`` here whose backward pass
+    is the plain matmul/broadcast rule, so strategies stay trainable when
+    the forward runs on-device.
+
+Strategies pick a path via ``MOAStrategy.resolve_backend()``; nothing in
+this module is strategy-specific.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels import ops
+
+__all__ = ["tree_sum", "serial_sum", "chunked_matmul",
+           "pallas_sum", "pallas_dot"]
+
+
+# ---------------------------------------------------------------------------
+# jnp reference schedules
+# ---------------------------------------------------------------------------
+
+
+def tree_sum(x: jax.Array, accum_dtype) -> jax.Array:
+    """Explicit balanced binary adder tree over axis 0.
+
+    Structurally mirrors Fig. 1's adder tree: ``ceil(log2 n)`` levels of
+    pairwise adds, odd leftovers passing through. For floats this fixes the
+    reassociation order to the hardware tree's order.
+    """
+    x = x.astype(accum_dtype)
+    while x.shape[0] > 1:
+        m = x.shape[0]
+        half = m // 2
+        paired = x[: 2 * half : 2] + x[1 : 2 * half : 2]
+        if m % 2:
+            paired = jnp.concatenate([paired, x[2 * half :]], axis=0)
+        x = paired
+    return x[0]
+
+
+def serial_sum(x: jax.Array, chunk: int, accum_dtype) -> jax.Array:
+    """§3.1 serialized MOA: scan over clusters of ``chunk`` operands.
+
+    The carried accumulator lives in ``accum_dtype`` — the TPU analogue of
+    the single accumulator in the fast clock domain. Ragged tails are
+    zero-padded (padding is exact for addition).
+    """
+    n = x.shape[0]
+    chunk = min(chunk, n)
+    n_chunks = -(-n // chunk)
+    pad = n_chunks * chunk - n
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
+    x = x.reshape((n_chunks, chunk) + x.shape[1:]).astype(accum_dtype)
+
+    def body(acc, block):
+        # In-cluster reduction is a tree (the paper's serializer feeds the
+        # accumulator one *cluster* at a time); across clusters we serialize.
+        return acc + jnp.sum(block, axis=0), None
+
+    init = jnp.zeros(x.shape[2:], accum_dtype)
+    acc, _ = lax.scan(body, init, x)
+    return acc
+
+
+def chunked_matmul(a: jax.Array, b: jax.Array, *, chunk: int,
+                   accum_dtype=jnp.float32,
+                   out_dtype: Optional[jnp.dtype] = None) -> jax.Array:
+    """K-blocked matmul: ``a @ b`` with a serialized-MOA contraction.
+
+    ``a: (..., M, K)``, ``b: (K, N)``. The contraction dimension is processed
+    ``chunk`` operands at a time by a ``lax.scan`` carrying an f32
+    accumulator — §3.1 realized on hardware whose "serializer" (DMA) and
+    "accumulator" (MXU) are hard-wired. Differentiable (scan has a transpose
+    rule), so it is usable in training.
+    """
+    k = a.shape[-1]
+    if b.shape[0] != k:
+        raise ValueError(f"contraction mismatch: {a.shape} @ {b.shape}")
+    out_dtype = out_dtype or a.dtype
+    chunk = min(chunk, k)
+    n_chunks = -(-k // chunk)
+    pad = n_chunks * chunk - k
+    if pad:
+        a = jnp.concatenate([a, jnp.zeros(a.shape[:-1] + (pad,), a.dtype)], axis=-1)
+        b = jnp.concatenate([b, jnp.zeros((pad,) + b.shape[1:], b.dtype)], axis=0)
+    a_blocks = jnp.moveaxis(
+        a.reshape(a.shape[:-1] + (n_chunks, chunk)), -2, 0
+    )  # (n_chunks, ..., M, chunk)
+    b_blocks = b.reshape((n_chunks, chunk) + b.shape[1:])
+
+    def body(acc, blocks):
+        a_blk, b_blk = blocks
+        acc = acc + jnp.matmul(
+            a_blk, b_blk, preferred_element_type=accum_dtype
+        ).astype(accum_dtype)
+        return acc, None
+
+    init = jnp.zeros(a_blocks.shape[1:-1] + (b.shape[-1],), accum_dtype)
+    acc, _ = lax.scan(body, init, (a_blocks, b_blocks))
+    return acc.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Pallas paths (differentiable wrappers over repro.kernels.ops)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _pallas_dot_fn(block_k: int, approx_bits: int, out_dtype_name: str):
+    out_dtype = jnp.dtype(out_dtype_name)
+
+    @jax.custom_vjp
+    def f(a, b):
+        return ops.dot_moa(a, b, block_k=block_k, approx_bits=approx_bits,
+                           out_dtype=out_dtype)
+
+    def fwd(a, b):
+        return f(a, b), (a, b)
+
+    def bwd(res, g):
+        # The kernel's contraction is exact up to reassociation, so the
+        # backward pass is the ordinary matmul transpose rule in f32.
+        a, b = res
+        gf = g.astype(jnp.float32)
+        da = jnp.matmul(gf, b.astype(jnp.float32).T).astype(a.dtype)
+        db = jnp.matmul(a.astype(jnp.float32).T, gf).astype(b.dtype)
+        return da, db
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def pallas_dot(a: jax.Array, b: jax.Array, *, block_k: int,
+               out_dtype, approx_bits: int = 0) -> jax.Array:
+    """``(m, k) @ (k, n)`` through the ``dot_moa`` Pallas kernel.
+
+    ``block_k`` is the serialization cluster size ``n_c`` (the trailing —
+    sequential — grid dimension); strategies choose it and default the
+    ``out_dtype`` (via ``MOAStrategy._default_out_dtype``) before calling.
+    Float paths are differentiable via a custom VJP; integer paths are
+    forward-only.
+    """
+    out_dtype = jnp.dtype(out_dtype)
+    return _pallas_dot_fn(int(block_k), int(approx_bits), out_dtype.name)(a, b)
+
+
+@functools.lru_cache(maxsize=None)
+def _pallas_sum_fn(block_n: int):
+    @jax.custom_vjp
+    def f(x):
+        return ops.moa_reduce(x, block_n=block_n)
+
+    def fwd(x):
+        return f(x), (x.shape, jnp.dtype(x.dtype).name)
+
+    def bwd(res, g):
+        shape, dtype_name = res
+        return (jnp.broadcast_to(g, shape).astype(dtype_name),)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def pallas_sum(x: jax.Array, *, block_n: int) -> jax.Array:
+    """``(n, f) -> (f,)`` through the ``moa_reduce`` Pallas kernel.
+
+    The operand axis is grid-serialized in blocks of ``block_n`` (the §3.1
+    cluster size); accumulation is f32 for floats, int32 for ints.
+    """
+    return _pallas_sum_fn(int(block_n))(x)

@@ -1,0 +1,170 @@
+"""Strategy registry, spec-string parsing, and scoped overrides.
+
+Spec-string grammar (URL-query style)::
+
+    spec      := name [ "?" param ( "&" param )* ]
+    param     := key "=" value
+    name      := a registered strategy name    ("tree" | "serial" | "loa" | ...)
+    key       := a dataclass field of that strategy
+    value     := int | dtype name | backend name (coerced per field)
+
+Examples: ``"tree"``, ``"serial?chunk=512"``,
+``"loa?approx_bits=4&width=12"``, ``"serial?backend=pallas&chunk=256"``.
+
+Canonical form sorts params alphabetically and omits defaults —
+``resolve(spec).spec == spec`` holds for canonical specs and
+``resolve(s.spec) == s`` for every strategy instance ``s``.
+
+``resolve`` also accepts :class:`~repro.moa.base.MOAStrategy` instances
+(returned as-is) and legacy :class:`repro.core.moa.ReductionStrategy`
+objects (converted field-for-field, including the LOA operand ``width``
+that the old flat-config path used to drop).
+
+:func:`moa_scope` pushes an ambient strategy override consulted by
+:func:`active_strategy` — every call site that routes through
+``repro.layers.linear.project`` / ``repro.models.cnn.im2col_conv`` honours
+it, so benchmarks and the Fig. 4/5 scripts can sweep the registry without
+rebuilding configs. The override applies at *trace* time: wrap the trace
+(or run unjitted), not a cached jitted callable.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Dict, List, Optional, Type, Union
+
+from repro.moa.base import MOAStrategy
+
+__all__ = [
+    "register_strategy", "resolve", "available_strategies",
+    "get_strategy_class", "moa_scope", "active_strategy", "registry_stats",
+]
+
+_REGISTRY: Dict[str, Type[MOAStrategy]] = {}
+_PARSE_CACHE: Dict[str, MOAStrategy] = {}
+_SCOPE: List[MOAStrategy] = []
+# observability: lets tests assert the model stack actually routes through
+# the registry (and benchmarks report scope usage)
+_STATS = {"resolve_calls": 0, "scope_hits": 0}
+
+
+def register_strategy(cls: Type[MOAStrategy]) -> Type[MOAStrategy]:
+    """Class decorator: register ``cls`` under ``cls.name``.
+
+    Re-registration under an existing name replaces the entry (latest wins),
+    so experiments can shadow a built-in.
+    """
+    name = cls.name
+    if not name:
+        raise ValueError(f"{cls.__name__} must set a non-empty `name`")
+    _REGISTRY[name] = cls
+    _PARSE_CACHE.clear()
+    return cls
+
+
+def available_strategies() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def get_strategy_class(name: str) -> Type[MOAStrategy]:
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown MOA strategy {name!r}; "
+                         f"available: {available_strategies()}")
+    return _REGISTRY[name]
+
+
+def _coerce(cls: Type[MOAStrategy], key: str, value: str):
+    fields = {f.name: f for f in dataclasses.fields(cls)}
+    if key not in fields:
+        raise ValueError(
+            f"strategy {cls.name!r} has no parameter {key!r}; "
+            f"expected one of {sorted(fields)}")
+    default = fields[key].default
+    caster = type(default) if default is not dataclasses.MISSING else str
+    try:
+        return caster(value)
+    except (TypeError, ValueError) as e:
+        raise ValueError(f"bad value {value!r} for {cls.name}.{key}") from e
+
+
+def _parse(spec: str) -> MOAStrategy:
+    if spec in _PARSE_CACHE:
+        return _PARSE_CACHE[spec]
+    name, _, query = spec.partition("?")
+    cls = get_strategy_class(name.strip())
+    kwargs = {}
+    if query:
+        for item in query.split("&"):
+            key, sep, value = item.partition("=")
+            if not sep:
+                raise ValueError(f"malformed spec param {item!r} in {spec!r}")
+            kwargs[key.strip()] = _coerce(cls, key.strip(), value.strip())
+    strategy = cls(**kwargs)
+    _PARSE_CACHE[spec] = strategy
+    return strategy
+
+
+def _from_legacy(rs) -> MOAStrategy:
+    """Convert a repro.core.moa.ReductionStrategy (duck-typed on .kind)."""
+    import jax.numpy as jnp
+
+    accum = jnp.dtype(rs.accum_dtype).name
+    if rs.kind == "tree":
+        return _REGISTRY["tree"](accum=accum)
+    if rs.kind == "serial":
+        return _REGISTRY["serial"](chunk=rs.chunk, accum=accum)
+    if rs.kind == "loa":
+        return _REGISTRY["loa"](approx_bits=rs.approx_bits, width=rs.width)
+    raise ValueError(f"unknown legacy strategy kind {rs.kind!r}")
+
+
+def resolve(spec: Union[str, MOAStrategy]) -> MOAStrategy:
+    """Spec string | MOAStrategy | legacy ReductionStrategy → MOAStrategy."""
+    _STATS["resolve_calls"] += 1
+    if isinstance(spec, MOAStrategy):
+        return spec
+    if isinstance(spec, str):
+        return _parse(spec)
+    if hasattr(spec, "kind"):  # legacy ReductionStrategy (avoids an import)
+        return _from_legacy(spec)
+    raise TypeError(f"cannot resolve MOA strategy from {type(spec).__name__}")
+
+
+@contextlib.contextmanager
+def moa_scope(strategy: Union[str, MOAStrategy]):
+    """Ambient strategy override for scoped experiments.
+
+    Inside the scope, every MOA-routed call site (``project``, attention
+    projections, ``im2col_conv``, ...) uses ``strategy`` regardless of its
+    configured one::
+
+        with moa_scope("serial?chunk=256&backend=pallas"):
+            loss = model.loss(params, batch)   # traced under the override
+
+    Scopes nest; the innermost wins. Trace-time semantics: a function jitted
+    *outside* the scope keeps its original strategies.
+    """
+    strat = resolve(strategy)
+    _SCOPE.append(strat)
+    try:
+        yield strat
+    finally:
+        _SCOPE.pop()
+
+
+def active_strategy(
+        default: Optional[Union[str, MOAStrategy]] = None,
+) -> Optional[MOAStrategy]:
+    """The ambient scoped strategy, else ``resolve(default)``, else None."""
+    if _SCOPE:
+        _STATS["scope_hits"] += 1
+        return _SCOPE[-1]
+    if default is None:
+        return None
+    return resolve(default)
+
+
+def registry_stats() -> Dict[str, int]:
+    """Snapshot of resolution counters (observability for tests/benches)."""
+    return dict(_STATS)

@@ -1,0 +1,252 @@
+"""Concrete MOA strategies: tree (§2), serial (§3.1), LOA (§3.2).
+
+Each strategy is a ~50-line frozen dataclass implementing the three-method
+:class:`repro.moa.base.MOAStrategy` interface and registering itself by
+name. The jnp paths are the reference schedules (differentiable oracles);
+the pallas paths route to :mod:`repro.kernels` (grid-serialized
+accumulators on TPU, interpret mode on CPU).
+
+Cost semantics follow the paper's TPU inversion: scheduling is *free*
+(tree and serial have identical op counts — the serializer is the
+hard-wired DMA path) while §3.2 approximation *costs* (~6 VPU ops per LOA
+fold where the exact add is one hard-wired op). ``cost`` exposes exactly
+that, so :mod:`repro.launch.costing` can price a model under any strategy
+without assuming a one-shot matmul.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, ClassVar, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cost_model
+from repro.core import loa as loa_lib
+from repro.moa import backends
+from repro.moa.base import MOAStrategy
+from repro.moa.registry import register_strategy
+
+__all__ = ["TreeStrategy", "SerialStrategy", "LOAStrategy"]
+
+# VMEM-safe ceilings for the Pallas grid blocks. Interpret mode (CPU) has
+# no memory limit, but on TPU a (block_m x block_k) + (block_k x block_n)
+# f32 tile must fit VMEM (~16 MiB/core): 2048 x 256 x 4 B x 2 ≈ 4 MiB.
+# "One-shot" strategies (tree) therefore still tile wide contractions —
+# the in-block reduction is the spatial tree, grid accumulation stays
+# exact f32.
+_PALLAS_MAX_BLOCK_K = 2048
+_PALLAS_MAX_BLOCK_N = 4096
+
+
+def _pallas_block(requested: int, cap: int) -> int:
+    return max(min(requested, cap), 1)
+
+
+def _cost_dict(*, n: int, dtype, ops_per_add: float, sequential_steps: int,
+               working_set_operands: int, exact: bool) -> Dict[str, Any]:
+    adds = max(n - 1, 0)
+    itemsize = jnp.dtype(dtype).itemsize
+    return {
+        "flops": n + adds * ops_per_add,       # per output: mults + adds
+        "hbm_bytes": n * itemsize,             # operands streamed once
+        "adds": adds,
+        "ops_per_add": ops_per_add,
+        "sequential_steps": sequential_steps,
+        "working_set_operands": working_set_operands,
+        "exact": exact,
+    }
+
+
+@register_strategy
+@dataclasses.dataclass(frozen=True)
+class TreeStrategy(MOAStrategy):
+    """Spatial binary adder tree — the synthesis-tool default (§2).
+
+    On TPU this is the one-shot reduction: XLA/the MXU emit the hard adder
+    tree, materializing all partial products (maximal working set, minimal
+    sequentialization). ``accum`` picks the float accumulator precision.
+    """
+
+    accum: str = "float32"
+
+    name: ClassVar[str] = "tree"
+
+    @classmethod
+    def bench_specs(cls) -> tuple:
+        return ("tree", "tree?backend=pallas")
+
+    def sum(self, x, *, axis: int = -1) -> jax.Array:
+        x2, restore = self._flatten_sum(x, axis)
+        if self.resolve_backend() == "pallas":
+            # widest VMEM-feasible block: the in-block tree is the spatial
+            # reduction, any residual grid accumulation is exact f32
+            return restore(backends.pallas_sum(
+                x2, block_n=_pallas_block(x2.shape[0], _PALLAS_MAX_BLOCK_N)))
+        return restore(backends.tree_sum(x2, self.accum_dtype_for(x.dtype)))
+
+    def dot(self, a, b, *, out_dtype: Optional[Any] = None) -> jax.Array:
+        out_dtype = self._default_out_dtype(a.dtype, out_dtype)
+        accum = self.accum_dtype_for(a.dtype)
+        if self.resolve_backend() == "pallas":
+            a2, restore = self._flatten_dot(a)
+            return restore(backends.pallas_dot(
+                a2, b,
+                block_k=_pallas_block(a2.shape[-1], _PALLAS_MAX_BLOCK_K),
+                out_dtype=out_dtype))
+        return jnp.matmul(a, b, preferred_element_type=accum).astype(out_dtype)
+
+    def cost(self, n_operands: int, dtype: Any = "bfloat16") -> Dict[str, Any]:
+        return dict(
+            _cost_dict(n=n_operands, dtype=dtype, ops_per_add=1.0,
+                       sequential_steps=1, working_set_operands=n_operands,
+                       exact=True),
+            depth=max(math.ceil(math.log2(max(n_operands, 1))), 1),
+        )
+
+
+@register_strategy
+@dataclasses.dataclass(frozen=True)
+class SerialStrategy(MOAStrategy):
+    """§3.1 serialized MOA: clusters of ``chunk`` operands fold into one
+    accumulator.
+
+    On FPGA the serializer cost buried the savings (the paper's negative
+    result); on TPU the serializer is the hard-wired DMA/address path, so
+    this is the *native* idiom — ``chunk`` plays the paper's ``n_c`` and
+    bounds the live working set. With ``chunk >= K`` the jnp path lowers to
+    a single MXU matmul (zero overhead).
+    """
+
+    chunk: int = 512
+    accum: str = "float32"
+
+    name: ClassVar[str] = "serial"
+
+    @classmethod
+    def bench_specs(cls) -> tuple:
+        return ("serial?chunk=1024", "serial?chunk=256",
+                "serial?backend=pallas&chunk=512")
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.chunk < 1:
+            raise ValueError("chunk must be >= 1")
+
+    def sum(self, x, *, axis: int = -1) -> jax.Array:
+        x2, restore = self._flatten_sum(x, axis)
+        if self.resolve_backend() == "pallas":
+            return restore(backends.pallas_sum(
+                x2, block_n=_pallas_block(self.chunk, _PALLAS_MAX_BLOCK_N)))
+        return restore(backends.serial_sum(x2, self.chunk,
+                                           self.accum_dtype_for(x.dtype)))
+
+    def dot(self, a, b, *, out_dtype: Optional[Any] = None) -> jax.Array:
+        out_dtype = self._default_out_dtype(a.dtype, out_dtype)
+        accum = self.accum_dtype_for(a.dtype)
+        k = a.shape[-1]
+        if self.resolve_backend() == "pallas":
+            a2, restore = self._flatten_dot(a)
+            return restore(backends.pallas_dot(
+                a2, b,
+                block_k=_pallas_block(self.chunk, _PALLAS_MAX_BLOCK_K),
+                out_dtype=out_dtype))
+        if k <= self.chunk:
+            return jnp.matmul(
+                a, b, preferred_element_type=accum).astype(out_dtype)
+        return backends.chunked_matmul(
+            a, b, chunk=self.chunk, accum_dtype=accum, out_dtype=out_dtype)
+
+    def cost(self, n_operands: int, dtype: Any = "bfloat16") -> Dict[str, Any]:
+        steps = max(-(-n_operands // self.chunk), 1)
+        return _cost_dict(
+            n=n_operands, dtype=dtype, ops_per_add=1.0,
+            sequential_steps=steps,
+            working_set_operands=min(self.chunk, n_operands), exact=True)
+
+
+@register_strategy
+@dataclasses.dataclass(frozen=True)
+class LOAStrategy(MOAStrategy):
+    """§3.2 approximate MOA: Lower-part-OR adders, integer operands only.
+
+    ``approx_bits`` is the paper's ``l`` (low bits OR-approximated),
+    ``width`` the operand bit-width ``b`` — both thread end-to-end through
+    the spec string (``"loa?approx_bits=4&width=12"``). Backends differ in
+    *where* the approximation sits, mirroring the two hardware structures:
+
+      * jnp — a balanced binary tree in which **every** adder is an LOA
+        (:func:`repro.core.loa.loa_sum`; Fig. 1 with Fig. 3 cells);
+      * pallas — the serialized composition: operand clusters of ``chunk``
+        are tree-reduced *exactly*, and each cluster partial folds into the
+        running accumulator through one LOA (§3.1 + §3.2 combined).
+
+    Both are exact (and agree bitwise) at ``approx_bits=0``.
+    """
+
+    approx_bits: int = 4
+    width: int = 8
+    chunk: int = 256
+
+    name: ClassVar[str] = "loa"
+    integer_only: ClassVar[bool] = True
+
+    @classmethod
+    def bench_specs(cls) -> tuple:
+        return ("loa?approx_bits=0", "loa?approx_bits=4")
+
+    def __post_init__(self):
+        super().__post_init__()
+        if not 0 <= self.approx_bits <= self.width:
+            raise ValueError(
+                f"approx_bits={self.approx_bits} outside [0, width={self.width}]")
+        if self.chunk < 1:
+            raise ValueError("chunk must be >= 1")
+
+    def _fold_block(self, n: int) -> int:
+        """Cluster size for the pallas kernels: LOA accumulator chains are
+        not exact under zero padding, so fall back to one cluster when the
+        operand count is ragged."""
+        return self.chunk if n % self.chunk == 0 else n
+
+    def sum(self, x, *, axis: int = -1) -> jax.Array:
+        self._check_operands(jnp.asarray(x).dtype)
+        if self.resolve_backend() == "pallas":
+            x2, restore = self._flatten_sum(x, axis)
+            from repro.kernels import ops
+            return restore(ops.loa_reduce(
+                x2, approx_bits=self.approx_bits, width=self.width,
+                block_n=self._fold_block(x2.shape[0])))
+        return loa_lib.loa_sum(jnp.asarray(x), approx_bits=self.approx_bits,
+                               width=self.width, axis=axis)
+
+    def dot(self, a, b, *, out_dtype: Optional[Any] = None) -> jax.Array:
+        self._check_operands(a.dtype)
+        self._check_operands(b.dtype)
+        out_dtype = self._default_out_dtype(a.dtype, out_dtype)
+        if self.resolve_backend() == "pallas":
+            a2, restore = self._flatten_dot(a)
+            return restore(backends.pallas_dot(
+                a2, b, block_k=self._fold_block(a2.shape[-1]),
+                approx_bits=self.approx_bits, out_dtype=out_dtype))
+        # Partial products (…, M, K, N) reduced over K through the LOA tree.
+        partials = a[..., None].astype(jnp.int32) * b.astype(jnp.int32)
+        return loa_lib.loa_sum(
+            partials, approx_bits=self.approx_bits, width=self.width,
+            axis=-2).astype(out_dtype)
+
+    def cost(self, n_operands: int, dtype: Any = "int8") -> Dict[str, Any]:
+        ops_per_add = (float(cost_model.vpu_ops_loa_add())
+                       if self.approx_bits else 1.0)
+        steps = max(-(-n_operands // self.chunk), 1)
+        return dict(
+            _cost_dict(n=n_operands, dtype=dtype, ops_per_add=ops_per_add,
+                       sequential_steps=steps,
+                       working_set_operands=min(self.chunk, n_operands),
+                       exact=self.approx_bits == 0),
+            # FPGA foil: ALM count is *flat* in approx_bits (Fig. 5 bottom)
+            alms=cost_model.alm_loa_adder(self.width, self.approx_bits),
+            error_bound_per_add=loa_lib.loa_error_bound(self.approx_bits),
+        )

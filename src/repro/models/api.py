@@ -40,17 +40,20 @@ class Model:
         return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
 
     # ---- training ---------------------------------------------------------
-    def forward(self, params, batch):
+    def _forward_with_aux(self, params, batch):
+        """Normalize the family modules' ``logits | (logits, aux)`` returns."""
         out = self._mod.forward(params, batch, self.cfg)
-        return out[0] if isinstance(out, tuple) else out
+        if isinstance(out, tuple):
+            return out
+        return out, None
+
+    def forward(self, params, batch):
+        logits, _ = self._forward_with_aux(params, batch)
+        return logits
 
     def loss(self, params, batch):
         cfg = self.cfg
-        out = self._mod.forward(params, batch, cfg)
-        aux = None
-        logits = out
-        if isinstance(out, tuple):
-            logits, aux = out
+        logits, aux = self._forward_with_aux(params, batch)
         if cfg.family == "encoder":
             loss, metrics = losses.masked_lm_loss(
                 logits, batch["targets"], batch["mask"], impl=cfg.loss_impl)
@@ -74,8 +77,6 @@ class Model:
             # encoder "prefill" is a bidirectional encode: no KV cache, no
             # decode step exists (assignment skip rule covers decode shapes)
             logits = self._mod.forward(params, batch, self.cfg)
-            import jax.numpy as jnp
-
             return logits, {"pos": jnp.asarray(logits.shape[1], jnp.int32)}
         return self._mod.prefill(params, batch, self.cfg, max_len=max_len)
 

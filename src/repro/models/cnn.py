@@ -3,20 +3,20 @@
 These exist for the DHM experiments (Table 1, Figs. 4/5 end-to-end): their
 conv layers are the MOAs under study. Forward supports two accumulation
 paths: the standard ``lax.conv`` (XLA's fused reduction) and an explicit
-im2col + :func:`repro.core.moa.moa_dot` path that makes the MOA strategy —
-including the quantized int8 + LOA variant — observable end-to-end.
+im2col path whose ``C·kh·kw`` contraction routes through a
+:mod:`repro.moa` strategy (``resolve`` spec strings, :func:`moa_scope`
+overrides, jnp/pallas backends) — making tree/serial/LOA scheduling,
+including the quantized int8 + LOA variant, observable end-to-end.
 """
 
 from __future__ import annotations
-
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.moa import ReductionStrategy, moa_dot
 from repro.layers.common import Params, dense_init
+from repro.moa import active_strategy, resolve
 
 __all__ = ["init_lenet5", "init_alexnet", "lenet5_forward", "alexnet_forward",
            "im2col_conv", "LENET5_LAYOUT", "ALEXNET_LAYOUT"]
@@ -78,13 +78,15 @@ def _conv(x, w, b, *, stride, groups, padding):
     return y + b
 
 
-def im2col_conv(x, w, b, *, stride: int,
-                strategy: Optional[ReductionStrategy] = None):
+def im2col_conv(x, w, b, *, stride: int, strategy=None):
     """Explicit DHM-style conv: unfold patches, then one MOA per filter.
 
     ``x: (B, H, W, C)``, ``w: (O, C, kh, kw)``, VALID padding. The
     ``C·kh·kw`` contraction is the paper's MOA; it routes through
-    ``moa_dot`` so tree/serial/LOA scheduling applies end-to-end.
+    ``strategy.dot`` so tree/serial/LOA scheduling applies end-to-end.
+    ``strategy`` accepts anything :func:`repro.moa.resolve` does; defaults
+    to ``"tree"`` (the synthesis-tool baseline) unless a
+    :func:`repro.moa.moa_scope` override is active.
     """
     B, H, W, C = x.shape
     O, Ci, kh, kw = w.shape
@@ -95,11 +97,11 @@ def im2col_conv(x, w, b, *, stride: int,
     Ho, Wo = patches.shape[1], patches.shape[2]
     cols = patches.reshape(B * Ho * Wo, C * kh * kw)
     wmat = w.reshape(O, C * kh * kw).T               # (CKK, O)
-    strategy = strategy or ReductionStrategy(kind="tree")
+    strat = active_strategy(strategy) or resolve("tree")
     if jnp.issubdtype(cols.dtype, jnp.integer):
-        y = moa_dot(cols, wmat, strategy=strategy, out_dtype=jnp.int32)
+        y = strat.dot(cols, wmat, out_dtype=jnp.int32)
         return y.reshape(B, Ho, Wo, O) + b.astype(jnp.int32)
-    y = moa_dot(cols, wmat, strategy=strategy, out_dtype=jnp.float32)
+    y = strat.dot(cols, wmat, out_dtype=jnp.float32)
     return y.reshape(B, Ho, Wo, O) + b
 
 

@@ -57,12 +57,13 @@ def _layer_fwd(layer: Params, h, *, cfg: ModelConfig, positions):
         n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim, causal=True,
         rope_theta=cfg.rope_theta, q_chunk=cfg.q_chunk,
         kv_chunk=cfg.kv_chunk, impl=cfg.attn_impl, compute_dtype=cfg.cdtype,
-        context_parallel=cfg.attn_cp)
+        context_parallel=cfg.attn_cp, strategy=cfg.moa_for("attention"))
     h = h + constrain(a, "batch", "seq", "embed")
     hn = rms_norm(layer["mlp_norm"], h)
     m, aux = moe_forward(layer["moe"], hn, n_experts=cfg.n_experts,
                          top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
-                         compute_dtype=cfg.cdtype)
+                         compute_dtype=cfg.cdtype,
+                         strategy=cfg.moa_for("moe"))
     h = h + constrain(m, "batch", "seq", "embed")
     return h, aux
 
@@ -98,10 +99,11 @@ def prefill(params: Params, batch: dict, cfg: ModelConfig, *, max_len: int):
 
     def body(carry, layer):
         hn = rms_norm(layer["attn_norm"], carry)
+        attn_strategy = cfg.moa_for("attention")
         q, k, v = attn_lib._project_qkv(
             layer["attn"], hn, n_heads=cfg.n_heads,
             n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
-            compute_dtype=cfg.cdtype)
+            compute_dtype=cfg.cdtype, strategy=attn_strategy)
         q = apply_rope(q, positions, theta=cfg.rope_theta)
         k = apply_rope(k, positions, theta=cfg.rope_theta)
         o = attn_lib.flash_attention(q, k, v, causal=True,
@@ -109,12 +111,15 @@ def prefill(params: Params, batch: dict, cfg: ModelConfig, *, max_len: int):
                                      kv_chunk=cfg.kv_chunk)
         B, S, _, _ = o.shape
         o = o.reshape(B, S, cfg.n_heads * cfg.head_dim)
-        h2 = carry + o @ layer["attn"]["wo"].astype(cfg.cdtype)
+        h2 = carry + attn_lib._moa_dot(
+            o, layer["attn"]["wo"].astype(cfg.cdtype),
+            strategy=attn_strategy, compute_dtype=cfg.cdtype)
         hn = rms_norm(layer["mlp_norm"], h2)
         m, _ = moe_forward(layer["moe"], hn, n_experts=cfg.n_experts,
                            top_k=cfg.top_k,
                            capacity_factor=cfg.capacity_factor,
-                           compute_dtype=cfg.cdtype)
+                           compute_dtype=cfg.cdtype,
+                           strategy=cfg.moa_for("moe"))
         h2 = h2 + m
         pad = max_len - k.shape[1]
         kv = {"k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
@@ -138,13 +143,15 @@ def decode_step(params: Params, cache: Params, tokens, cfg: ModelConfig):
         a, new_cache = attn_lib.attention_decode(
             layer["attn"], hn, layer_cache, pos, n_heads=cfg.n_heads,
             n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
-            rope_theta=cfg.rope_theta, compute_dtype=cfg.cdtype)
+            rope_theta=cfg.rope_theta, compute_dtype=cfg.cdtype,
+            strategy=cfg.moa_for("attention"))
         h2 = carry + a
         hn = rms_norm(layer["mlp_norm"], h2)
         m, _ = moe_forward(layer["moe"], hn, n_experts=cfg.n_experts,
                            top_k=cfg.top_k,
                            capacity_factor=cfg.capacity_factor,
-                           compute_dtype=cfg.cdtype)
+                           compute_dtype=cfg.cdtype,
+                           strategy=cfg.moa_for("moe"))
         return h2 + m, new_cache
 
     h, new_layers = lax.scan(body, h, (params["layers"], cache["layers"]))

@@ -55,11 +55,12 @@ def layer_forward(layer: Params, h, *, cfg: ModelConfig, positions):
         causal=cfg.is_causal, rope_theta=cfg.rope_theta,
         use_rope=(cfg.family != "encoder"), q_chunk=cfg.q_chunk,
         kv_chunk=cfg.kv_chunk, impl=cfg.attn_impl,
-        compute_dtype=cfg.cdtype, context_parallel=cfg.attn_cp)
+        compute_dtype=cfg.cdtype, context_parallel=cfg.attn_cp,
+        strategy=cfg.moa_for("attention"))
     h = h + constrain(a, "batch", "seq", "embed")
     hn = rms_norm(layer["mlp_norm"], h)
     mlp_fn = gelu_mlp if cfg.family == "encoder" else swiglu
-    m = mlp_fn(layer["mlp"], hn, strategy=cfg.moa_strategy,
+    m = mlp_fn(layer["mlp"], hn, strategy=cfg.moa_for("mlp"),
                compute_dtype=cfg.cdtype)
     h = h + constrain(m, "batch", "seq", "embed")
     return h, None
@@ -170,19 +171,22 @@ def _layer_prefill(layer: Params, h, *, cfg: ModelConfig, positions, max_len):
     from repro.layers.rope import apply_rope
 
     hn = rms_norm(layer["attn_norm"], h)
+    attn_strategy = cfg.moa_for("attention")
     q, k, v = attn_lib._project_qkv(
         layer["attn"], hn, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
-        head_dim=cfg.head_dim, compute_dtype=cfg.cdtype)
+        head_dim=cfg.head_dim, compute_dtype=cfg.cdtype,
+        strategy=attn_strategy)
     q = apply_rope(q, positions, theta=cfg.rope_theta)
     k = apply_rope(k, positions, theta=cfg.rope_theta)
     o = attn_lib.flash_attention(q, k, v, causal=True, q_chunk=cfg.q_chunk,
                                  kv_chunk=cfg.kv_chunk)
     B, S, _, _ = o.shape
     o = o.reshape(B, S, cfg.n_heads * cfg.head_dim)
-    h = h + constrain(o @ layer["attn"]["wo"].astype(cfg.cdtype),
-                      "batch", "seq", "embed")
+    o = attn_lib._moa_dot(o, layer["attn"]["wo"].astype(cfg.cdtype),
+                          strategy=attn_strategy, compute_dtype=cfg.cdtype)
+    h = h + constrain(o, "batch", "seq", "embed")
     hn = rms_norm(layer["mlp_norm"], h)
-    m = swiglu(layer["mlp"], hn, strategy=cfg.moa_strategy,
+    m = swiglu(layer["mlp"], hn, strategy=cfg.moa_for("mlp"),
                compute_dtype=cfg.cdtype)
     h = h + constrain(m, "batch", "seq", "embed")
     pad = max_len - k.shape[1]
@@ -228,11 +232,12 @@ def decode_step(params: Params, cache: Params, tokens, cfg: ModelConfig):
         a, new_cache = attn_lib.attention_decode(
             layer["attn"], hn, layer_cache, pos, n_heads=cfg.n_heads,
             n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
-            rope_theta=cfg.rope_theta, compute_dtype=cfg.cdtype)
+            rope_theta=cfg.rope_theta, compute_dtype=cfg.cdtype,
+            strategy=cfg.moa_for("attention"))
         h2 = carry + a
         hn = rms_norm(layer["mlp_norm"], h2)
         mlp_fn = gelu_mlp if cfg.family == "encoder" else swiglu
-        m = mlp_fn(layer["mlp"], hn, strategy=cfg.moa_strategy,
+        m = mlp_fn(layer["mlp"], hn, strategy=cfg.moa_for("mlp"),
                    compute_dtype=cfg.cdtype)
         return h2 + m, new_cache
 

@@ -90,10 +90,10 @@ def _shared_block(params: Params, app_norm: Params, h, *, cfg: ModelConfig,
         n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim, causal=True,
         rope_theta=cfg.rope_theta, q_chunk=cfg.q_chunk,
         kv_chunk=cfg.kv_chunk, impl=cfg.attn_impl, compute_dtype=cfg.cdtype,
-        context_parallel=cfg.attn_cp)
+        context_parallel=cfg.attn_cp, strategy=cfg.moa_for("attention"))
     h = h + constrain(a, "batch", "seq", "embed")
     hn = rms_norm(app_norm["mlp"], h)
-    m = swiglu(params["shared_mlp"], hn, strategy=cfg.moa_strategy,
+    m = swiglu(params["shared_mlp"], hn, strategy=cfg.moa_for("mlp"),
                compute_dtype=cfg.cdtype)
     return h + constrain(m, "batch", "seq", "embed")
 
@@ -170,10 +170,11 @@ def prefill(params: Params, batch: dict, cfg: ModelConfig, *, max_len: int):
                                    group_layers)
         # shared block with KV capture
         hn = rms_norm(app_norm["attn"], out)
+        attn_strategy = cfg.moa_for("attention")
         q, k, v = attn_lib._project_qkv(
             params["shared_attn"], hn, n_heads=cfg.n_heads,
             n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
-            compute_dtype=cfg.cdtype)
+            compute_dtype=cfg.cdtype, strategy=attn_strategy)
         q = apply_rope(q, positions, theta=cfg.rope_theta)
         k = apply_rope(k, positions, theta=cfg.rope_theta)
         o = attn_lib.flash_attention(q, k, v, causal=True,
@@ -181,10 +182,12 @@ def prefill(params: Params, batch: dict, cfg: ModelConfig, *, max_len: int):
                                      kv_chunk=cfg.kv_chunk)
         B = o.shape[0]
         o = o.reshape(B, S, cfg.n_heads * cfg.head_dim)
-        out = out + o @ params["shared_attn"]["wo"].astype(cfg.cdtype)
+        out = out + attn_lib._moa_dot(
+            o, params["shared_attn"]["wo"].astype(cfg.cdtype),
+            strategy=attn_strategy, compute_dtype=cfg.cdtype)
         hn = rms_norm(app_norm["mlp"], out)
         out = out + swiglu(params["shared_mlp"], hn,
-                           strategy=cfg.moa_strategy,
+                           strategy=cfg.moa_for("mlp"),
                            compute_dtype=cfg.cdtype)
         pad = max_len - S
         kv = {"k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
@@ -235,11 +238,12 @@ def decode_step(params: Params, cache: Params, tokens, cfg: ModelConfig):
         a, new_kv = attn_lib.attention_decode(
             params["shared_attn"], hn, kv, pos, n_heads=cfg.n_heads,
             n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
-            rope_theta=cfg.rope_theta, compute_dtype=cfg.cdtype)
+            rope_theta=cfg.rope_theta, compute_dtype=cfg.cdtype,
+            strategy=cfg.moa_for("attention"))
         out = out + a
         hn = rms_norm(app_norm["mlp"], out)
         out = out + swiglu(params["shared_mlp"], hn,
-                           strategy=cfg.moa_strategy,
+                           strategy=cfg.moa_for("mlp"),
                            compute_dtype=cfg.cdtype)
         return out, (new_states, new_kv)
 

@@ -24,7 +24,8 @@ S, B = 256, 2
 def _loop_free(cfg0):
     return dataclasses.replace(
         cfg0, n_layers=1, attn_every=1 if cfg0.attn_every else 0,
-        q_chunk=S, kv_chunk=S, ssd_chunk=S, remat="none", moa_chunk=1 << 20,
+        q_chunk=S, kv_chunk=S, ssd_chunk=S, remat="none",
+        moa=f"serial?chunk={1 << 20}",
         d_model=128, n_heads=4 if cfg0.n_heads else 0,
         n_kv_heads=cfg0.n_kv_heads and 2,
         head_dim=32 if cfg0.head_dim else 0,

@@ -1,11 +1,25 @@
-"""Hypothesis property tests for the MOA/LOA invariants."""
+"""Hypothesis property tests for the MOA/LOA invariants.
+
+Deliberately exercises the deprecated :mod:`repro.core.moa` shim — these
+invariants must keep holding through the legacy surface.
+"""
+
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis package")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import loa, metrics, moa
+from repro.core import loa, metrics
+
+with warnings.catch_warnings():
+    warnings.simplefilter("ignore", DeprecationWarning)
+    from repro.core import moa
 
 _INTS = st.integers(min_value=0, max_value=255)
 

@@ -1,0 +1,372 @@
+"""Tests for the pluggable MOA engine (repro.moa).
+
+Covers the redesign's acceptance surface:
+  * registry round-trip (``resolve(spec).spec == spec`` for canonical specs)
+    and custom-strategy registration;
+  * per-site override resolution in ``ModelConfig`` (incl. the LOA ``width``
+    threading the old flat config dropped);
+  * jnp-vs-pallas parity through the backend dispatch (interpret mode on
+    CPU) for all three strategies × {f32, bf16, int8};
+  * the ``repro.core.moa`` deprecation shim;
+  * the model stack actually routing through the registry, and
+    ``moa_scope`` overriding it.
+"""
+
+import dataclasses
+import importlib
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import moa as moa_api
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.moa import (LOAStrategy, MOAStrategy, SerialStrategy, TreeStrategy,
+                       active_strategy, available_strategies, moa_scope,
+                       register_strategy, registry_stats, resolve)
+
+
+# ---------------------------------------------------------------------------
+# registry + spec strings
+# ---------------------------------------------------------------------------
+
+class TestRegistry:
+    def test_builtins_registered(self):
+        assert {"tree", "serial", "loa"} <= set(available_strategies())
+
+    @pytest.mark.parametrize("spec", [
+        "tree",
+        "tree?accum=bfloat16",
+        "serial?chunk=640",
+        "serial?backend=pallas&chunk=256",
+        "loa?approx_bits=2&width=12",
+        "loa?approx_bits=3&backend=pallas",
+    ])
+    def test_resolve_roundtrip(self, spec):
+        strategy = resolve(spec)
+        assert strategy.spec == spec
+        assert resolve(strategy.spec) == strategy
+
+    def test_canonical_spec_omits_defaults(self):
+        assert resolve("serial?chunk=512").spec == "serial"
+        assert resolve("tree?backend=auto").spec == "tree"
+
+    def test_resolve_rejects_unknown_name(self):
+        with pytest.raises(ValueError, match="unknown MOA strategy"):
+            resolve("carry_save")
+
+    def test_resolve_rejects_unknown_param(self):
+        with pytest.raises(ValueError, match="no parameter"):
+            resolve("serial?block=4")
+
+    def test_resolve_rejects_bad_value(self):
+        with pytest.raises(ValueError):
+            resolve("serial?chunk=banana")
+
+    def test_strategy_validation(self):
+        with pytest.raises(ValueError):
+            resolve("serial?chunk=0")
+        with pytest.raises(ValueError):
+            resolve("loa?approx_bits=9&width=8")
+        with pytest.raises(ValueError):
+            resolve("tree?backend=fpga")
+
+    def test_register_custom_strategy(self):
+        """A new scheduling strategy is one subclass + one registration."""
+
+        @register_strategy
+        @dataclasses.dataclass(frozen=True)
+        class TwoLevelStrategy(SerialStrategy):
+            """Tree-of-serial: serial clusters combined by an outer tree."""
+            name = "twolevel"
+
+            def sum(self, x, *, axis=-1):
+                x2, restore = self._flatten_sum(x, axis)
+                acc = self.accum_dtype_for(x2.dtype)
+                n = x2.shape[0]
+                pad = -n % self.chunk
+                x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+                partials = jnp.sum(
+                    x2.reshape(-1, self.chunk, x2.shape[1]).astype(acc),
+                    axis=1)
+                from repro.moa.backends import tree_sum
+                return restore(tree_sum(partials, acc))
+
+        try:
+            strategy = resolve("twolevel?chunk=8")
+            x = jnp.arange(100, dtype=jnp.float32)
+            np.testing.assert_allclose(
+                np.asarray(strategy.sum(x, axis=0)), 4950.0)
+            assert "twolevel" in available_strategies()
+        finally:
+            from repro.moa import registry as reg
+            reg._REGISTRY.pop("twolevel", None)
+            reg._PARSE_CACHE.clear()
+
+    def test_legacy_reduction_strategy_converts(self):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            from repro.core.moa import ReductionStrategy
+        legacy = ReductionStrategy(kind="serial", chunk=7)
+        strategy = resolve(legacy)
+        assert isinstance(strategy, SerialStrategy) and strategy.chunk == 7
+        # satellite fix: LOA width no longer dropped on conversion
+        legacy_loa = ReductionStrategy(kind="loa", approx_bits=3, width=12)
+        strategy = resolve(legacy_loa)
+        assert isinstance(strategy, LOAStrategy)
+        assert (strategy.approx_bits, strategy.width) == (3, 12)
+
+
+# ---------------------------------------------------------------------------
+# ModelConfig integration (per-site overrides, width threading)
+# ---------------------------------------------------------------------------
+
+def _tiny_cfg(**kw):
+    return ModelConfig(name="t", family="dense", n_layers=1, d_model=32,
+                       vocab=64, n_heads=2, n_kv_heads=2, head_dim=16,
+                       d_ff=64, **kw)
+
+
+class TestConfigIntegration:
+    def test_default_strategy_resolves(self):
+        cfg = _tiny_cfg()
+        assert cfg.moa_strategy == SerialStrategy(chunk=4096)
+
+    def test_per_site_override_resolution(self):
+        cfg = _tiny_cfg(moa="serial?chunk=64",
+                        moa_overrides={"mlp": "tree",
+                                       "attention": "serial?chunk=16"})
+        assert cfg.moa_for("mlp") == TreeStrategy()
+        assert cfg.moa_for("attention") == SerialStrategy(chunk=16)
+        # un-overridden sites fall back to the model-wide spec
+        assert cfg.moa_for("moe") == SerialStrategy(chunk=64)
+        # dict input normalized to a hashable sorted tuple
+        assert isinstance(cfg.moa_overrides, tuple)
+        hash(cfg)
+
+    def test_unknown_site_rejected(self):
+        with pytest.raises(ValueError, match="unknown MOA site"):
+            _tiny_cfg(moa_overrides={"softmax": "tree"})
+
+    def test_bad_spec_rejected_at_config_time(self):
+        with pytest.raises(ValueError):
+            _tiny_cfg(moa="serial?chunk=banana")
+
+    def test_loa_width_threads_end_to_end(self):
+        """Regression: the old flat config dropped the LOA operand width."""
+        cfg = _tiny_cfg(moa="loa?approx_bits=2&width=12")
+        strategy = cfg.moa_strategy
+        assert (strategy.approx_bits, strategy.width) == (2, 12)
+        assert cfg.moa_for("mlp").width == 12
+
+    def test_strategy_instance_accepted(self):
+        cfg = _tiny_cfg(moa=TreeStrategy(accum="bfloat16"))
+        assert cfg.moa_strategy.accum == "bfloat16"
+
+
+# ---------------------------------------------------------------------------
+# backend dispatch parity: jnp vs pallas (interpret mode on CPU)
+# ---------------------------------------------------------------------------
+
+def _operands(dtype, rng):
+    ka, kb = jax.random.split(rng)
+    if dtype == jnp.int8:
+        a = jax.random.randint(ka, (24, 96), -8, 8, jnp.int8)
+        b = jax.random.randint(kb, (96, 16), -8, 8, jnp.int8)
+    else:
+        a = jax.random.normal(ka, (24, 96), jnp.float32).astype(dtype)
+        b = jax.random.normal(kb, (96, 16), jnp.float32).astype(dtype)
+    return a, b
+
+
+_PARITY_SPECS = {
+    "tree": ("tree", "tree?backend=pallas"),
+    "serial": ("serial?chunk=32", "serial?backend=pallas&chunk=32"),
+    # LOA backends agree bitwise at approx_bits=0 (both exact); for l>0 the
+    # approximation sits at different points of the fold structure by design
+    "loa": ("loa?approx_bits=0&chunk=32",
+            "loa?approx_bits=0&backend=pallas&chunk=32"),
+}
+
+
+class TestBackendParity:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int8],
+                             ids=["f32", "bf16", "int8"])
+    @pytest.mark.parametrize("name", sorted(_PARITY_SPECS))
+    def test_dot_parity(self, rng, name, dtype):
+        jnp_spec, pallas_spec = _PARITY_SPECS[name]
+        a, b = _operands(dtype, rng)
+        if resolve(jnp_spec).integer_only and dtype != jnp.int8:
+            for spec in (jnp_spec, pallas_spec):
+                with pytest.raises(TypeError, match="integer"):
+                    resolve(spec).dot(a, b)
+            return
+        got_jnp = np.asarray(resolve(jnp_spec).dot(a, b), np.float32)
+        got_pallas = np.asarray(resolve(pallas_spec).dot(a, b), np.float32)
+        if dtype == jnp.int8:
+            np.testing.assert_array_equal(got_pallas, got_jnp)
+        else:
+            np.testing.assert_allclose(
+                got_pallas, got_jnp,
+                rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+                atol=1e-1 if dtype == jnp.bfloat16 else 1e-4)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int8],
+                             ids=["f32", "bf16", "int8"])
+    @pytest.mark.parametrize("name", sorted(_PARITY_SPECS))
+    def test_sum_parity(self, rng, name, dtype):
+        jnp_spec, pallas_spec = _PARITY_SPECS[name]
+        if dtype == jnp.int8:
+            x = jax.random.randint(rng, (96, 8), 0, 100, jnp.int32)
+        else:
+            x = jax.random.normal(rng, (96, 8), jnp.float32).astype(dtype)
+        if resolve(jnp_spec).integer_only and dtype != jnp.int8:
+            for spec in (jnp_spec, pallas_spec):
+                with pytest.raises(TypeError, match="integer"):
+                    resolve(spec).sum(x, axis=0)
+            return
+        got_jnp = np.asarray(resolve(jnp_spec).sum(x, axis=0), np.float32)
+        got_pallas = np.asarray(resolve(pallas_spec).sum(x, axis=0),
+                                np.float32)
+        np.testing.assert_allclose(
+            got_pallas, got_jnp,
+            rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5, atol=1e-3)
+
+    def test_loa_approx_error_bounded(self, rng):
+        """Both backends stay within the per-fold LOA deviation bound."""
+        ka, kb = jax.random.split(rng)
+        a = jax.random.randint(ka, (16, 128), 0, 8, jnp.int32)
+        b = jax.random.randint(kb, (128, 16), 0, 8, jnp.int32)
+        want = np.asarray(a) @ np.asarray(b)
+        for spec in ("loa?approx_bits=4&chunk=32",
+                     "loa?approx_bits=4&backend=pallas&chunk=32"):
+            got = np.asarray(resolve(spec).dot(a, b))
+            # jnp: LOA tree over 128 partials (7 levels, widths grow);
+            # pallas: 3 accumulator folds — both << this loose bound
+            assert np.abs(got - want).max() <= 128 * (1 << 4), spec
+
+    def test_pallas_dot_differentiable(self, rng):
+        """The custom-VJP wrapper makes the kernel usable in training."""
+        ka, kb = jax.random.split(rng)
+        a = jax.random.normal(ka, (8, 32))
+        b = jax.random.normal(kb, (32, 4))
+
+        def loss(spec):
+            return lambda aa, bb: jnp.sum(resolve(spec).dot(aa, bb) ** 2)
+
+        g_jnp = jax.grad(loss("serial?chunk=8"))(a, b)
+        g_pal = jax.grad(loss("serial?backend=pallas&chunk=8"))(a, b)
+        np.testing.assert_allclose(np.asarray(g_pal), np.asarray(g_jnp),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_batched_dot_flattens_leading_dims(self, rng):
+        a = jax.random.normal(rng, (3, 5, 8, 64))
+        b = jax.random.normal(jax.random.fold_in(rng, 1), (64, 16))
+        want = np.asarray(jnp.einsum("...k,kn->...n", a, b))
+        got = np.asarray(
+            resolve("serial?backend=pallas&chunk=16").dot(a, b))
+        assert got.shape == (3, 5, 8, 16)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# cost interface
+# ---------------------------------------------------------------------------
+
+class TestCost:
+    def test_exact_strategies_cost_one_op_per_add(self):
+        for spec in ("tree", "serial?chunk=128", "loa?approx_bits=0"):
+            cost = resolve(spec).cost(4096, "bfloat16")
+            assert cost["ops_per_add"] == 1.0 and cost["exact"]
+
+    def test_serial_sequential_steps(self):
+        cost = resolve("serial?chunk=512").cost(4096, "float32")
+        assert cost["sequential_steps"] == 8
+        assert cost["working_set_operands"] == 512
+
+    def test_loa_costs_more_never_less(self):
+        """The paper's negative result as an invariant: approximation pays."""
+        exact = resolve("loa?approx_bits=0").cost(1024, "int8")
+        approx = resolve("loa?approx_bits=4").cost(1024, "int8")
+        assert approx["flops"] > exact["flops"]
+        assert not approx["exact"]
+
+    def test_costing_charges_loa_overhead(self):
+        from repro.launch import costing
+        cfg = _tiny_cfg()
+        cfg_loa = _tiny_cfg(moa_overrides={"mlp": "loa?approx_bits=4"})
+        base = costing.forward_flops(cfg, tokens=64.0, s_attn=32.0)
+        loa = costing.forward_flops(cfg_loa, tokens=64.0, s_attn=32.0)
+        assert loa["mlp"] > base["mlp"]
+        assert loa["attn_qkv"] == base["attn_qkv"]
+
+
+# ---------------------------------------------------------------------------
+# scope + live model routing + deprecation shim
+# ---------------------------------------------------------------------------
+
+class TestScopeAndRouting:
+    def test_moa_scope_wins_over_explicit(self):
+        outer = resolve("serial?chunk=8")
+        with moa_scope("tree"):
+            assert active_strategy(outer) == TreeStrategy()
+            with moa_scope("serial?chunk=4"):
+                assert active_strategy(outer) == SerialStrategy(chunk=4)
+            assert active_strategy(outer) == TreeStrategy()
+        assert active_strategy(outer) == outer
+
+    def test_model_stack_routes_through_registry(self, rng):
+        """Dense contractions resolve their strategy from the registry."""
+        from repro.configs.registry import get_config, smoke_config
+        from repro.models.api import build_model
+
+        cfg = smoke_config(get_config("llama3-8b"))
+        model = build_model(cfg)
+        params = model.init(rng)
+        batch = model.make_batch(rng, ShapeSpec("t", 16, 2, "train"),
+                                 batch_override=2, seq_override=16)
+        before = registry_stats()["resolve_calls"]
+        loss_a = float(model.loss(params, batch)[0])
+        assert registry_stats()["resolve_calls"] > before
+
+        # and moa_scope retargets the same model at trace time
+        before_hits = registry_stats()["scope_hits"]
+        with moa_scope("serial?chunk=8"):
+            loss_b = float(model.loss(params, batch)[0])
+        assert registry_stats()["scope_hits"] > before_hits
+        assert abs(loss_a - loss_b) < 5e-3  # exact up to reassociation
+
+    def test_auto_backend_selects_pallas_on_tpu(self, monkeypatch):
+        """backend="auto" routes to the Pallas kernels iff running on TPU."""
+        import repro.moa.base as moa_base
+
+        strategy = resolve("serial?chunk=64")
+        monkeypatch.setattr(moa_base.jax, "default_backend", lambda: "tpu")
+        assert strategy.resolve_backend() == "pallas"
+        monkeypatch.setattr(moa_base.jax, "default_backend", lambda: "cpu")
+        assert strategy.resolve_backend() == "jnp"
+
+    def test_deprecation_shim_surface(self):
+        import repro.core.moa as shim
+
+        with pytest.warns(DeprecationWarning):
+            importlib.reload(shim)
+        from repro.core.moa import (SERIAL, TREE, ReductionStrategy, moa_dot,
+                                    moa_sum)
+
+        assert TREE.kind == "tree" and SERIAL.kind == "serial"
+        x = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
+        np.testing.assert_allclose(
+            np.asarray(moa_sum(x, axis=0, strategy=TREE)),
+            np.asarray(jnp.sum(x, axis=0)), rtol=1e-6)
+        a = jnp.ones((4, 16), jnp.float32)
+        b = jnp.ones((16, 4), jnp.float32)
+        got = moa_dot(a, b, strategy=ReductionStrategy(kind="serial", chunk=4))
+        np.testing.assert_allclose(np.asarray(got), 16.0)
+        assert isinstance(TREE.to_strategy(), MOAStrategy)
+        # chunked_matmul still importable from the old location
+        from repro.core.moa import chunked_matmul
+        np.testing.assert_allclose(
+            np.asarray(chunked_matmul(a, b, chunk=4)), 16.0)

@@ -224,15 +224,11 @@ class TestCNN:
                                    rtol=1e-4, atol=1e-4)
 
     def test_im2col_conv_serial_strategy(self, key):
-        from repro.core.moa import ReductionStrategy
-
         kx, kw = jax.random.split(key)
         x = jax.random.normal(kx, (1, 12, 12, 3))
         w = jax.random.normal(kw, (4, 3, 3, 3))
         b = jnp.zeros((4,))
         tree = cnn.im2col_conv(x, w, b, stride=1)
-        serial = cnn.im2col_conv(
-            x, w, b, stride=1,
-            strategy=ReductionStrategy(kind="serial", chunk=8))
+        serial = cnn.im2col_conv(x, w, b, stride=1, strategy="serial?chunk=8")
         np.testing.assert_allclose(np.asarray(serial), np.asarray(tree),
                                    rtol=1e-4, atol=1e-4)

@@ -175,8 +175,9 @@ class TestMoaStrategyEndToEnd:
 
     def test_serial_chunk_does_not_change_loss(self, rng):
         cfg = smoke_config(get_config("llama3-8b"))
-        model_a = build_model(dataclasses.replace(cfg, moa_chunk=1 << 20))
-        model_b = build_model(dataclasses.replace(cfg, moa_chunk=16))
+        model_a = build_model(dataclasses.replace(
+            cfg, moa=f"serial?chunk={1 << 20}"))
+        model_b = build_model(dataclasses.replace(cfg, moa="serial?chunk=16"))
         params = model_a.init(rng)
         batch = model_a.make_batch(
             rng, ShapeSpec("t", 32, 2, "train"), batch_override=2,
@@ -187,9 +188,9 @@ class TestMoaStrategyEndToEnd:
 
     def test_tree_strategy_matches_serial(self, rng):
         cfg = smoke_config(get_config("llama3-8b"))
-        model_a = build_model(dataclasses.replace(cfg, moa_kind="tree"))
+        model_a = build_model(dataclasses.replace(cfg, moa="tree"))
         model_b = build_model(dataclasses.replace(
-            cfg, moa_kind="serial", moa_chunk=16))
+            cfg, moa="serial?chunk=16"))
         params = model_a.init(rng)
         batch = model_a.make_batch(
             rng, ShapeSpec("t", 32, 2, "train"), batch_override=2,
