@@ -1,0 +1,107 @@
+"""Serving benchmark: continuous-batching engine under a Poisson workload,
+JSON results (the BENCH trajectory's machine-readable record).
+
+Emits one JSON document with the run configuration, per-request records
+(TTFT ms, per-token latency ms, tok/s, strategy-priced MOA FLOPs) and the
+aggregate report (total tok/s, latency distributions, slot occupancy,
+slot reuse).
+
+  PYTHONPATH=src python -m benchmarks.serving --smoke --json out.json
+  PYTHONPATH=src python -m benchmarks.serving --arch mamba2-370m --smoke \
+      --requests 16 --rate 100 --slots 8 --json out.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import jax
+
+from repro.configs.registry import get_config, smoke_config
+from repro.models.api import build_model
+from repro.serve import GREEDY, Sampler, ServeEngine, poisson_workload
+
+
+def run(*, arch: str = "llama3-8b", smoke: bool = True, requests: int = 8,
+        rate_rps: float = 50.0, slots: int = 4, max_len: int = 96,
+        prompt_len_range=(4, 24), gen_len_range=(2, 12),
+        temperature: float = 0.0, seed: int = 0,
+        warmup: bool = True) -> dict:
+    """Run the workload through the engine; returns the JSON-able record.
+
+    ``warmup`` replays the same workload once unmeasured first, so XLA
+    compilation of each prefill bucket and the decode step lands outside
+    the measured TTFT / per-token distributions.
+    """
+    cfg = get_config(arch)
+    if smoke:
+        cfg = smoke_config(cfg)
+    if cfg.family == "encoder":
+        raise ValueError("encoder-only arch has no decode step")
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(seed)
+    params = model.init(rng)
+    engine = ServeEngine(model, params, n_slots=slots, max_len=max_len,
+                         rng=rng)
+    make_workload = lambda: poisson_workload(
+        n_requests=requests, vocab=cfg.vocab, rate_rps=rate_rps,
+        prompt_len_range=prompt_len_range, gen_len_range=gen_len_range,
+        sampler=Sampler(temperature) if temperature > 0 else GREEDY,
+        seed=seed)
+    if warmup:
+        engine.run(make_workload())
+    results, report = engine.run(make_workload())
+    return {
+        "schema": "serving-v1",
+        "config": {
+            "arch": cfg.name, "family": cfg.family, "smoke": smoke,
+            "moa": cfg.moa_strategy.spec, "n_slots": slots,
+            "max_len": max_len, "requests": requests, "rate_rps": rate_rps,
+            "prompt_len_range": list(prompt_len_range),
+            "gen_len_range": list(gen_len_range),
+            "temperature": temperature, "seed": seed, "warmup": warmup,
+        },
+        "requests": [r.to_json() for r in results],
+        "aggregate": report,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="Continuous-batching serving benchmark (JSON output)")
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=50.0)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=96)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-warmup", action="store_true",
+                    help="skip the unmeasured warmup replay (metrics then "
+                         "include XLA compile time)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the JSON record here (default: stdout)")
+    args = ap.parse_args(argv)
+
+    record = run(arch=args.arch, smoke=args.smoke, requests=args.requests,
+                 rate_rps=args.rate, slots=args.slots, max_len=args.max_len,
+                 temperature=args.temperature, seed=args.seed,
+                 warmup=not args.no_warmup)
+    text = json.dumps(record, indent=2)
+    if args.json:
+        with open(args.json, "w") as f:
+            f.write(text + "\n")
+        agg = record["aggregate"]
+        print(f"[bench] wrote {args.json}: {agg['n_requests']} requests, "
+              f"{agg['tok_per_s']:.1f} tok/s, "
+              f"ttft p50={agg['ttft_ms']['p50']:.0f}ms, "
+              f"occupancy={agg['slot_occupancy']:.2f}", file=sys.stderr)
+    else:
+        print(text)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,7 @@
 """Batched serving demo across families: dense (KV cache), SSM (constant
-state), hybrid (mixed) — prefill + greedy decode with latency stats.
+state), hybrid (mixed) — prefill + greedy decode with latency stats, plus
+a continuous-batching run (Poisson arrivals into a slot scheduler; see
+docs/serving.md).
 
   PYTHONPATH=src python examples/serve_lm.py
 """
@@ -15,6 +17,7 @@ from repro.configs.base import ShapeSpec
 from repro.configs.registry import get_config, smoke_config
 from repro.launch.serve import serve_batch
 from repro.models.api import build_model
+from repro.serve import ServeEngine, poisson_workload
 
 
 def main():
@@ -35,6 +38,19 @@ def main():
               f"{stats['prefill_s']*1e3:6.0f}ms  decode "
               f"{stats['per_token_ms']:6.1f}ms/tok  "
               f"{stats['decode_tok_per_s']:7.1f} tok/s  | {state_kind}")
+
+    # continuous batching: open-loop arrivals into a 3-slot engine
+    cfg = smoke_config(get_config("llama3-8b"))
+    model = build_model(cfg)
+    params = model.init(rng)
+    engine = ServeEngine(model, params, n_slots=3, max_len=64)
+    results, report = engine.run(poisson_workload(
+        n_requests=8, rate_rps=100.0, vocab=cfg.vocab,
+        prompt_len_range=(4, 24), gen_len_range=(2, 10)))
+    print(f"\ncontinuous batching: {report['n_requests']} requests over "
+          f"{report['n_slots']} slots — {report['tok_per_s']:.1f} tok/s, "
+          f"occupancy {report['slot_occupancy']:.2f}, "
+          f"{report['slot_reuse']} slot reuses")
 
 
 if __name__ == "__main__":

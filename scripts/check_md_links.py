@@ -1,0 +1,55 @@
+#!/usr/bin/env python3
+"""Markdown link check: every relative link in README.md + docs/ resolves.
+
+Stdlib-only (runs in CI without extra deps). External (http/https/mailto)
+links are not fetched — only intra-repo targets are verified, anchors
+stripped. Exit code 1 with a per-link report on any broken target.
+
+  python scripts/check_md_links.py [root]
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+# [text](target) — skips images' leading ! capture-wise irrelevant; ignores
+# fenced code blocks below
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_SCHEMES = ("http://", "https://", "mailto:", "ftp://")
+
+
+def _links(text: str):
+    in_fence = False
+    for line in text.splitlines():
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        yield from _LINK.findall(line)
+
+
+def check(root: pathlib.Path) -> int:
+    files = [root / "README.md"] + sorted((root / "docs").glob("**/*.md"))
+    broken = []
+    for md in files:
+        if not md.exists():
+            broken.append((md, "<file missing>"))
+            continue
+        for target in _links(md.read_text()):
+            if target.startswith(_SCHEMES) or target.startswith("#"):
+                continue
+            rel = target.split("#")[0]
+            if not (md.parent / rel).exists():
+                broken.append((md, target))
+    for md, target in broken:
+        print(f"BROKEN {md.relative_to(root)}: {target}")
+    print(f"checked {len(files)} files; {len(broken)} broken links")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    root = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else ".").resolve()
+    sys.exit(check(root))

@@ -32,7 +32,7 @@ from typing import Dict
 
 from repro.configs.base import ModelConfig, ShapeSpec
 
-__all__ = ["CellCost", "estimate_cell"]
+__all__ = ["CellCost", "estimate_cell", "request_decode_cost"]
 
 BF16 = 2
 F32 = 4
@@ -219,6 +219,27 @@ def forward_flops(cfg: ModelConfig, *, tokens: float, s_attn: float,
         comp["moe_experts"] *= _moa_flops_multiplier(cfg, "moe", cfg.d_ff)
         comp["moe_router"] *= _moa_flops_multiplier(cfg, "moe", cfg.d_model)
     return comp
+
+
+def request_decode_cost(cfg: ModelConfig, *, prompt_tokens: int,
+                        new_tokens: int) -> float:
+    """Strategy-priced FLOPs of one serve request's decode steps.
+
+    The first generated token comes from the prefill logits, so this sums
+    :func:`forward_flops` over the remaining ``new_tokens - 1`` single-token
+    decode steps, with the attended context growing by one token per step
+    (``prompt_tokens + t + 1``). Each step inherits the per-site MOA
+    multipliers, so exact strategies (tree/serial) price at 1.0× while
+    approximate ones (LOA: ~6 VPU ops per fold) inflate the total — the
+    serving-level view of the §3.2 inversion. O(new_tokens) Python loop;
+    units: FLOPs (global, this request only).
+    """
+    total = 0.0
+    for t in range(max(new_tokens - 1, 0)):
+        s_attn = float(prompt_tokens + t + 1)
+        total += sum(forward_flops(cfg, tokens=1.0, s_attn=s_attn,
+                                   decode=True).values())
+    return total
 
 
 def _train_multiplier(cfg: ModelConfig) -> float:

@@ -1,13 +1,16 @@
-"""Batched serving driver: continuous prefill → greedy decode.
+"""Serving CLI: continuous-batching engine (default) or static batch.
 
-Serves any registry arch (``--smoke`` for CPU-runnable sizes): builds the
-model, prefills a batch of prompts, then runs batched single-token decode
-steps with donated cache buffers. Reports per-phase latency and
-tokens/sec. The decode loop is the paper's serial accumulator running at
-the system level: one operand (token) per step into a constant-size state.
+Thin front-end over :mod:`repro.serve`. The default mode drives the
+:class:`~repro.serve.engine.ServeEngine` with a synthetic Poisson workload
+(open-loop arrivals, mixed prompt/generation lengths) and prints per-request
+and aggregate latency/throughput metrics; ``--static`` keeps the original
+lockstep path (:func:`serve_batch`: one joint prefill, then batched greedy
+or sampled decode — the fast path when all requests start together).
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
-      --batch 4 --prompt-len 64 --gen-len 32
+      --requests 8 --rate 50 --slots 4
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
+      --static --batch 4 --prompt-len 64 --gen-len 32 --temperature 0.8
 """
 
 from __future__ import annotations
@@ -22,13 +25,23 @@ import numpy as np
 from repro.configs.base import ShapeSpec
 from repro.configs.registry import get_config, smoke_config
 from repro.models.api import build_model
+from repro.serve import GREEDY, Sampler, ServeEngine, poisson_workload
 
 __all__ = ["serve_batch", "main"]
 
 
 def serve_batch(model, params, prompts: dict, *, gen_len: int,
-                max_len: int, greedy: bool = True, rng=None):
-    """Prefill + decode ``gen_len`` tokens. Returns (tokens, timings)."""
+                max_len: int, sampler: Sampler = GREEDY, rng=None):
+    """Static-batch serving: joint prefill + ``gen_len`` lockstep decode
+    steps with donated cache buffers.
+
+    ``sampler`` is the single next-token policy for the whole batch
+    (``rng`` required when it is not greedy). Returns ``(tokens, timings)``
+    where ``tokens`` is ``(B, gen_len)`` int32 and timings are in seconds
+    (``per_token_ms`` in milliseconds).
+    """
+    if not sampler.greedy and rng is None:
+        raise ValueError("non-greedy sampler needs an rng key")
     prefill_fn = jax.jit(
         lambda p, b: model.prefill(p, b, max_len=max_len))
     decode_fn = jax.jit(model.decode_step, donate_argnums=(1,))
@@ -40,17 +53,20 @@ def serve_batch(model, params, prompts: dict, *, gen_len: int,
 
     B = logits.shape[0]
     out_tokens = []
-    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+
+    def next_tok(lg):
+        nonlocal rng
+        if sampler.greedy:
+            return sampler(lg[:, -1])[:, None]
+        rng, k = jax.random.split(rng)
+        return sampler(lg[:, -1], k)[:, None]
+
+    tok = next_tok(logits)
     t0 = time.monotonic()
-    for i in range(gen_len):
+    for _ in range(gen_len):
         out_tokens.append(tok)
         logits, cache = decode_fn(params, cache, tok)
-        if greedy or rng is None:
-            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-        else:
-            rng, k = jax.random.split(rng)
-            tok = jax.random.categorical(k, logits[:, -1])[:, None] \
-                .astype(jnp.int32)
+        tok = next_tok(logits)
     tok.block_until_ready()
     t_decode = time.monotonic() - t0
     tokens = jnp.concatenate(out_tokens, axis=1)
@@ -62,36 +78,98 @@ def serve_batch(model, params, prompts: dict, *, gen_len: int,
     }
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen-len", type=int, default=32)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
-
+def _build(args):
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = smoke_config(cfg)
     if cfg.family == "encoder":
         raise SystemExit("encoder-only arch has no decode step "
                          "(assignment skip rule)")
-    model = build_model(cfg)
+    return cfg, build_model(cfg)
+
+
+def _sampler(args) -> Sampler:
+    return GREEDY if args.greedy else Sampler(args.temperature)
+
+
+def _run_static(args):
+    cfg, model = _build(args)
     rng = jax.random.PRNGKey(args.seed)
     params = model.init(rng)
     shape = ShapeSpec("serve", args.prompt_len, args.batch, "prefill")
     prompts = model.make_batch(rng, shape)
     max_len = args.prompt_len + args.gen_len + 1
     tokens, stats = serve_batch(model, params, prompts,
-                                gen_len=args.gen_len, max_len=max_len)
+                                gen_len=args.gen_len, max_len=max_len,
+                                sampler=_sampler(args), rng=rng)
     print(f"[serve] arch={cfg.name} batch={args.batch} "
           f"prompt={args.prompt_len} gen={args.gen_len}")
     print(f"[serve] prefill={stats['prefill_s']*1e3:.0f}ms "
           f"decode={stats['per_token_ms']:.1f}ms/tok "
           f"throughput={stats['decode_tok_per_s']:.1f} tok/s")
     print(f"[serve] sample: {np.asarray(tokens[0, :16]).tolist()}")
+
+
+def _run_engine(args):
+    cfg, model = _build(args)
+    rng = jax.random.PRNGKey(args.seed)
+    params = model.init(rng)
+    max_len = args.max_len or (args.prompt_len + args.gen_len + 1) * 2
+    engine = ServeEngine(model, params, n_slots=args.slots, max_len=max_len,
+                         rng=rng)
+    requests = poisson_workload(
+        n_requests=args.requests, vocab=cfg.vocab, rate_rps=args.rate,
+        prompt_len_range=(min(4, args.prompt_len), args.prompt_len),
+        gen_len_range=(min(2, args.gen_len), args.gen_len),
+        sampler=_sampler(args), seed=args.seed)
+    results, report = engine.run(requests)
+    print(f"[serve] arch={cfg.name} slots={args.slots} max_len={max_len} "
+          f"requests={args.requests} rate={args.rate}/s")
+    for r in results:
+        m = r.metrics
+        print(f"[serve]   req {r.uid}: slot={r.slot} prompt={r.prompt_len} "
+              f"gen={r.tokens.size} ttft={m.ttft_s*1e3:.0f}ms "
+              f"{m.per_token_ms:.1f}ms/tok ({r.finish_reason.value})")
+    print(f"[serve] aggregate: {report['tok_per_s']:.1f} tok/s, "
+          f"ttft p50={report['ttft_ms']['p50']:.0f}ms "
+          f"p95={report['ttft_ms']['p95']:.0f}ms, "
+          f"occupancy={report['slot_occupancy']:.2f}, "
+          f"slot_reuse={report['slot_reuse']}")
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description="Serve a registry arch: continuous batching (default) "
+                    "or --static lockstep batch")
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced CPU-runnable config")
+    ap.add_argument("--static", action="store_true",
+                    help="static-batch serve_batch path")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="[static] batch size")
+    ap.add_argument("--prompt-len", type=int, default=64,
+                    help="prompt tokens ([engine] upper bound of the range)")
+    ap.add_argument("--gen-len", type=int, default=32,
+                    help="generated tokens ([engine] upper bound)")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="[engine] number of workload requests")
+    ap.add_argument("--rate", type=float, default=50.0,
+                    help="[engine] Poisson arrival rate, requests/s")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="[engine] decode slots (in-flight requests)")
+    ap.add_argument("--max-len", type=int, default=0,
+                    help="[engine] per-slot context capacity, tokens")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy)")
+    ap.add_argument("--greedy", action="store_true",
+                    help="force greedy decode regardless of --temperature")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.static:
+        _run_static(args)
+    else:
+        _run_engine(args)
 
 
 if __name__ == "__main__":

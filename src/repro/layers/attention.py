@@ -57,6 +57,10 @@ def full_attention(q, k, v, *, causal: bool, positions_q=None, positions_kv=None
 
     Kept as the ``tree`` MOA strategy baseline and for tiny smoke shapes;
     the memory roofline term it produces is the §Perf before/after foil.
+
+    ``kv_len`` limits which cache positions are attended: a scalar applies
+    to the whole batch, a ``(B,)`` vector gives per-sequence valid lengths
+    (continuous-batching decode, where slots sit at different positions).
     """
     B, Sq, H, D = q.shape
     _, Skv, Hk, _ = k.shape
@@ -71,9 +75,13 @@ def full_attention(q, k, v, *, causal: bool, positions_q=None, positions_kv=None
     mask = jnp.ones((Sq, Skv), bool)
     if causal:
         mask &= positions_kv[None, :] <= positions_q[:, None]
-    if kv_len is not None:
+    if kv_len is not None and jnp.ndim(kv_len) == 0:
         mask &= positions_kv[None, :] < kv_len
-    s = jnp.where(mask[None, None, None], s, _NEG_INF)
+    mask = mask[None, None, None]                       # (1, 1, 1, Sq, Skv)
+    if kv_len is not None and jnp.ndim(kv_len) != 0:
+        per_seq = positions_kv[None, :] < kv_len[:, None]   # (B, Skv)
+        mask = mask & per_seq[:, None, None, None, :]
+    s = jnp.where(mask, s, _NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
     return o.reshape(B, Sq, H, D).astype(q.dtype)

@@ -69,18 +69,61 @@ class Model:
         return loss, metrics
 
     # ---- serving ----------------------------------------------------------
+    @property
+    def supports_padded_prefill(self) -> bool:
+        """Whether ``prefill(..., prompt_len=p)`` with right-padded prompts
+        is exact: attention families mask padded K/V rows away; SSM/hybrid
+        recurrent state would absorb the pad tokens, so they require
+        exact-length prompts (the serve engine compiles one prefill per
+        bucket length instead of padding). VLM is excluded: ``prompt_len``
+        indexes the text positions only, but the prefill sequence carries
+        the patch prefix, so the padded slice/pos bookkeeping would be
+        offset by ``n_patches``. MoE is included only in the dropless
+        regime (``capacity_factor >= n_experts / top_k``): below that, pad
+        tokens compete with real tokens for expert capacity and padded
+        prefill silently diverges from the exact-length path."""
+        cfg = self.cfg
+        if cfg.family == "moe":
+            return cfg.capacity_factor >= cfg.n_experts / max(cfg.top_k, 1)
+        return cfg.family == "dense"
+
     def init_cache(self, batch: int, max_len: int):
+        """Zeroed decode state for ``batch`` sequences of capacity
+        ``max_len`` tokens (KV caches and/or SSM states, plus a ``pos``
+        write cursor — scalar int32; the serve engine broadcasts it to a
+        ``(batch,)`` vector for per-slot positions)."""
         return self._mod.init_cache(self.cfg, batch, max_len)
 
-    def prefill(self, params, batch, *, max_len: int):
+    def prefill(self, params, batch, *, max_len: int, prompt_len=None):
+        """Run the prompt through the model, filling the cache.
+
+        Returns ``(logits, cache)`` where ``logits`` is ``(B, 1, vocab)``
+        at the last *real* prompt position. ``prompt_len`` (scalar int,
+        tokens) marks the true length of a right-padded prompt; only
+        supported when :attr:`supports_padded_prefill` (exactness —
+        ValueError otherwise).
+        """
         if self.cfg.family == "encoder":
             # encoder "prefill" is a bidirectional encode: no KV cache, no
             # decode step exists (assignment skip rule covers decode shapes)
             logits = self._mod.forward(params, batch, self.cfg)
             return logits, {"pos": jnp.asarray(logits.shape[1], jnp.int32)}
-        return self._mod.prefill(params, batch, self.cfg, max_len=max_len)
+        if prompt_len is None:
+            return self._mod.prefill(params, batch, self.cfg, max_len=max_len)
+        if not self.supports_padded_prefill:
+            raise ValueError(
+                f"family {self.cfg.family!r} cannot prefill padded prompts: "
+                "recurrent state would absorb the pad tokens")
+        return self._mod.prefill(params, batch, self.cfg, max_len=max_len,
+                                 prompt_len=prompt_len)
 
     def decode_step(self, params, cache, tokens):
+        """One decode step: ``tokens (B, 1) int32`` → ``(logits, cache)``.
+
+        ``cache["pos"]`` may be a scalar (lockstep batch) or a ``(B,)``
+        vector (continuous batching: each slot writes/attends at its own
+        position).
+        """
         return self._mod.decode_step(params, cache, tokens, self.cfg)
 
     # ---- shapes ------------------------------------------------------------

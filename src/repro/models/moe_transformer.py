@@ -90,7 +90,16 @@ def forward(params: Params, batch: dict, cfg: ModelConfig):
 init_cache = dense.init_cache
 
 
-def prefill(params: Params, batch: dict, cfg: ModelConfig, *, max_len: int):
+def prefill(params: Params, batch: dict, cfg: ModelConfig, *, max_len: int,
+            prompt_len=None):
+    """Prefill; ``prompt_len`` as in :func:`repro.models.transformer.prefill`.
+
+    CAVEAT (documented in docs/serving.md): with right-padded prompts the
+    pad tokens still compete for expert capacity during prefill, so padded
+    MoE prefill is exact only in the dropless regime —
+    ``Model.supports_padded_prefill`` gates on
+    ``capacity_factor >= n_experts / top_k`` (smoke configs use 8).
+    """
     from repro.layers.rope import apply_rope
 
     h = embed(params["embed"], batch["tokens"], compute_dtype=cfg.cdtype)
@@ -128,9 +137,10 @@ def prefill(params: Params, batch: dict, cfg: ModelConfig, *, max_len: int):
 
     h, kv_layers = lax.scan(dense._remat(body, cfg), h, params["layers"])
     h = rms_norm(params["final_norm"], h)
-    logits = unembed(params["embed"], h[:, -1:], compute_dtype=cfg.cdtype)
+    h_last, pos = dense._last_real_slice(h, prompt_len)
+    logits = unembed(params["embed"], h_last, compute_dtype=cfg.cdtype)
     return (constrain(logits, "batch", None, "vocab"),
-            {"layers": kv_layers, "pos": jnp.asarray(h.shape[1], jnp.int32)})
+            {"layers": kv_layers, "pos": pos})
 
 
 def decode_step(params: Params, cache: Params, tokens, cfg: ModelConfig):

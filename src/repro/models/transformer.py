@@ -202,8 +202,32 @@ def _layer_prefill(layer: Params, h, *, cfg: ModelConfig, positions, max_len):
     return h, {"k": pad_seq(k), "v": pad_seq(v)}
 
 
-def prefill(params: Params, batch: dict, cfg: ModelConfig, *, max_len: int):
-    """Prefill the cache; returns (last-position logits, cache)."""
+def _last_real_slice(h, prompt_len):
+    """Select the last *real* position of a (possibly right-padded) prefill.
+
+    Returns ``(h_last (B, 1, d), pos scalar int32)``: with ``prompt_len``
+    given, ``h_last`` is the hidden state at ``prompt_len - 1`` and ``pos``
+    the cache cursor ``prompt_len``; with ``None`` the full sequence is
+    real. Shared by the dense and MoE prefill paths so the padded-prefill
+    semantics live in one place.
+    """
+    if prompt_len is None:
+        return h[:, -1:], jnp.asarray(h.shape[1], jnp.int32)
+    pos = jnp.asarray(prompt_len, jnp.int32)
+    return lax.dynamic_slice_in_dim(h, pos - 1, 1, axis=1), pos
+
+
+def prefill(params: Params, batch: dict, cfg: ModelConfig, *, max_len: int,
+            prompt_len=None):
+    """Prefill the cache; returns (last-position logits, cache).
+
+    ``prompt_len`` (scalar, tokens): true prompt length when the batch is
+    right-padded to a bucketed shape. Positions ``>= prompt_len`` are
+    causal-masked garbage; the returned logits are taken at position
+    ``prompt_len - 1`` and the cache ``pos`` is set to ``prompt_len`` so
+    decode masks (and then overwrites) the padded K/V rows. ``None`` means
+    the full sequence is real.
+    """
     h, positions, text_off = embed_inputs(params, batch, cfg)
     h = constrain(h, "batch", "seq", "embed")
 
@@ -214,9 +238,9 @@ def prefill(params: Params, batch: dict, cfg: ModelConfig, *, max_len: int):
 
     h, kv_layers = lax.scan(_remat(body, cfg), h, params["layers"])
     h = rms_norm(params["final_norm"], h)
-    logits = unembed(params["embed"], h[:, -1:], compute_dtype=cfg.cdtype)
-    cache = {"layers": kv_layers,
-             "pos": jnp.asarray(h.shape[1], jnp.int32)}
+    h_last, pos = _last_real_slice(h, prompt_len)
+    logits = unembed(params["embed"], h_last, compute_dtype=cfg.cdtype)
+    cache = {"layers": kv_layers, "pos": pos}
     return constrain(logits, "batch", "seq", "vocab"), cache
 
 

@@ -1,0 +1,31 @@
+"""Continuous-batching serve engine (the paper's serial accumulator at the
+system level).
+
+A fixed pool of decode *slots* plays the role of the constant-size
+accumulator state: requests stream in (Poisson open-loop or interactive
+``submit``), a freed slot immediately admits the next arrived request via a
+bucketed prefill, and one batched :meth:`~repro.models.api.Model.decode_step`
+per engine tick folds one token per active slot into the per-slot KV/SSM
+state. See ``docs/serving.md`` for the design and scheduler invariants.
+
+Public surface::
+
+    from repro.serve import (Request, Sampler, ServeEngine, poisson_workload)
+
+    engine = ServeEngine(model, params, n_slots=4, max_len=64)
+    results, report = engine.run(poisson_workload(
+        n_requests=8, rate_rps=50.0, vocab=model.cfg.vocab))
+"""
+
+from repro.serve.engine import ServeEngine
+from repro.serve.metrics import RequestMetrics, aggregate
+from repro.serve.request import FinishReason, Request, RequestResult
+from repro.serve.sampling import GREEDY, Sampler, sample_batch
+from repro.serve.scheduler import SlotScheduler
+from repro.serve.workload import poisson_workload
+
+__all__ = [
+    "FinishReason", "GREEDY", "Request", "RequestMetrics", "RequestResult",
+    "Sampler", "ServeEngine", "SlotScheduler", "aggregate", "sample_batch",
+    "poisson_workload",
+]

@@ -1,0 +1,269 @@
+"""Continuous-batching engine: slot-scheduled prefill + batched decode.
+
+One engine tick = (admit arrived requests into free slots via bucketed
+prefill) + (one batched ``decode_step`` over all slots). The batched cache
+holds every slot's KV/SSM state with a **per-slot position vector**
+(``cache["pos"]: (n_slots,) int32``), so slots sit at heterogeneous
+context lengths inside a single jitted decode step — the paper's serial
+accumulator with one accumulator per slot.
+
+Shape discipline (everything ``jax.jit`` sees is from a fixed set):
+  * decode: always ``(n_slots, 1)`` tokens against the same cache shapes;
+  * prefill: one shape per prompt bucket (attention families right-pad and
+    pass ``prompt_len``; SSM/hybrid compile one prefill per exact length
+    because pad tokens would pollute the recurrent state — see
+    ``docs/serving.md``);
+  * sampling: one ``(n_slots, vocab)`` mixed-policy call.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.costing import request_decode_cost
+from repro.serve.metrics import RequestMetrics, aggregate
+from repro.serve.request import FinishReason, Request, RequestResult
+from repro.serve.sampling import sample_batch
+from repro.serve.scheduler import SlotScheduler
+
+__all__ = ["ServeEngine"]
+
+
+@dataclasses.dataclass
+class _Inflight:
+    """Host-side state of one admitted request (device state lives in the
+    engine's batched cache at ``slot``)."""
+
+    request: Request
+    slot: int
+    generated: List[int]
+    next_token: int
+    metrics: RequestMetrics
+
+
+def _write_slot(cache: dict, pre: dict, slot):
+    """Copy a batch=1 prefill cache into row ``slot`` of the batched cache.
+
+    Every non-``pos`` leaf is laid out ``(stack, batch, ...)`` (layer or
+    app-point stack first, batch axis second) in all model families;
+    ``pos`` is the per-slot position vector and takes the prefill's scalar
+    cursor. Jitted with the batched cache donated.
+    """
+    out = {}
+    for key, big in cache.items():
+        if key == "pos":
+            out[key] = big.at[slot].set(pre["pos"].astype(big.dtype))
+        else:
+            out[key] = jax.tree.map(
+                lambda b, s: b.at[:, slot].set(s[:, 0].astype(b.dtype)),
+                big, pre[key])
+    return out
+
+
+class ServeEngine:
+    """Continuous-batching server over a :class:`repro.models.api.Model`.
+
+    Parameters
+    ----------
+    model, params:
+        A built model and its parameters. Any decode-capable *text*
+        family (dense / MoE / SSM / hybrid); VLM is rejected — the engine
+        feeds token-only prompts.
+    n_slots:
+        Decode batch width — the number of requests in flight at once.
+    max_len:
+        Per-slot context capacity in tokens (prompt + generation).
+    prompt_buckets:
+        Prefill shape set (tokens); defaults to powers of two up to
+        ``max_len``. Attention families right-pad prompts up to a bucket.
+    rng:
+        Key for sampled (non-greedy) requests. Defaults to ``PRNGKey(0)``.
+    clock:
+        Monotonic time source in seconds (injectable for deterministic
+        tests). Idle gaps before the next arrival are fast-forwarded, so a
+        frozen clock still makes progress.
+    """
+
+    def __init__(self, model, params, *, n_slots: int, max_len: int,
+                 prompt_buckets: Sequence[int] = (), rng=None,
+                 clock: Callable[[], float] = time.monotonic):
+        if model.cfg.family == "encoder":
+            raise ValueError("encoder-only arch has no decode step")
+        if model.cfg.family == "vlm":
+            raise ValueError("vlm serving is not supported: the engine "
+                             "feeds token-only prompts, but vlm prefill "
+                             "needs a patch batch")
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.scheduler = SlotScheduler(n_slots, max_len,
+                                       [b for b in prompt_buckets
+                                        if b <= max_len])
+        self._clock = clock
+        self._rng = jax.random.PRNGKey(0) if rng is None else rng
+        self._padded = model.supports_padded_prefill
+
+        cache = model.init_cache(n_slots, max_len)
+        cache["pos"] = jnp.zeros((n_slots,), jnp.int32)
+        self.cache = cache
+
+        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+        if self._padded:
+            self._prefill = jax.jit(
+                lambda p, b, pl: model.prefill(p, b, max_len=max_len,
+                                               prompt_len=pl))
+        else:
+            self._prefill = jax.jit(
+                lambda p, b: model.prefill(p, b, max_len=max_len))
+        self._write = jax.jit(_write_slot, donate_argnums=(0,))
+        self._sample = jax.jit(sample_batch)
+
+        self._inflight: Dict[int, _Inflight] = {}
+        self._steps = 0
+        self._occupancy_sum = 0.0
+        self._fast_forward_s = 0.0
+
+    # ---- time --------------------------------------------------------------
+    def _now(self, t_start: float) -> float:
+        """Engine clock in seconds: wall time plus fast-forwarded idle."""
+        return (self._clock() - t_start) + self._fast_forward_s
+
+    # ---- lifecycle ---------------------------------------------------------
+    def _next_key(self):
+        self._rng, k = jax.random.split(self._rng)
+        return k
+
+    def _admit(self, slot: int, req: Request, now_s: float,
+               results: List[RequestResult]) -> None:
+        """Prefill ``req`` into ``slot`` and seed its first token."""
+        p = req.prompt_len
+        prompt = req.prompt_array()
+        if self._padded:
+            bucket = self.scheduler.bucket_for(p)
+            toks = np.zeros((1, bucket), np.int32)
+            toks[0, :p] = prompt[0]
+            logits, pre = self._prefill(self.params, {"tokens": toks},
+                                        jnp.asarray(p, jnp.int32))
+        else:
+            logits, pre = self._prefill(self.params, {"tokens": prompt})
+        first = int(np.asarray(req.sampler(
+            logits[:, -1], None if req.sampler.greedy else self._next_key()))[0])
+        self.cache = self._write(self.cache, pre, slot)
+        t_first = self._now(self._t_start)
+        metrics = RequestMetrics(arrival_s=req.arrival_s, admitted_s=now_s,
+                                 first_token_s=t_first, prompt_tokens=p)
+        inf = _Inflight(request=req, slot=slot, generated=[first],
+                        next_token=first, metrics=metrics)
+        if first == req.eos_id or req.max_new_tokens == 1:
+            self._finish(inf, t_first, results)
+        else:
+            self._inflight[slot] = inf
+
+    def _finish(self, inf: _Inflight, now_s: float,
+                results: List[RequestResult]) -> None:
+        """Close out a request: metrics and slot release (MOA pricing is
+        deferred to the end of ``run`` — it is an O(new_tokens) host loop
+        and must not stall the decode ticks of the remaining slots)."""
+        m = inf.metrics
+        m.finished_s = now_s
+        m.new_tokens = len(inf.generated)
+        reason = (FinishReason.EOS
+                  if inf.generated[-1] == inf.request.eos_id
+                  else FinishReason.LENGTH)
+        results.append(RequestResult(
+            uid=inf.request.uid,
+            tokens=np.asarray(inf.generated, np.int32),
+            prompt_len=m.prompt_tokens, slot=inf.slot,
+            finish_reason=reason, metrics=m))
+        self.scheduler.release(inf.slot)
+        self._inflight.pop(inf.slot, None)
+
+    def _decode_tick(self, results: List[RequestResult]) -> None:
+        """One batched decode step over all slots; advance active requests."""
+        toks = np.zeros((self.n_slots, 1), np.int32)
+        temps = np.zeros((self.n_slots,), np.float32)
+        greedy = np.ones((self.n_slots,), bool)
+        for slot, inf in self._inflight.items():
+            toks[slot, 0] = inf.next_token
+            temps[slot] = max(inf.request.sampler.temperature, 0.0)
+            greedy[slot] = inf.request.sampler.greedy
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(toks))
+        next_toks = np.asarray(self._sample(
+            logits[:, -1], jnp.asarray(temps), jnp.asarray(greedy),
+            self._next_key()))
+        self._steps += 1
+        self._occupancy_sum += len(self._inflight) / self.n_slots
+        now = self._now(self._t_start)
+        for slot in sorted(self._inflight):
+            inf = self._inflight[slot]
+            tok = int(next_toks[slot])
+            inf.generated.append(tok)
+            inf.next_token = tok
+            if tok == inf.request.eos_id \
+                    or len(inf.generated) >= inf.request.max_new_tokens:
+                self._finish(inf, now, results)
+
+    # ---- public API --------------------------------------------------------
+    def submit(self, request: Request) -> None:
+        """Queue a request (admitted when arrived and a slot frees up)."""
+        self.scheduler.submit(request)
+
+    def run(self, requests: Sequence[Request] = (),
+            max_steps: Optional[int] = None
+            ) -> Tuple[List[RequestResult], dict]:
+        """Serve until every submitted request completes.
+
+        Returns ``(results sorted by uid, report)`` where ``report`` is the
+        JSON-able aggregate from :func:`repro.serve.metrics.aggregate` plus
+        ``slot_reuse`` (admissions into a previously-used slot this run).
+        ``max_steps`` is a runaway backstop, not a budget: exceeding it
+        raises RuntimeError (default 1e6 decode ticks).
+        """
+        for r in requests:
+            self.submit(r)
+        results: List[RequestResult] = []
+        # per-run counters: a reused engine (submit + repeated run) must not
+        # carry stale fast-forward offsets, occupancy sums, or prior-run
+        # admissions into its report
+        self._steps = 0
+        self._occupancy_sum = 0.0
+        self._fast_forward_s = 0.0
+        log_start = len(self.scheduler.admission_log)
+        self._t_start = self._clock()
+        limit = max_steps if max_steps is not None else 1_000_000
+        while not self.scheduler.done:
+            now = self._now(self._t_start)
+            if not self.scheduler.active \
+                    and self.scheduler.next_arrival_s > now:
+                # idle: fast-forward the engine clock to the next arrival
+                self._fast_forward_s += self.scheduler.next_arrival_s - now
+                now = self._now(self._t_start)
+            for slot, req in self.scheduler.admit_ready(now):
+                self._admit(slot, req, now, results)
+            if self._inflight:
+                self._decode_tick(results)
+            if self._steps >= limit:
+                raise RuntimeError(
+                    f"serve engine exceeded {limit} decode steps with "
+                    f"{len(self._inflight)} requests still in flight")
+        wall = self._now(self._t_start)
+        for r in results:
+            r.metrics.moa_flops = request_decode_cost(
+                self.model.cfg, prompt_tokens=r.metrics.prompt_tokens,
+                new_tokens=r.metrics.new_tokens)
+        report = aggregate(results, n_slots=self.n_slots,
+                           decode_steps=self._steps,
+                           occupancy_sum=self._occupancy_sum, wall_s=wall)
+        report["slot_reuse"] = self.scheduler.slot_reuse_count(log_start)
+        report["arch"] = self.model.cfg.name
+        report["moa"] = self.model.cfg.moa_strategy.spec
+        results.sort(key=lambda r: r.uid)
+        return results, report

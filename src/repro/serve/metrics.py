@@ -1,0 +1,105 @@
+"""Per-request and aggregate serving metrics.
+
+Units: times in **seconds** on the engine clock unless a key says ``_ms``
+(milliseconds); rates in **tokens per second**; ``moa_flops`` in FLOPs as
+priced by the configured MOA strategy (see
+:func:`repro.launch.costing.request_decode_cost` — approximate strategies
+like LOA inflate this relative to the exact one-shot count).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import numpy as np
+
+__all__ = ["RequestMetrics", "aggregate"]
+
+
+@dataclasses.dataclass
+class RequestMetrics:
+    """Lifecycle timestamps and derived latencies for one request.
+
+    ``arrival_s <= admitted_s <= first_token_s <= finished_s``; the gap
+    ``admitted_s - arrival_s`` is queueing delay (all slots busy), and
+    ``first_token_s - admitted_s`` is the prefill time.
+    """
+
+    arrival_s: float
+    admitted_s: float = 0.0
+    first_token_s: float = 0.0
+    finished_s: float = 0.0
+    prompt_tokens: int = 0
+    new_tokens: int = 0
+    moa_flops: float = 0.0
+
+    @property
+    def ttft_s(self) -> float:
+        """Time to first token: arrival → prefill logits ready (seconds)."""
+        return self.first_token_s - self.arrival_s
+
+    @property
+    def decode_s(self) -> float:
+        """Time spent in the decode loop after the first token (seconds)."""
+        return self.finished_s - self.first_token_s
+
+    @property
+    def per_token_ms(self) -> float:
+        """Mean decode latency per generated token (milliseconds).
+
+        The first token is priced by ``ttft_s``, so this averages over the
+        remaining ``new_tokens - 1`` decode steps.
+        """
+        steps = max(self.new_tokens - 1, 1)
+        return 1e3 * self.decode_s / steps
+
+    @property
+    def tok_per_s(self) -> float:
+        """Request-level generation rate over its full lifetime."""
+        lifetime = max(self.finished_s - self.arrival_s, 1e-9)
+        return self.new_tokens / lifetime
+
+    def to_json(self) -> dict:
+        return {
+            "arrival_s": self.arrival_s,
+            "admitted_s": self.admitted_s,
+            "ttft_ms": 1e3 * self.ttft_s,
+            "per_token_ms": self.per_token_ms,
+            "tok_per_s": self.tok_per_s,
+            "moa_flops": self.moa_flops,
+        }
+
+
+def _dist(values: List[float]) -> Dict[str, float]:
+    """mean/p50/p95 summary of a latency list (empty → zeros)."""
+    if not values:
+        return {"mean": 0.0, "p50": 0.0, "p95": 0.0}
+    a = np.asarray(values, np.float64)
+    return {"mean": float(a.mean()),
+            "p50": float(np.percentile(a, 50)),
+            "p95": float(np.percentile(a, 95))}
+
+
+def aggregate(results, *, n_slots: int, decode_steps: int,
+              occupancy_sum: float, wall_s: float) -> dict:
+    """Fleet-level summary over completed requests.
+
+    ``occupancy_sum`` is the sum over decode steps of
+    ``active_slots / n_slots``; divided by ``decode_steps`` it gives mean
+    slot occupancy in [0, 1]. ``wall_s`` is total engine run time in
+    seconds.
+    """
+    total_new = sum(r.metrics.new_tokens for r in results)
+    return {
+        "n_requests": len(results),
+        "n_slots": n_slots,
+        "decode_steps": decode_steps,
+        "wall_s": wall_s,
+        "total_new_tokens": total_new,
+        "tok_per_s": total_new / max(wall_s, 1e-9),
+        "ttft_ms": _dist([1e3 * r.metrics.ttft_s for r in results]),
+        "per_token_ms": _dist([r.metrics.per_token_ms for r in results]),
+        "slot_occupancy": occupancy_sum / max(decode_steps, 1),
+        "moa_flops_total": sum(r.metrics.moa_flops for r in results),
+    }
