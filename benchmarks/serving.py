@@ -1,14 +1,20 @@
 """Serving benchmark: continuous-batching engine under a Poisson workload,
 JSON results (the BENCH trajectory's machine-readable record).
 
-Emits one JSON document with the run configuration, per-request records
-(TTFT ms, per-token latency ms, tok/s, strategy-priced MOA FLOPs) and the
-aggregate report (total tok/s, latency distributions, slot occupancy,
-slot reuse).
+Two record schemas (both validated by ``scripts/check_bench_schema.py``):
+
+* ``serving-v1`` (default): one engine run — run configuration,
+  per-request records (TTFT ms, per-token latency ms, tok/s,
+  strategy-priced MOA FLOPs) and the aggregate report.
+* ``serving-v2`` (``--paged``): the same workload through **both** cache
+  layouts — dense per-slot regions and the paged block pool — plus a
+  comparison block (paged-vs-dense TTFT, prefix hits, resident KV bytes
+  vs the dense reservation). ``--shared-prefix`` swaps in the
+  system-prompt-style workload that actually exercises the prefix cache.
 
   PYTHONPATH=src python -m benchmarks.serving --smoke --json out.json
-  PYTHONPATH=src python -m benchmarks.serving --arch mamba2-370m --smoke \
-      --requests 16 --rate 100 --slots 8 --json out.json
+  PYTHONPATH=src python -m benchmarks.serving --smoke --paged \
+      --shared-prefix --block-size 8 --json paged.json
 """
 
 from __future__ import annotations
@@ -21,35 +27,57 @@ import jax
 
 from repro.configs.registry import get_config, smoke_config
 from repro.models.api import build_model
-from repro.serve import GREEDY, Sampler, ServeEngine, poisson_workload
+from repro.serve import (GREEDY, Sampler, ServeEngine, poisson_workload,
+                         shared_prefix_workload)
+
+
+def _build(arch: str, smoke: bool):
+    cfg = get_config(arch)
+    if smoke:
+        cfg = smoke_config(cfg)
+    if cfg.family == "encoder":
+        raise ValueError("encoder-only arch has no decode step")
+    return cfg, build_model(cfg)
+
+
+def _workload_factory(cfg, *, requests, rate_rps, shared_prefix, prefix_len,
+                      n_prefixes, prompt_len_range, gen_len_range,
+                      temperature, seed):
+    sampler = Sampler(temperature) if temperature > 0 else GREEDY
+    if shared_prefix:
+        return lambda: shared_prefix_workload(
+            n_requests=requests, vocab=cfg.vocab, rate_rps=rate_rps,
+            n_prefixes=n_prefixes, prefix_len=prefix_len,
+            suffix_len_range=(0, max(prompt_len_range[1] - prefix_len, 0)),
+            gen_len_range=gen_len_range, sampler=sampler, seed=seed)
+    return lambda: poisson_workload(
+        n_requests=requests, vocab=cfg.vocab, rate_rps=rate_rps,
+        prompt_len_range=prompt_len_range, gen_len_range=gen_len_range,
+        sampler=sampler, seed=seed)
 
 
 def run(*, arch: str = "llama3-8b", smoke: bool = True, requests: int = 8,
         rate_rps: float = 50.0, slots: int = 4, max_len: int = 96,
         prompt_len_range=(4, 24), gen_len_range=(2, 12),
         temperature: float = 0.0, seed: int = 0,
-        warmup: bool = True) -> dict:
-    """Run the workload through the engine; returns the JSON-able record.
+        warmup: bool = True, shared_prefix: bool = False,
+        prefix_len: int = 16, n_prefixes: int = 2) -> dict:
+    """One dense engine run; returns the ``serving-v1`` record.
 
     ``warmup`` replays the same workload once unmeasured first, so XLA
     compilation of each prefill bucket and the decode step lands outside
     the measured TTFT / per-token distributions.
     """
-    cfg = get_config(arch)
-    if smoke:
-        cfg = smoke_config(cfg)
-    if cfg.family == "encoder":
-        raise ValueError("encoder-only arch has no decode step")
-    model = build_model(cfg)
+    cfg, model = _build(arch, smoke)
     rng = jax.random.PRNGKey(seed)
     params = model.init(rng)
     engine = ServeEngine(model, params, n_slots=slots, max_len=max_len,
                          rng=rng)
-    make_workload = lambda: poisson_workload(
-        n_requests=requests, vocab=cfg.vocab, rate_rps=rate_rps,
-        prompt_len_range=prompt_len_range, gen_len_range=gen_len_range,
-        sampler=Sampler(temperature) if temperature > 0 else GREEDY,
-        seed=seed)
+    make_workload = _workload_factory(
+        cfg, requests=requests, rate_rps=rate_rps,
+        shared_prefix=shared_prefix, prefix_len=prefix_len,
+        n_prefixes=n_prefixes, prompt_len_range=prompt_len_range,
+        gen_len_range=gen_len_range, temperature=temperature, seed=seed)
     if warmup:
         engine.run(make_workload())
     results, report = engine.run(make_workload())
@@ -62,9 +90,79 @@ def run(*, arch: str = "llama3-8b", smoke: bool = True, requests: int = 8,
             "prompt_len_range": list(prompt_len_range),
             "gen_len_range": list(gen_len_range),
             "temperature": temperature, "seed": seed, "warmup": warmup,
+            "shared_prefix": shared_prefix,
         },
         "requests": [r.to_json() for r in results],
         "aggregate": report,
+    }
+
+
+def run_paged(*, arch: str = "llama3-8b", smoke: bool = True,
+              requests: int = 8, rate_rps: float = 50.0, slots: int = 4,
+              max_len: int = 96, block_size: int = 16, n_blocks: int = 0,
+              prompt_len_range=(4, 24), gen_len_range=(2, 12),
+              temperature: float = 0.0, seed: int = 0, warmup: bool = True,
+              shared_prefix: bool = True, prefix_len: int = 16,
+              n_prefixes: int = 2) -> dict:
+    """Dense-vs-paged comparison on one workload; ``serving-v2`` record.
+
+    Both engines serve the identical request stream (same seed) so the
+    TTFT columns differ only through the cache layout: the paged engine's
+    prefix-cache hits skip shared prefill compute (dense family), and its
+    ``resident_kv_bytes`` prices pages in use instead of the
+    ``n_slots x max_len`` reservation.
+    """
+    cfg, model = _build(arch, smoke)
+    rng = jax.random.PRNGKey(seed)
+    params = model.init(rng)
+    make_workload = _workload_factory(
+        cfg, requests=requests, rate_rps=rate_rps,
+        shared_prefix=shared_prefix, prefix_len=prefix_len,
+        n_prefixes=n_prefixes, prompt_len_range=prompt_len_range,
+        gen_len_range=gen_len_range, temperature=temperature, seed=seed)
+    runs = {}
+    for mode in ("dense", "paged"):
+        engine = ServeEngine(
+            model, params, n_slots=slots, max_len=max_len,
+            paged=(mode == "paged"), block_size=block_size,
+            n_blocks=n_blocks or None, rng=rng)
+        if warmup:
+            # paged: twice — the first replay warms the prefix trie, the
+            # second compiles the suffix-prefill shapes that only occur
+            # once admissions start hitting the warm trie
+            for _ in range(2 if mode == "paged" else 1):
+                engine.run(make_workload())
+        results, report = engine.run(make_workload())
+        runs[mode] = {"requests": [r.to_json() for r in results],
+                      "aggregate": report}
+    paged_agg = runs["paged"]["aggregate"]
+    comparison = {
+        "ttft_p50_ms_dense": runs["dense"]["aggregate"]["ttft_ms"]["p50"],
+        "ttft_p50_ms_paged": paged_agg["ttft_ms"]["p50"],
+        "prefix_hits": paged_agg["paged"]["prefix_hits"],
+        "prefix_hit_rate": paged_agg["paged"]["prefix_hit_rate"],
+        "cached_prompt_tokens": sum(
+            r["cached_prompt_tokens"] for r in runs["paged"]["requests"]),
+        "resident_kv_bytes": paged_agg["paged"]["resident_kv_bytes"],
+        "dense_equiv_kv_bytes": paged_agg["paged"]["dense_equiv_kv_bytes"],
+    }
+    return {
+        "schema": "serving-v2",
+        "config": {
+            "arch": cfg.name, "family": cfg.family, "smoke": smoke,
+            "moa": cfg.moa_strategy.spec, "n_slots": slots,
+            "max_len": max_len, "block_size": block_size,
+            "n_blocks": paged_agg["paged"]["n_blocks"],
+            "requests": requests, "rate_rps": rate_rps,
+            "prompt_len_range": list(prompt_len_range),
+            "gen_len_range": list(gen_len_range),
+            "temperature": temperature, "seed": seed, "warmup": warmup,
+            "shared_prefix": shared_prefix, "prefix_len": prefix_len,
+            "n_prefixes": n_prefixes,
+        },
+        "dense": runs["dense"],
+        "paged": runs["paged"],
+        "comparison": comparison,
     }
 
 
@@ -79,6 +177,18 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=96)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--paged", action="store_true",
+                    help="run the dense-vs-paged comparison (serving-v2)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="[--paged] tokens per physical KV page")
+    ap.add_argument("--blocks", type=int, default=0,
+                    help="[--paged] pool pages (0 = dense equivalent)")
+    ap.add_argument("--shared-prefix", action="store_true",
+                    help="shared-prefix workload (system-prompt style)")
+    ap.add_argument("--prefix-len", type=int, default=16,
+                    help="[--shared-prefix] shared prefix tokens")
+    ap.add_argument("--prefixes", type=int, default=2,
+                    help="[--shared-prefix] distinct prefixes")
     ap.add_argument("--no-warmup", action="store_true",
                     help="skip the unmeasured warmup replay (metrics then "
                          "include XLA compile time)")
@@ -86,19 +196,35 @@ def main(argv=None):
                     help="write the JSON record here (default: stdout)")
     args = ap.parse_args(argv)
 
-    record = run(arch=args.arch, smoke=args.smoke, requests=args.requests,
-                 rate_rps=args.rate, slots=args.slots, max_len=args.max_len,
-                 temperature=args.temperature, seed=args.seed,
-                 warmup=not args.no_warmup)
+    common = dict(arch=args.arch, smoke=args.smoke, requests=args.requests,
+                  rate_rps=args.rate, slots=args.slots, max_len=args.max_len,
+                  temperature=args.temperature, seed=args.seed,
+                  warmup=not args.no_warmup,
+                  shared_prefix=args.shared_prefix,
+                  prefix_len=args.prefix_len, n_prefixes=args.prefixes)
+    if args.paged:
+        record = run_paged(block_size=args.block_size, n_blocks=args.blocks,
+                           **common)
+    else:
+        record = run(**common)
     text = json.dumps(record, indent=2)
     if args.json:
         with open(args.json, "w") as f:
             f.write(text + "\n")
-        agg = record["aggregate"]
-        print(f"[bench] wrote {args.json}: {agg['n_requests']} requests, "
-              f"{agg['tok_per_s']:.1f} tok/s, "
-              f"ttft p50={agg['ttft_ms']['p50']:.0f}ms, "
-              f"occupancy={agg['slot_occupancy']:.2f}", file=sys.stderr)
+        if record["schema"] == "serving-v2":
+            c = record["comparison"]
+            print(f"[bench] wrote {args.json}: serving-v2, "
+                  f"ttft p50 dense={c['ttft_p50_ms_dense']:.0f}ms "
+                  f"paged={c['ttft_p50_ms_paged']:.0f}ms, "
+                  f"prefix hits={c['prefix_hits']}, "
+                  f"resident={c['resident_kv_bytes']:,}B / "
+                  f"dense {c['dense_equiv_kv_bytes']:,}B", file=sys.stderr)
+        else:
+            agg = record["aggregate"]
+            print(f"[bench] wrote {args.json}: {agg['n_requests']} requests, "
+                  f"{agg['tok_per_s']:.1f} tok/s, "
+                  f"ttft p50={agg['ttft_ms']['p50']:.0f}ms, "
+                  f"occupancy={agg['slot_occupancy']:.2f}", file=sys.stderr)
     else:
         print(text)
 

@@ -1,0 +1,143 @@
+#!/usr/bin/env python3
+"""Validate serving benchmark JSON records (``serving-v1`` / ``serving-v2``).
+
+Stdlib-only (runs in CI without extra deps). Checks required keys and
+value types — extra keys are allowed (schemas grow forward-compatibly),
+missing or mistyped ones fail with a per-field report. Exit 1 on any
+violation.
+
+  python scripts/check_bench_schema.py out.json [more.json ...]
+"""
+
+from __future__ import annotations
+
+import json
+import numbers
+import sys
+
+NUM = numbers.Real      # int or float (bool excluded below)
+STR = str
+
+_DIST = {"mean": NUM, "p50": NUM, "p95": NUM}
+
+_REQUEST = {
+    "uid": int, "prompt_tokens": int, "new_tokens": int, "slot": int,
+    "finish_reason": STR, "arrival_s": NUM, "admitted_s": NUM,
+    "ttft_ms": NUM, "per_token_ms": NUM, "tok_per_s": NUM,
+    "moa_flops": NUM, "cached_prompt_tokens": int,
+}
+
+_AGGREGATE = {
+    "n_requests": int, "n_slots": int, "decode_steps": int, "wall_s": NUM,
+    "total_new_tokens": int, "tok_per_s": NUM, "ttft_ms": _DIST,
+    "per_token_ms": _DIST, "slot_occupancy": NUM, "moa_flops_total": NUM,
+    "slot_reuse": int, "arch": STR, "moa": STR,
+}
+
+_PAGED_AGGREGATE = {
+    "block_size": int, "n_blocks": int, "admissions": int,
+    "prefix_hits": int, "prefix_hit_rate": NUM, "shared_block_hits": int,
+    "cow_count": int, "block_occupancy": NUM, "peak_blocks_in_use": int,
+    "resident_kv_bytes": NUM, "dense_equiv_kv_bytes": NUM,
+}
+
+_CONFIG_V1 = {
+    "arch": STR, "family": STR, "smoke": bool, "moa": STR, "n_slots": int,
+    "max_len": int, "requests": int, "rate_rps": NUM,
+    "prompt_len_range": list, "gen_len_range": list, "temperature": NUM,
+    "seed": int, "warmup": bool,
+}
+
+_CONFIG_V2 = dict(_CONFIG_V1, block_size=int, n_blocks=int,
+                  shared_prefix=bool, prefix_len=int, n_prefixes=int)
+
+_COMPARISON = {
+    "ttft_p50_ms_dense": NUM, "ttft_p50_ms_paged": NUM, "prefix_hits": int,
+    "prefix_hit_rate": NUM, "cached_prompt_tokens": int,
+    "resident_kv_bytes": NUM, "dense_equiv_kv_bytes": NUM,
+}
+
+
+def _check(record, schema, path, errors):
+    """Recursively check required keys + types (dict schemas nest)."""
+    if not isinstance(record, dict):
+        errors.append(f"{path}: expected object, got {type(record).__name__}")
+        return
+    for key, want in schema.items():
+        if key not in record:
+            errors.append(f"{path}.{key}: missing")
+            continue
+        got = record[key]
+        if isinstance(want, dict):
+            _check(got, want, f"{path}.{key}", errors)
+        elif want is bool:
+            if not isinstance(got, bool):
+                errors.append(f"{path}.{key}: expected bool, "
+                              f"got {type(got).__name__}")
+        elif want is int:
+            if isinstance(got, bool) or not isinstance(got, int):
+                errors.append(f"{path}.{key}: expected int, "
+                              f"got {type(got).__name__}")
+        elif isinstance(got, bool) or not isinstance(got, want):
+            errors.append(f"{path}.{key}: expected "
+                          f"{getattr(want, '__name__', want)}, "
+                          f"got {type(got).__name__}")
+
+
+def _check_run(run, path, errors):
+    _check(run, {"aggregate": _AGGREGATE}, path, errors)
+    reqs = run.get("requests")
+    if not isinstance(reqs, list) or not reqs:
+        errors.append(f"{path}.requests: expected non-empty list")
+        return
+    for i, r in enumerate(reqs):
+        _check(r, _REQUEST, f"{path}.requests[{i}]", errors)
+
+
+def validate(record: dict) -> list:
+    """Return a list of violations (empty = valid)."""
+    errors: list = []
+    schema = record.get("schema")
+    if schema == "serving-v1":
+        _check(record, {"config": _CONFIG_V1}, "$", errors)
+        _check_run(record, "$", errors)
+    elif schema == "serving-v2":
+        _check(record, {"config": _CONFIG_V2, "comparison": _COMPARISON},
+               "$", errors)
+        for mode in ("dense", "paged"):
+            _check_run(record.get(mode, {}), f"$.{mode}", errors)
+        paged_agg = record.get("paged", {}).get("aggregate", {})
+        _check(paged_agg.get("paged", {}), _PAGED_AGGREGATE,
+               "$.paged.aggregate.paged", errors)
+    else:
+        errors.append(f"$.schema: unknown schema {schema!r} "
+                      "(expected serving-v1 or serving-v2)")
+    return errors
+
+
+def main(paths) -> int:
+    if not paths:
+        print("usage: check_bench_schema.py RECORD.json [...]",
+              file=sys.stderr)
+        return 2
+    bad = 0
+    for p in paths:
+        try:
+            with open(p) as f:
+                record = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"INVALID {p}: {e}")
+            bad += 1
+            continue
+        errors = validate(record)
+        for e in errors:
+            print(f"INVALID {p}: {e}")
+        if errors:
+            bad += 1
+        else:
+            print(f"ok {p}: {record['schema']}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

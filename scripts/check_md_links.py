@@ -1,9 +1,12 @@
 #!/usr/bin/env python3
-"""Markdown link check: every relative link in README.md + docs/ resolves.
+"""Markdown link check: every relative link in README.md + docs/ resolves,
+and every ``*.md`` file a ``src/`` docstring or comment cites exists.
 
 Stdlib-only (runs in CI without extra deps). External (http/https/mailto)
 links are not fetched — only intra-repo targets are verified, anchors
-stripped. Exit code 1 with a per-link report on any broken target.
+stripped. Source references are resolved against the repo root (regression
+guard: docstrings once cited an EXPERIMENTS.md that never existed). Exit
+code 1 with a per-link report on any broken target.
 
   python scripts/check_md_links.py [root]
 """
@@ -18,6 +21,8 @@ import sys
 # fenced code blocks below
 _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 _SCHEMES = ("http://", "https://", "mailto:", "ftp://")
+# a .md path mentioned anywhere in Python source (docstrings, comments)
+_SRC_MD_REF = re.compile(r"[A-Za-z0-9_][A-Za-z0-9_./-]*\.md\b")
 
 
 def _links(text: str):
@@ -29,6 +34,14 @@ def _links(text: str):
         if in_fence:
             continue
         yield from _LINK.findall(line)
+
+
+def _src_md_refs(root: pathlib.Path):
+    """Yield (py_file, referenced .md path) pairs from src/ sources."""
+    for py in sorted((root / "src").glob("**/*.py")):
+        for line_no, line in enumerate(py.read_text().splitlines(), 1):
+            for ref in _SRC_MD_REF.findall(line):
+                yield py, line_no, ref
 
 
 def check(root: pathlib.Path) -> int:
@@ -44,9 +57,19 @@ def check(root: pathlib.Path) -> int:
             rel = target.split("#")[0]
             if not (md.parent / rel).exists():
                 broken.append((md, target))
+    n_refs = 0
+    for py, line_no, ref in _src_md_refs(root):
+        n_refs += 1
+        if not (root / ref).exists():
+            broken.append((pathlib.Path(f"{py}:{line_no}"), ref))
     for md, target in broken:
-        print(f"BROKEN {md.relative_to(root)}: {target}")
-    print(f"checked {len(files)} files; {len(broken)} broken links")
+        try:
+            name = md.relative_to(root)
+        except ValueError:
+            name = md
+        print(f"BROKEN {name}: {target}")
+    print(f"checked {len(files)} markdown files + {n_refs} source "
+          f"references; {len(broken)} broken")
     return 1 if broken else 0
 
 

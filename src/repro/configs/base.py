@@ -184,7 +184,7 @@ SHAPES = {
 
 
 def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:
-    """Assignment skip rules (see DESIGN.md §5 skip table)."""
+    """Assignment skip rules (see docs/architecture.md skip rules)."""
     if cfg.family == "encoder" and shape.phase == "decode":
         return False, "encoder-only arch has no decode step"
     if shape.name == "long_500k" and cfg.family not in ("ssm", "hybrid"):

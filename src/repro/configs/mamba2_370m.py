@@ -3,7 +3,7 @@ vocab=50280, SSD (state-space duality). [arXiv:2405.21060]
 
 The paper's technique applies to the SSD scan itself: ``ssd_chunk`` is the
 serialized-MOA cluster size (intra-chunk MXU tree / inter-chunk serial
-accumulator) — see DESIGN.md §5.
+accumulator) — see docs/moa-strategies.md.
 """
 
 from repro.configs.base import ModelConfig

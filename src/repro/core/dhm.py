@@ -14,7 +14,7 @@ Offline note: the paper uses trained AlexNet weights; trained checkpoints are
 not available in this container, so the Table-1 benchmark calibrates a
 Bernoulli zero-mask to the paper's reported per-layer densities and verifies
 the *pipeline* reproduces the published ``n_opd`` within sampling error
-(documented in EXPERIMENTS.md §Paper). The structural counts (N, C·J·K) are
+(documented in docs/moa-strategies.md). The structural counts (N, C·J·K) are
 exact.
 """
 

@@ -9,7 +9,7 @@ under by 1–3 orders of magnitude. The dry-run therefore records BOTH: the
 raw ``cost_analysis`` (labeled loop-undercounted) and this model, which is
 exact-by-construction for FLOPs (we wrote every contraction) and validated
 against ``cost_analysis`` on fully-unrolled single-layer variants in
-``tests/test_costing.py`` (±2 % — see EXPERIMENTS.md §Dry-run methodology).
+``tests/test_costing.py`` (±2 % — see docs/architecture.md §costing).
 
 Conventions: 1 MAC = 2 FLOPs; all values are **per device per step** given
 the mesh meta; ring collectives move ``2·B·(k−1)/k`` (all-reduce) or
@@ -28,11 +28,12 @@ surfaced as a per-component FLOPs increase.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Optional
 
 from repro.configs.base import ModelConfig, ShapeSpec
 
-__all__ = ["CellCost", "estimate_cell", "request_decode_cost"]
+__all__ = ["CellCost", "estimate_cell", "request_decode_cost",
+           "kv_bytes_per_token", "kv_resident_bytes"]
 
 BF16 = 2
 F32 = 4
@@ -44,7 +45,7 @@ class MeshMeta:
     data: int
     model: int
     fsdp: bool = True
-    # hillclimb levers (EXPERIMENTS.md §Perf)
+    # hillclimb levers (docs/architecture.md §Perf levers)
     compress_grads: bool = False    # int8 gradient all-reduce (+err state)
     attn_cp: bool = False           # context-parallel attention: a2a layout
                                     # swap replaces the attn-out all-reduce
@@ -221,6 +222,30 @@ def forward_flops(cfg: ModelConfig, *, tokens: float, s_attn: float,
     return comp
 
 
+def kv_bytes_per_token(cfg: ModelConfig) -> float:
+    """KV-cache bytes one token occupies across all KV-bearing stacks
+    (layers, or application points for the hybrid; 0 for pure SSM and the
+    cacheless encoder).
+
+    Delegates to :meth:`repro.models.api.Model.cache_spec` — one source
+    of truth, derived from the real cache leaves via ``eval_shape`` (so
+    int8 quantization scales are counted; the serve report's
+    ``resident_kv_bytes`` and this cost model agree by construction).
+    """
+    from repro.models.api import build_model  # lazy: models sit above us
+
+    return float(build_model(cfg).cache_spec().kv_bytes_per_token)
+
+
+def kv_resident_bytes(cfg: ModelConfig, *, n_blocks_in_use: int,
+                      block_size: int) -> float:
+    """HBM bytes the paged KV cache actually holds resident: blocks in
+    use, not ``n_slots · max_len`` — the dense layout's reservation. The
+    serve report's ``resident_kv_bytes`` vs ``dense_equiv_kv_bytes``
+    columns are this quantity against the dense equivalent."""
+    return n_blocks_in_use * block_size * kv_bytes_per_token(cfg)
+
+
 def request_decode_cost(cfg: ModelConfig, *, prompt_tokens: int,
                         new_tokens: int) -> float:
     """Strategy-priced FLOPs of one serve request's decode steps.
@@ -252,7 +277,14 @@ def _train_multiplier(cfg: ModelConfig) -> float:
 # ---------------------------------------------------------------------------
 
 
-def estimate_cell(cfg: ModelConfig, shape: ShapeSpec, mesh: MeshMeta) -> CellCost:
+def estimate_cell(cfg: ModelConfig, shape: ShapeSpec, mesh: MeshMeta, *,
+                  resident_kv_tokens: Optional[float] = None) -> CellCost:
+    """Per-cell cost estimate.
+
+    ``resident_kv_tokens``: decode-phase override for the KV tokens the
+    cache actually holds (paged serving: blocks in use × block size).
+    Default prices the dense layout's full ``B × S`` reservation.
+    """
     B, S = shape.global_batch, shape.seq_len
     phase = shape.phase
     decode = phase == "decode"
@@ -301,21 +333,16 @@ def estimate_cell(cfg: ModelConfig, shape: ShapeSpec, mesh: MeshMeta) -> CellCos
                                        * cfg.head_dim * 2 * BF16) / chips
     else:  # decode
         bcomp["params"] = pbytes_bf16 / chips
-        kv_elem = 1 if cfg.kv_cache_dtype == "int8" else BF16
         kv_ways = mesh.kv_shard_ways(cfg)
-        if cfg.family in ("dense", "vlm", "moe"):
-            cache = cfg.n_layers * B * S * cfg.n_kv_heads * cfg.head_dim \
-                * 2 * kv_elem
-            bcomp["kv_cache_read"] = cache / kv_ways
+        kv_tokens = float(B * S) if resident_kv_tokens is None \
+            else float(resident_kv_tokens)
+        if cfg.family in ("dense", "vlm", "moe", "hybrid"):
+            bcomp["kv_cache_read"] = \
+                kv_bytes_per_token(cfg) * kv_tokens / kv_ways
         if cfg.family in ("ssm", "hybrid"):
             ssm_state = (cfg.n_layers * B * cfg.n_ssm_heads * cfg.headdim
                          * cfg.d_state * F32)
             bcomp["ssm_state"] = 2 * ssm_state / chips
-            if cfg.family == "hybrid":
-                n_apps = cfg.n_layers // cfg.attn_every
-                cache = n_apps * B * S * cfg.n_kv_heads * cfg.head_dim \
-                    * 2 * kv_elem
-                bcomp["kv_cache_read"] = cache / kv_ways
 
     # ---- collective wire bytes ----------------------------------------------
     ccomp: Dict[str, float] = {}

@@ -121,7 +121,8 @@ def _model_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
 
 
 def apply_variant(cfg: ModelConfig, variant: str) -> ModelConfig:
-    """Hillclimb levers, selectable from the CLI (see EXPERIMENTS.md §Perf)."""
+    """Hillclimb levers, selectable from the CLI (see
+    docs/architecture.md §Perf levers)."""
     if variant == "baseline" or not variant:
         return cfg
     updates: dict = {}

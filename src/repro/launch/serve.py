@@ -115,8 +115,11 @@ def _run_engine(args):
     rng = jax.random.PRNGKey(args.seed)
     params = model.init(rng)
     max_len = args.max_len or (args.prompt_len + args.gen_len + 1) * 2
+    if args.paged and max_len % args.block_size:
+        max_len += args.block_size - max_len % args.block_size
     engine = ServeEngine(model, params, n_slots=args.slots, max_len=max_len,
-                         rng=rng)
+                         paged=args.paged, block_size=args.block_size,
+                         n_blocks=args.blocks or None, rng=rng)
     requests = poisson_workload(
         n_requests=args.requests, vocab=cfg.vocab, rate_rps=args.rate,
         prompt_len_range=(min(4, args.prompt_len), args.prompt_len),
@@ -135,6 +138,14 @@ def _run_engine(args):
           f"p95={report['ttft_ms']['p95']:.0f}ms, "
           f"occupancy={report['slot_occupancy']:.2f}, "
           f"slot_reuse={report['slot_reuse']}")
+    if args.paged:
+        pg = report["paged"]
+        print(f"[serve] paged: {pg['n_blocks']}x{pg['block_size']}-token "
+              f"blocks, occupancy={pg['block_occupancy']:.2f}, "
+              f"prefix hits={pg['prefix_hits']}/{pg['admissions']}, "
+              f"cow={pg['cow_count']}, "
+              f"resident={pg['resident_kv_bytes']:,}B "
+              f"(dense equiv {pg['dense_equiv_kv_bytes']:,}B)")
 
 
 def main():
@@ -160,6 +171,14 @@ def main():
                     help="[engine] decode slots (in-flight requests)")
     ap.add_argument("--max-len", type=int, default=0,
                     help="[engine] per-slot context capacity, tokens")
+    ap.add_argument("--paged", action="store_true",
+                    help="[engine] paged KV-cache: shared block pool with "
+                         "ref-counted prefix caching (docs/paged-kv.md)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="[engine --paged] tokens per physical KV page")
+    ap.add_argument("--blocks", type=int, default=0,
+                    help="[engine --paged] pool size in pages (0 = dense "
+                         "equivalent slots*max_len/block_size)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature (0 = greedy)")
     ap.add_argument("--greedy", action="store_true",

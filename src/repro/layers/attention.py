@@ -27,7 +27,8 @@ from repro.layers.rope import apply_rope
 
 __all__ = [
     "init_attention", "attention_forward", "attention_decode",
-    "flash_attention", "full_attention", "init_kv_cache",
+    "attention_decode_paged", "flash_attention", "full_attention",
+    "init_kv_cache", "init_kv_pool", "gather_paged_kv",
 ]
 
 _NEG_INF = -1e30  # finite sentinel: keeps exp() well-defined on all-masked rows
@@ -227,7 +228,7 @@ def init_kv_cache(batch: int, max_len: int, n_kv_heads: int, head_dim: int,
                   dtype=jnp.bfloat16) -> Params:
     """KV cache; ``dtype=int8`` stores quantized K/V with per-(pos, head)
     f32 scales — halves the decode-time HBM stream (the memory-roofline
-    lever for decode shapes; see EXPERIMENTS.md §Perf cell C)."""
+    lever for decode shapes; see docs/paged-kv.md on cache memory)."""
     cache = {
         "k": jnp.zeros((batch, max_len, n_kv_heads, head_dim), dtype),
         "v": jnp.zeros((batch, max_len, n_kv_heads, head_dim), dtype),
@@ -238,6 +239,27 @@ def init_kv_cache(batch: int, max_len: int, n_kv_heads: int, head_dim: int,
         cache["v_scale"] = jnp.zeros((batch, max_len, n_kv_heads),
                                      jnp.float32)
     return cache
+
+
+def init_kv_pool(n_phys_blocks: int, block_size: int, n_kv_heads: int,
+                 head_dim: int, dtype=jnp.bfloat16) -> Params:
+    """Paged KV pool: one shared set of physical pages instead of a dense
+    per-slot region. Same leaf set as :func:`init_kv_cache` with the
+    sequence axis factored into ``(n_phys_blocks, block_size)``; physical
+    block 0 is the engine's write-trash page (see
+    :mod:`repro.serve.kv_pool`)."""
+    pool = {
+        "k": jnp.zeros((n_phys_blocks, block_size, n_kv_heads, head_dim),
+                       dtype),
+        "v": jnp.zeros((n_phys_blocks, block_size, n_kv_heads, head_dim),
+                       dtype),
+    }
+    if dtype == jnp.int8:
+        pool["k_scale"] = jnp.zeros((n_phys_blocks, block_size, n_kv_heads),
+                                    jnp.float32)
+        pool["v_scale"] = jnp.zeros((n_phys_blocks, block_size, n_kv_heads),
+                                    jnp.float32)
+    return pool
 
 
 def quantize_kv(x):
@@ -311,3 +333,85 @@ def _scatter_per_batch(cache, new, pos):
     B = cache.shape[0]
     idx = pos.astype(jnp.int32)
     return cache.at[jnp.arange(B), idx].set(new[:, 0].astype(cache.dtype))
+
+
+# ---------------------------------------------------------------------------
+# paged decode path (gather-based; see docs/paged-kv.md)
+# ---------------------------------------------------------------------------
+
+
+def gather_paged_kv(pool: Params, block_tables, dtype=jnp.bfloat16):
+    """Materialize each sequence's logical KV view from the shared pool.
+
+    ``pool`` leaves are ``(n_phys_blocks, block_size, ...)``;
+    ``block_tables`` is ``(B, max_blocks)`` int32 logical→physical. Returns
+    dense ``(B, max_blocks·block_size, Hk, D)`` K and V (dequantized for an
+    int8 pool). With ``block_size`` dividing ``max_len`` the gathered view
+    has *exactly* the dense cache's shape, and every attended position
+    holds the same value — the paged read is bit-identical by construction
+    (unattended garbage is masked to ``_NEG_INF`` before the softmax either
+    way).
+    """
+
+    def flat(name):
+        x = pool[name][block_tables]         # (B, n_blk, bs, ...)
+        return x.reshape((x.shape[0], -1) + x.shape[3:])
+
+    k, v = flat("k"), flat("v")
+    if "k_scale" in pool:
+        k = dequantize_kv(k, flat("k_scale"), dtype)
+        v = dequantize_kv(v, flat("v_scale"), dtype)
+    return k, v
+
+
+def attention_decode_paged(params: Params, x, pool: Params, block_tables,
+                           pos, *, n_heads: int, n_kv_heads: int,
+                           head_dim: int, rope_theta: float = 10000.0,
+                           use_rope: bool = True,
+                           compute_dtype=jnp.bfloat16,
+                           strategy=None) -> Tuple[jax.Array, Params]:
+    """One decode step against a *paged* KV pool.
+
+    Identical math to :func:`attention_decode` — same projections, same
+    rope, same masked full-softmax reduction — with the cache read/write
+    factored through per-slot block tables: the new token's K/V scatters to
+    physical page ``block_tables[b, pos // bs]`` offset ``pos % bs``, and
+    the score reduction runs over the gathered logical view. The engine
+    guarantees writes only ever land on unshared pages (copy-on-write
+    happens host-side before the first divergent write), so slots at
+    heterogeneous depths share physical prefix pages safely.
+    """
+    B = x.shape[0]
+    bs = pool["k"].shape[1]
+    q, k_new, v_new = _project_qkv(
+        params, x, n_heads=n_heads, n_kv_heads=n_kv_heads, head_dim=head_dim,
+        compute_dtype=compute_dtype, strategy=strategy)
+    pos = pos[:, None] if jnp.ndim(pos) == 1 else jnp.full((B, 1), pos)
+    if use_rope:
+        q = apply_rope(q, pos, theta=rope_theta)
+        k_new = apply_rope(k_new, pos, theta=rope_theta)
+
+    cur = pos[:, 0]
+    blk = block_tables[jnp.arange(B), cur // bs]
+    off = cur % bs
+
+    new_pool = dict(pool)
+    if "k_scale" in pool:
+        kq, ks = quantize_kv(k_new)
+        vq, vs = quantize_kv(v_new)
+        new_pool["k"] = pool["k"].at[blk, off].set(kq[:, 0])
+        new_pool["v"] = pool["v"].at[blk, off].set(vq[:, 0])
+        new_pool["k_scale"] = pool["k_scale"].at[blk, off].set(ks[:, 0])
+        new_pool["v_scale"] = pool["v_scale"].at[blk, off].set(vs[:, 0])
+    else:
+        new_pool["k"] = pool["k"].at[blk, off].set(
+            k_new[:, 0].astype(pool["k"].dtype))
+        new_pool["v"] = pool["v"].at[blk, off].set(
+            v_new[:, 0].astype(pool["v"].dtype))
+
+    k_cache, v_cache = gather_paged_kv(new_pool, block_tables, compute_dtype)
+    o = full_attention(q, k_cache, v_cache, causal=False, kv_len=cur + 1)
+    o = o.reshape(B, 1, n_heads * head_dim)
+    y = _moa_dot(o, params["wo"].astype(compute_dtype),
+                 strategy=strategy, compute_dtype=compute_dtype)
+    return y, new_pool

@@ -25,7 +25,7 @@ class DTypePolicy:
 
     param_dtype: Any = jnp.float32
     compute_dtype: Any = jnp.bfloat16
-    # Accumulation is always f32 — the MXU hard-wires it; see DESIGN.md §2.
+    # Accumulation is always f32 — the MXU hard-wires it; see docs/moa-strategies.md.
     accum_dtype: Any = jnp.float32
 
     def cast(self, x):

@@ -24,7 +24,41 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig, ShapeSpec
 from repro.models import losses, mamba2, moe_transformer, transformer, zamba2
 
-__all__ = ["Model", "build_model"]
+__all__ = ["CacheSpec", "Model", "build_model"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheSpec:
+    """Decode-cache layout summary (the serve engine's and cost model's
+    shared vocabulary for cache memory).
+
+    ``n_kv_stacks`` is the leading stack axis of the KV leaves — layers
+    for dense/MoE, application points for the hybrid, 0 when the family
+    keeps no KV at all (pure SSM). ``kv_bytes_per_token`` covers K and V
+    across all stacks (int8 scales included); ``slot_state_bytes`` is the
+    per-slot sequence-length-independent state (SSM/conv)."""
+
+    family: str
+    n_kv_stacks: int
+    n_kv_heads: int
+    head_dim: int
+    kv_bytes_per_token: int
+    slot_state_bytes: int
+
+    @property
+    def pageable(self) -> bool:
+        """Whether this family has KV state worth paging."""
+        return self.n_kv_stacks > 0
+
+    def kv_block_bytes(self, block_size: int) -> int:
+        """Bytes of one physical page across all KV stacks."""
+        return self.kv_bytes_per_token * block_size
+
+    def dense_kv_bytes(self, n_slots: int, max_len: int) -> int:
+        """The dense-slot layout's resident KV bytes: ``n_slots·max_len``
+        tokens reserved whether used or not — the over-provisioning the
+        paged pool removes."""
+        return self.kv_bytes_per_token * n_slots * max_len
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,6 +127,76 @@ class Model:
         write cursor — scalar int32; the serve engine broadcasts it to a
         ``(batch,)`` vector for per-slot positions)."""
         return self._mod.init_cache(self.cfg, batch, max_len)
+
+    def cache_spec(self) -> CacheSpec:
+        """Cache layout summary: which leaves scale with sequence length
+        (KV — pageable) vs per-slot constant state (SSM), and their byte
+        rates. Derived from ``init_cache`` shapes via ``eval_shape``, so it
+        cannot drift from the real layout."""
+        cfg = self.cfg
+        if cfg.family == "encoder":
+            return CacheSpec(family=cfg.family, n_kv_stacks=0, n_kv_heads=0,
+                             head_dim=0, kv_bytes_per_token=0,
+                             slot_state_bytes=0)
+        # batch=1, max_len=1: KV leaf bytes are then exactly per-token
+        shapes = jax.eval_shape(lambda: self.init_cache(1, 1))
+
+        def nbytes(tree):
+            return sum(s.size * s.dtype.itemsize
+                       for s in jax.tree.leaves(tree))
+
+        if cfg.family == "hybrid":
+            kv, slot_state = shapes["kv"], shapes["ssm"]
+            n_stacks = zamba2.n_applications(cfg)
+        elif cfg.family == "ssm":
+            kv, slot_state = {}, shapes["layers"]
+            n_stacks = 0
+        else:
+            kv, slot_state = shapes["layers"], {}
+            n_stacks = cfg.n_layers
+        return CacheSpec(family=cfg.family, n_kv_stacks=n_stacks,
+                         n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                         kv_bytes_per_token=nbytes(kv),
+                         slot_state_bytes=nbytes(slot_state))
+
+    def init_paged_cache(self, n_slots: int, n_phys_blocks: int,
+                         block_size: int, max_blocks: int):
+        """Paged decode state: pooled KV pages + per-slot block tables and
+        a ``(n_slots,)`` position vector (SSM state, if any, stays dense
+        per slot). Only meaningful for KV-bearing families
+        (``cache_spec().pageable``)."""
+        if not self.cache_spec().pageable:
+            raise ValueError(
+                f"family {self.cfg.family!r} has no KV cache to page — its "
+                "decode state is constant-size per slot")
+        return self._mod.init_paged_cache(self.cfg, n_slots, n_phys_blocks,
+                                          block_size, max_blocks)
+
+    def paged_decode_step(self, params, cache, tokens):
+        """One decode step against the paged cache; bit-identical math to
+        :meth:`decode_step` (``tests/test_paged_kv.py`` parity suite)."""
+        return self._mod.paged_decode_step(params, cache, tokens, self.cfg)
+
+    def prefill_suffix(self, params, batch, *, prefix, prompt_len):
+        """Suffix-only prefill against cached prefix K/V (dense family
+        only: MoE expert-capacity coupling and SSM/hybrid recurrence make
+        skipping prefix compute inexact there — those families share paged
+        *storage* but recompute prefill; see docs/paged-kv.md)."""
+        if self.cfg.family != "dense":
+            raise ValueError(
+                f"family {self.cfg.family!r} cannot skip prefix prefill "
+                "compute (expert-capacity or recurrent-state coupling)")
+        return self._mod.prefill_suffix(params, batch, self.cfg,
+                                        prefix=prefix, prompt_len=prompt_len)
+
+    def split_prefill_cache(self, pre):
+        """Split a prefill cache into (kv leaves laid out
+        ``(stack, 1, max_len, ...)``, per-slot state leaves or None) — the
+        serve engine's family-agnostic hook for scattering a prefill into
+        the paged pool."""
+        if self.cfg.family == "hybrid":
+            return pre["kv"], pre["ssm"]
+        return pre["layers"], None
 
     def prefill(self, params, batch, *, max_len: int, prompt_len=None):
         """Run the prompt through the model, filling the cache.

@@ -78,21 +78,23 @@ def _conv(x, w, b, *, stride, groups, padding):
     return y + b
 
 
-def im2col_conv(x, w, b, *, stride: int, strategy=None):
+def im2col_conv(x, w, b, *, stride: int, padding: str = "VALID",
+                strategy=None):
     """Explicit DHM-style conv: unfold patches, then one MOA per filter.
 
-    ``x: (B, H, W, C)``, ``w: (O, C, kh, kw)``, VALID padding. The
-    ``C·kh·kw`` contraction is the paper's MOA; it routes through
-    ``strategy.dot`` so tree/serial/LOA scheduling applies end-to-end.
-    ``strategy`` accepts anything :func:`repro.moa.resolve` does; defaults
-    to ``"tree"`` (the synthesis-tool baseline) unless a
-    :func:`repro.moa.moa_scope` override is active.
+    ``x: (B, H, W, C)``, ``w: (O, C, kh, kw)``; ``padding`` is
+    ``"VALID"`` or ``"SAME"``. The ``C·kh·kw`` contraction is the paper's
+    MOA; it routes through ``strategy.dot`` so tree/serial/LOA scheduling
+    applies end-to-end. ``strategy`` accepts anything
+    :func:`repro.moa.resolve` does; defaults to ``"tree"`` (the
+    synthesis-tool baseline) unless a :func:`repro.moa.moa_scope` override
+    is active.
     """
     B, H, W, C = x.shape
     O, Ci, kh, kw = w.shape
     assert Ci == C, (Ci, C)
     patches = lax.conv_general_dilated_patches(
-        x, (kh, kw), (stride, stride), padding="VALID",
+        x, (kh, kw), (stride, stride), padding=padding,
         dimension_numbers=("NHWC", "OIHW", "NHWC"))  # (B, Ho, Wo, C*kh*kw)
     Ho, Wo = patches.shape[1], patches.shape[2]
     cols = patches.reshape(B * Ho * Wo, C * kh * kw)
@@ -105,12 +107,28 @@ def im2col_conv(x, w, b, *, stride: int, strategy=None):
     return y.reshape(B, Ho, Wo, O) + b
 
 
-def _stack_forward(params: Params, x, layout, n_fc: int) -> jax.Array:
+def _stack_forward(params: Params, x, layout, n_fc: int,
+                   accum: str = "conv", strategy=None) -> jax.Array:
+    """Shared conv-stack forward with selectable accumulation path.
+
+    ``accum="conv"`` uses ``lax.conv`` (XLA's fused reduction — the
+    baseline); ``accum="im2col"`` routes every ``groups == 1`` conv
+    through :func:`im2col_conv` so its ``C·kh·kw`` contraction is
+    scheduled by the active MOA strategy. Grouped convs (AlexNet's
+    two-GPU-era split layers) keep the ``lax.conv`` path — the MOA engine
+    schedules single dense contractions, not per-group scatter.
+    """
+    if accum not in ("conv", "im2col"):
+        raise ValueError(f"accum must be 'conv' or 'im2col', got {accum!r}")
     h = x
     for name, oc, ic, kh, kw, stride, groups, padding, pool in layout:
         p = params[name]
-        h = _conv(h, p["w"], p["b"], stride=stride, groups=groups,
-                  padding=padding)
+        if accum == "im2col" and groups == 1:
+            h = im2col_conv(h, p["w"], p["b"], stride=stride,
+                            padding=padding, strategy=strategy)
+        else:
+            h = _conv(h, p["w"], p["b"], stride=stride, groups=groups,
+                      padding=padding)
         h = jax.nn.relu(h)
         if pool:
             h = lax.reduce_window(
@@ -125,11 +143,18 @@ def _stack_forward(params: Params, x, layout, n_fc: int) -> jax.Array:
     return h @ p["w"] + p["b"]
 
 
-def lenet5_forward(params: Params, x) -> jax.Array:
-    """``x: (B, 32, 32, 1)`` → logits ``(B, 10)``."""
-    return _stack_forward(params, x, LENET5_LAYOUT, n_fc=2)
+def lenet5_forward(params: Params, x, *, accum: str = "conv",
+                   strategy=None) -> jax.Array:
+    """``x: (B, 32, 32, 1)`` → logits ``(B, 10)``; ``accum``/``strategy``
+    select the conv accumulation path (see :func:`_stack_forward`)."""
+    return _stack_forward(params, x, LENET5_LAYOUT, n_fc=2, accum=accum,
+                          strategy=strategy)
 
 
-def alexnet_forward(params: Params, x) -> jax.Array:
-    """``x: (B, 227, 227, 3)`` → logits ``(B, 1000)``."""
-    return _stack_forward(params, x, ALEXNET_LAYOUT, n_fc=1)
+def alexnet_forward(params: Params, x, *, accum: str = "conv",
+                    strategy=None) -> jax.Array:
+    """``x: (B, 227, 227, 3)`` → logits ``(B, 1000)``; ``accum``/
+    ``strategy`` select the conv accumulation path for the ``groups == 1``
+    layers (conv1/conv3 — the others are grouped)."""
+    return _stack_forward(params, x, ALEXNET_LAYOUT, n_fc=1, accum=accum,
+                          strategy=strategy)

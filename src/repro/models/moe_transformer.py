@@ -21,7 +21,8 @@ from repro.layers.moe import init_moe, moe_forward
 from repro.models import transformer as dense
 from repro.parallel import constrain
 
-__all__ = ["init_params", "forward", "init_cache", "prefill", "decode_step"]
+__all__ = ["init_params", "forward", "init_cache", "init_paged_cache",
+           "prefill", "decode_step", "paged_decode_step"]
 
 
 def _init_layer(rng, cfg: ModelConfig) -> Params:
@@ -88,6 +89,7 @@ def forward(params: Params, batch: dict, cfg: ModelConfig):
 
 
 init_cache = dense.init_cache
+init_paged_cache = dense.init_paged_cache
 
 
 def prefill(params: Params, batch: dict, cfg: ModelConfig, *, max_len: int,
@@ -169,3 +171,36 @@ def decode_step(params: Params, cache: Params, tokens, cfg: ModelConfig):
     logits = unembed(params["embed"], h, compute_dtype=cfg.cdtype)
     return (constrain(logits, "batch", None, "vocab"),
             {"layers": new_layers, "pos": pos + 1})
+
+
+def paged_decode_step(params: Params, cache: Params, tokens,
+                      cfg: ModelConfig):
+    """Paged decode step (same layout contract as
+    :func:`repro.models.transformer.paged_decode_step`); the MoE layers are
+    untouched — only the attention KV read/write goes through the block
+    tables."""
+    pos, tables = cache["pos"], cache["block_tables"]
+    h = embed(params["embed"], tokens, compute_dtype=cfg.cdtype)
+
+    def body(carry, xs):
+        layer, layer_pool = xs
+        hn = rms_norm(layer["attn_norm"], carry)
+        a, new_pool = attn_lib.attention_decode_paged(
+            layer["attn"], hn, layer_pool, tables, pos, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+            rope_theta=cfg.rope_theta, compute_dtype=cfg.cdtype,
+            strategy=cfg.moa_for("attention"))
+        h2 = carry + a
+        hn = rms_norm(layer["mlp_norm"], h2)
+        m, _ = moe_forward(layer["moe"], hn, n_experts=cfg.n_experts,
+                           top_k=cfg.top_k,
+                           capacity_factor=cfg.capacity_factor,
+                           compute_dtype=cfg.cdtype,
+                           strategy=cfg.moa_for("moe"))
+        return h2 + m, new_pool
+
+    h, new_layers = lax.scan(body, h, (params["layers"], cache["layers"]))
+    h = rms_norm(params["final_norm"], h)
+    logits = unembed(params["embed"], h, compute_dtype=cfg.cdtype)
+    return (constrain(logits, "batch", None, "vocab"),
+            {"layers": new_layers, "block_tables": tables, "pos": pos + 1})

@@ -23,8 +23,9 @@ from repro.layers.mlp import gelu_mlp, init_gelu_mlp, init_swiglu, swiglu
 from repro.parallel import constrain
 
 __all__ = [
-    "init_params", "forward", "init_cache", "prefill", "decode_step",
-    "init_layer", "layer_forward",
+    "init_params", "forward", "init_cache", "init_paged_cache", "prefill",
+    "prefill_suffix", "decode_step", "paged_decode_step", "init_layer",
+    "layer_forward",
 ]
 
 
@@ -166,6 +167,23 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
     }
 
 
+def init_paged_cache(cfg: ModelConfig, n_slots: int, n_phys_blocks: int,
+                     block_size: int, max_blocks: int) -> Params:
+    """Paged decode state: one shared physical page pool (per layer) plus
+    per-slot block tables and position cursors. Physical block 0 is the
+    engine's write-trash page; a zeroed table row therefore maps every
+    logical block to trash (the freed-slot state)."""
+    kv_dtype = jnp.int8 if cfg.kv_cache_dtype == "int8" else cfg.cdtype
+    one = attn_lib.init_kv_pool(n_phys_blocks, block_size, cfg.n_kv_heads,
+                                cfg.head_dim, dtype=kv_dtype)
+    return {
+        "layers": jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), one),
+        "block_tables": jnp.zeros((n_slots, max_blocks), jnp.int32),
+        "pos": jnp.zeros((n_slots,), jnp.int32),
+    }
+
+
 def _layer_prefill(layer: Params, h, *, cfg: ModelConfig, positions, max_len):
     """Layer forward that also emits its (post-rope) K/V for the cache."""
     from repro.layers.rope import apply_rope
@@ -244,6 +262,70 @@ def prefill(params: Params, batch: dict, cfg: ModelConfig, *, max_len: int,
     return constrain(logits, "batch", "seq", "vocab"), cache
 
 
+def prefill_suffix(params: Params, batch: dict, cfg: ModelConfig, *,
+                   prefix: Params, prompt_len):
+    """Prefill only the *suffix* of a prompt whose leading blocks hit the
+    prefix cache; returns (last-position logits, suffix cache).
+
+    ``prefix`` holds the cached prefix K/V gathered from the paged pool:
+    ``{"k", "v"}: (L, 1, P, Hk, D)`` in compute dtype (dequantized if the
+    pool is int8). ``batch["tokens"]`` carries the remaining suffix tokens,
+    right-padded to a block-aligned bucket; ``prompt_len`` (scalar) is the
+    *total* true prompt length, so the suffix occupies positions
+    ``P .. prompt_len - 1``. Suffix queries attend over
+    ``concat(prefix, suffix)`` with explicit positions — padded suffix K/V
+    rows sit at positions ``>= prompt_len`` and are causally masked away.
+    This is the compute a prefix-cache hit *skips*: the prefix's O(P·L)
+    projection + attention work is never redone.
+    """
+    from repro.layers.rope import apply_rope
+
+    P = prefix["k"].shape[2]
+    h, _, _ = embed_inputs(params, batch, cfg)
+    h = constrain(h, "batch", "seq", "embed")
+    S = h.shape[1]
+    positions_q = P + jnp.arange(S)
+    positions_kv = jnp.arange(P + S)
+
+    def body(carry, xs):
+        layer, pre = xs
+        hn = rms_norm(layer["attn_norm"], carry)
+        attn_strategy = cfg.moa_for("attention")
+        q, k, v = attn_lib._project_qkv(
+            layer["attn"], hn, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+            compute_dtype=cfg.cdtype, strategy=attn_strategy)
+        q = apply_rope(q, positions_q, theta=cfg.rope_theta)
+        k = apply_rope(k, positions_q, theta=cfg.rope_theta)
+        k_full = jnp.concatenate([pre["k"].astype(cfg.cdtype), k], axis=1)
+        v_full = jnp.concatenate([pre["v"].astype(cfg.cdtype), v], axis=1)
+        o = attn_lib.full_attention(q, k_full, v_full, causal=True,
+                                    positions_q=positions_q,
+                                    positions_kv=positions_kv)
+        B = o.shape[0]
+        o = o.reshape(B, S, cfg.n_heads * cfg.head_dim)
+        o = attn_lib._moa_dot(o, layer["attn"]["wo"].astype(cfg.cdtype),
+                              strategy=attn_strategy,
+                              compute_dtype=cfg.cdtype)
+        h2 = carry + constrain(o, "batch", "seq", "embed")
+        hn = rms_norm(layer["mlp_norm"], h2)
+        m = swiglu(layer["mlp"], hn, strategy=cfg.moa_for("mlp"),
+                   compute_dtype=cfg.cdtype)
+        h2 = h2 + constrain(m, "batch", "seq", "embed")
+        if cfg.kv_cache_dtype == "int8":
+            kq, ks = attn_lib.quantize_kv(k)
+            vq, vs = attn_lib.quantize_kv(v)
+            return h2, {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+        return h2, {"k": k, "v": v}
+
+    h, kv_layers = lax.scan(_remat(body, cfg), h, (params["layers"], prefix))
+    h = rms_norm(params["final_norm"], h)
+    h_last, pos = _last_real_slice(h, prompt_len - P)
+    logits = unembed(params["embed"], h_last, compute_dtype=cfg.cdtype)
+    cache = {"layers": kv_layers, "pos": jnp.asarray(prompt_len, jnp.int32)}
+    return constrain(logits, "batch", "seq", "vocab"), cache
+
+
 def decode_step(params: Params, cache: Params, tokens, cfg: ModelConfig):
     """One token step for the whole batch. ``tokens: (B, 1)`` int32."""
     pos = cache["pos"]
@@ -269,4 +351,41 @@ def decode_step(params: Params, cache: Params, tokens, cfg: ModelConfig):
     h = rms_norm(params["final_norm"], h)
     logits = unembed(params["embed"], h, compute_dtype=cfg.cdtype)
     new_cache = {"layers": new_layers, "pos": pos + 1}
+    return constrain(logits, "batch", None, "vocab"), new_cache
+
+
+def paged_decode_step(params: Params, cache: Params, tokens,
+                      cfg: ModelConfig):
+    """One token step against the paged pool (``init_paged_cache`` layout).
+
+    Same layer scan as :func:`decode_step`; the KV read/write is routed
+    through per-slot block tables, so the step's math — and its greedy
+    continuation — is bit-identical to the dense-slot path (the gathered
+    logical view has exactly the dense cache's shape; see
+    ``docs/paged-kv.md``).
+    """
+    pos, tables = cache["pos"], cache["block_tables"]
+    h = embed(params["embed"], tokens, compute_dtype=cfg.cdtype)
+    h = constrain(h, "batch", None, "embed")
+
+    def body(carry, xs):
+        layer, layer_pool = xs
+        hn = rms_norm(layer["attn_norm"], carry)
+        a, new_pool = attn_lib.attention_decode_paged(
+            layer["attn"], hn, layer_pool, tables, pos, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+            rope_theta=cfg.rope_theta, compute_dtype=cfg.cdtype,
+            strategy=cfg.moa_for("attention"))
+        h2 = carry + a
+        hn = rms_norm(layer["mlp_norm"], h2)
+        mlp_fn = gelu_mlp if cfg.family == "encoder" else swiglu
+        m = mlp_fn(layer["mlp"], hn, strategy=cfg.moa_for("mlp"),
+                   compute_dtype=cfg.cdtype)
+        return h2 + m, new_pool
+
+    h, new_layers = lax.scan(body, h, (params["layers"], cache["layers"]))
+    h = rms_norm(params["final_norm"], h)
+    logits = unembed(params["embed"], h, compute_dtype=cfg.cdtype)
+    new_cache = {"layers": new_layers, "block_tables": tables,
+                 "pos": pos + 1}
     return constrain(logits, "batch", None, "vocab"), new_cache

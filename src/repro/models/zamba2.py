@@ -1,6 +1,7 @@
 """Zamba2-style hybrid: Mamba-2 backbone + one *shared* attention block.
 
-Structure (arXiv:2411.15242, simplified as documented in DESIGN.md):
+Structure (arXiv:2411.15242, simplified as documented in
+docs/architecture.md):
 ``n_layers`` Mamba-2 blocks; after every ``attn_every`` of them the single
 shared (attention + SwiGLU) block is applied, with small *per-application*
 input norms (stand-in for Zamba2's per-invocation LoRA). Weight sharing
@@ -31,8 +32,8 @@ from repro.models import mamba2 as mamba_lm
 from repro.models import transformer as dense
 from repro.parallel import constrain
 
-__all__ = ["init_params", "forward", "init_cache", "prefill", "decode_step",
-           "n_applications"]
+__all__ = ["init_params", "forward", "init_cache", "init_paged_cache",
+           "prefill", "decode_step", "paged_decode_step", "n_applications"]
 
 
 def n_applications(cfg: ModelConfig) -> int:
@@ -136,6 +137,31 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
         "kv": jax.tree.map(
             lambda a: jnp.broadcast_to(a, (n_apps,) + a.shape), kv_one),
         "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def init_paged_cache(cfg: ModelConfig, n_slots: int, n_phys_blocks: int,
+                     block_size: int, max_blocks: int) -> Params:
+    """Paged hybrid state: the shared block's KV (the only sequence-
+    proportional state) moves into a physical page pool per application
+    point; the SSM states stay dense per slot — they are O(1) in sequence
+    length, so paging them would buy nothing."""
+    n_apps = n_applications(cfg)
+    ssm_one = init_ssm_state(n_slots, d_model=cfg.d_model,
+                             d_state=cfg.d_state, headdim=cfg.headdim,
+                             n_groups=cfg.n_groups, d_conv=cfg.d_conv,
+                             expand=cfg.expand)
+    kv_one = attn_lib.init_kv_pool(n_phys_blocks, block_size,
+                                   cfg.n_kv_heads, cfg.head_dim,
+                                   dtype=cfg.cdtype)
+    return {
+        "ssm": jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape),
+            ssm_one),
+        "kv": jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_apps,) + a.shape), kv_one),
+        "block_tables": jnp.zeros((n_slots, max_blocks), jnp.int32),
+        "pos": jnp.zeros((n_slots,), jnp.int32),
     }
 
 
@@ -260,3 +286,60 @@ def decode_step(params: Params, cache: Params, tokens, cfg: ModelConfig):
     logits = unembed(params["embed"], h, compute_dtype=cfg.cdtype)
     return (constrain(logits, "batch", None, "vocab"),
             {"ssm": new_ssm, "kv": new_kv, "pos": pos + 1})
+
+
+def paged_decode_step(params: Params, cache: Params, tokens,
+                      cfg: ModelConfig):
+    """Paged decode step: identical to :func:`decode_step` except the
+    shared attention block reads/writes its KV through per-slot block
+    tables; the dense per-slot SSM recurrence is untouched."""
+    pos, tables = cache["pos"], cache["block_tables"]
+    h = embed(params["embed"], tokens, compute_dtype=cfg.cdtype)
+    n_apps, per_group, tail = _grouped(cfg)
+    head_states = jax.tree.map(
+        lambda a: a[: n_apps * per_group].reshape(
+            (n_apps, per_group) + a.shape[1:]), cache["ssm"])
+    tail_states = jax.tree.map(lambda a: a[n_apps * per_group:],
+                               cache["ssm"]) if tail else None
+    head, tail_p = _split_layers(params, cfg)
+
+    def mamba_body(carry, xs):
+        layer, state = xs
+        hn = rms_norm(layer["norm"], carry)
+        y, new_state = mamba2_decode(
+            layer["mixer"], hn, state, d_state=cfg.d_state,
+            headdim=cfg.headdim, n_groups=cfg.n_groups, expand=cfg.expand,
+            compute_dtype=cfg.cdtype)
+        return carry + y, new_state
+
+    def group_body(carry, xs):
+        group_layers, group_states, app_norm, kv_pool = xs
+        out, new_states = lax.scan(mamba_body, carry,
+                                   (group_layers, group_states))
+        hn = rms_norm(app_norm["attn"], out)
+        a, new_pool = attn_lib.attention_decode_paged(
+            params["shared_attn"], hn, kv_pool, tables, pos,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+            compute_dtype=cfg.cdtype, strategy=cfg.moa_for("attention"))
+        out = out + a
+        hn = rms_norm(app_norm["mlp"], out)
+        out = out + swiglu(params["shared_mlp"], hn,
+                           strategy=cfg.moa_for("mlp"),
+                           compute_dtype=cfg.cdtype)
+        return out, (new_states, new_pool)
+
+    h, (new_head_states, new_kv) = lax.scan(
+        group_body, h,
+        (head, head_states, params["app_norms"], cache["kv"]))
+    new_ssm = jax.tree.map(lambda a: a.reshape((-1,) + a.shape[2:]),
+                           new_head_states)
+    if tail_states is not None:
+        h, new_tail = lax.scan(mamba_body, h, (tail_p, tail_states))
+        new_ssm = jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=0),
+                               new_ssm, new_tail)
+    h = rms_norm(params["final_norm"], h)
+    logits = unembed(params["embed"], h, compute_dtype=cfg.cdtype)
+    return (constrain(logits, "batch", None, "vocab"),
+            {"ssm": new_ssm, "kv": new_kv, "block_tables": tables,
+             "pos": pos + 1})

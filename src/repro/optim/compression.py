@@ -17,7 +17,7 @@ Usage inside a train step::
     # reduction then happens on the dequantized values.
 
 The benchmark ``benchmarks/moa_strategies.py`` reports the collective-term
-delta; the hypothesis log lives in EXPERIMENTS.md §Perf.
+delta; the hypothesis log lives in docs/architecture.md §Perf levers.
 """
 
 from __future__ import annotations

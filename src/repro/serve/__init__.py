@@ -6,7 +6,11 @@ accumulator state: requests stream in (Poisson open-loop or interactive
 ``submit``), a freed slot immediately admits the next arrived request via a
 bucketed prefill, and one batched :meth:`~repro.models.api.Model.decode_step`
 per engine tick folds one token per active slot into the per-slot KV/SSM
-state. See ``docs/serving.md`` for the design and scheduler invariants.
+state. ``ServeEngine(paged=True)`` swaps the dense per-slot cache regions
+for a shared paged block pool with ref-counted prefix caching and
+memory-aware admission (:mod:`repro.serve.kv_pool`). See
+``docs/serving.md`` and ``docs/paged-kv.md`` for the design and
+scheduler/pool invariants.
 
 Public surface::
 
@@ -18,14 +22,16 @@ Public surface::
 """
 
 from repro.serve.engine import ServeEngine
+from repro.serve.kv_pool import AdmissionPlan, BlockPool, blocks_needed
 from repro.serve.metrics import RequestMetrics, aggregate
 from repro.serve.request import FinishReason, Request, RequestResult
 from repro.serve.sampling import GREEDY, Sampler, sample_batch
 from repro.serve.scheduler import SlotScheduler
-from repro.serve.workload import poisson_workload
+from repro.serve.workload import poisson_workload, shared_prefix_workload
 
 __all__ = [
-    "FinishReason", "GREEDY", "Request", "RequestMetrics", "RequestResult",
-    "Sampler", "ServeEngine", "SlotScheduler", "aggregate", "sample_batch",
-    "poisson_workload",
+    "AdmissionPlan", "BlockPool", "FinishReason", "GREEDY", "Request",
+    "RequestMetrics", "RequestResult", "Sampler", "ServeEngine",
+    "SlotScheduler", "aggregate", "blocks_needed", "sample_batch",
+    "poisson_workload", "shared_prefix_workload",
 ]

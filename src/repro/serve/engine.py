@@ -7,12 +7,26 @@ holds every slot's KV/SSM state with a **per-slot position vector**
 context lengths inside a single jitted decode step — the paper's serial
 accumulator with one accumulator per slot.
 
+Two cache layouts (``docs/paged-kv.md``):
+
+* **dense slots** (default): every slot statically reserves a
+  ``max_len``-token KV region — simple, but over-provisioned exactly the
+  way the paper warns against for any shared resource;
+* **paged** (``paged=True``): KV lives in a shared pool of fixed-size
+  physical pages mapped through per-slot block tables
+  (:mod:`repro.serve.kv_pool`). Requests sharing a prompt prefix share
+  physical pages (ref-counted, copy-on-write at the first divergent
+  write), admission requires "free slot **and** enough free blocks"
+  (preempt-free backpressure), and on the dense family a prefix-cache hit
+  skips recomputing the shared prefill blocks entirely.
+
 Shape discipline (everything ``jax.jit`` sees is from a fixed set):
   * decode: always ``(n_slots, 1)`` tokens against the same cache shapes;
   * prefill: one shape per prompt bucket (attention families right-pad and
     pass ``prompt_len``; SSM/hybrid compile one prefill per exact length
     because pad tokens would pollute the recurrent state — see
-    ``docs/serving.md``);
+    ``docs/serving.md``); suffix prefill adds one shape per
+    (prefix blocks, suffix bucket) pair;
   * sampling: one ``(n_slots, vocab)`` mixed-policy call.
 """
 
@@ -20,14 +34,15 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.launch.costing import request_decode_cost
-from repro.serve.metrics import RequestMetrics, aggregate
+from repro.serve.kv_pool import TRASH_BLOCK, BlockPool, blocks_needed
+from repro.serve.metrics import RequestMetrics, aggregate, paged_report
 from repro.serve.request import FinishReason, Request, RequestResult
 from repro.serve.sampling import sample_batch
 from repro.serve.scheduler import SlotScheduler
@@ -45,6 +60,22 @@ class _Inflight:
     generated: List[int]
     next_token: int
     metrics: RequestMetrics
+
+
+@dataclasses.dataclass
+class _SlotTable:
+    """Host mirror of one slot's block table (paged mode).
+
+    ``shared`` marks logical blocks currently mapped to ref-shared pages
+    (writes must not land there — admission redirects them to the trash
+    page, and the reserved ``cow_spare`` absorbs the first divergent
+    write).
+    """
+
+    blocks: List[int]
+    shared: Set[int]
+    cow_spare: Optional[int] = None
+    tail_idx: Optional[int] = None
 
 
 def _write_slot(cache: dict, pre: dict, slot):
@@ -82,6 +113,18 @@ class ServeEngine:
     prompt_buckets:
         Prefill shape set (tokens); defaults to powers of two up to
         ``max_len``. Attention families right-pad prompts up to a bucket.
+    paged:
+        Use the paged KV pool instead of dense per-slot cache regions.
+        Requires a KV-bearing family (dense / MoE / hybrid — pure SSM has
+        nothing to page) and ``block_size`` dividing ``max_len`` (which
+        makes the gathered paged view shape-identical to the dense cache,
+        the key to bit-identical decode).
+    block_size:
+        Tokens per physical KV page (paged mode).
+    n_blocks:
+        Physical pages in the pool (paged mode). Defaults to the dense
+        equivalent ``n_slots * max_len / block_size``; smaller values
+        trade capacity for admission backpressure.
     rng:
         Key for sampled (non-greedy) requests. Defaults to ``PRNGKey(0)``.
     clock:
@@ -91,8 +134,9 @@ class ServeEngine:
     """
 
     def __init__(self, model, params, *, n_slots: int, max_len: int,
-                 prompt_buckets: Sequence[int] = (), rng=None,
-                 clock: Callable[[], float] = time.monotonic):
+                 prompt_buckets: Sequence[int] = (), paged: bool = False,
+                 block_size: int = 16, n_blocks: Optional[int] = None,
+                 rng=None, clock: Callable[[], float] = time.monotonic):
         if model.cfg.family == "encoder":
             raise ValueError("encoder-only arch has no decode step")
         if model.cfg.family == "vlm":
@@ -109,12 +153,16 @@ class ServeEngine:
         self._clock = clock
         self._rng = jax.random.PRNGKey(0) if rng is None else rng
         self._padded = model.supports_padded_prefill
+        self.paged = paged
 
-        cache = model.init_cache(n_slots, max_len)
-        cache["pos"] = jnp.zeros((n_slots,), jnp.int32)
-        self.cache = cache
+        if paged:
+            self._init_paged(block_size, n_blocks)
+        else:
+            cache = model.init_cache(n_slots, max_len)
+            cache["pos"] = jnp.zeros((n_slots,), jnp.int32)
+            self.cache = cache
+            self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
 
-        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
         if self._padded:
             self._prefill = jax.jit(
                 lambda p, b, pl: model.prefill(p, b, max_len=max_len,
@@ -130,6 +178,125 @@ class ServeEngine:
         self._occupancy_sum = 0.0
         self._fast_forward_s = 0.0
 
+    # ---- paged setup -------------------------------------------------------
+    def _init_paged(self, block_size: int, n_blocks: Optional[int]) -> None:
+        model = self.model
+        spec = model.cache_spec()
+        if not spec.pageable:
+            raise ValueError(
+                f"family {model.cfg.family!r} has no KV cache to page — "
+                "its decode state is constant-size per slot")
+        if self.max_len % block_size:
+            raise ValueError(
+                f"block_size {block_size} must divide max_len "
+                f"{self.max_len} so the gathered paged view matches the "
+                "dense cache shape exactly")
+        self.block_size = block_size
+        self._max_blocks = self.max_len // block_size
+        self.n_blocks = n_blocks if n_blocks is not None \
+            else self.n_slots * self._max_blocks
+        self._pool = BlockPool(self.n_blocks, block_size)
+        self._tables: Dict[int, _SlotTable] = {}
+        # dense family: prefix hits skip prefill compute via suffix prefill;
+        # partial-tail sharing is pointless there (the tail is recomputed),
+        # so tail matching — and with it CoW — is the full-prefill
+        # families' (MoE / hybrid) regime
+        self._suffix_capable = model.cfg.family == "dense"
+        self._match_tail = not self._suffix_capable
+        # prefix-content reuse is exact only when a prompt position's KV is
+        # independent of the rest of the prefill batch: dense and hybrid
+        # (causal) always, MoE only dropless — below that, expert capacity
+        # couples a token's output to the total prefill length, so two
+        # requests' "identical" prefixes can hold different KV. Capacity-
+        # limited MoE still pages memory but never shares content (its
+        # prompt blocks stay out of the trie).
+        self._prefix_share = model.cfg.family != "moe" \
+            or model.supports_padded_prefill
+        if not self._prefix_share:
+            self._match_tail = False
+        self._spec = spec
+        # physical pages: pool blocks 1..n plus the id-0 trash page
+        self.cache = model.init_paged_cache(
+            self.n_slots, self.n_blocks + 1, block_size, self._max_blocks)
+        self._kv_key = "kv" if model.cfg.family == "hybrid" else "layers"
+        self._decode = jax.jit(model.paged_decode_step, donate_argnums=(1,))
+        if self._suffix_capable:
+            self._suffix_prefill = jax.jit(
+                lambda p, b, pre, pl: model.prefill_suffix(
+                    p, b, prefix=pre, prompt_len=pl))
+        self._gather_prefix = jax.jit(self._gather_prefix_impl)
+        self._paged_write = jax.jit(self._paged_write_impl,
+                                    donate_argnums=(0,))
+        self._cow_copy = jax.jit(self._cow_copy_impl, donate_argnums=(0,))
+        self._clear_slot = jax.jit(self._clear_slot_impl, donate_argnums=(0,))
+        self._prefix_hits = 0
+        self._shared_block_hits = 0
+        self._cow_count = 0
+        self._admissions = 0
+        self._block_occ_sum = 0.0
+        self._peak_blocks = 0
+
+    # ---- paged device helpers (jitted closures over the cache layout) -----
+    def _gather_prefix_impl(self, pool, ids):
+        """Cached prefix pages → dense ``(L, 1, P, Hk, D)`` K/V (compute
+        dtype; dequantized if the pool is int8)."""
+        from repro.layers.attention import dequantize_kv
+
+        def flat(name):
+            x = pool[name][:, ids]                   # (L, n, bs, ...)
+            return x.reshape((x.shape[0], 1, -1) + x.shape[3:])
+
+        k, v = flat("k"), flat("v")
+        if "k_scale" in pool:
+            cdtype = self.model.cfg.cdtype
+            k = dequantize_kv(k, flat("k_scale"), cdtype)
+            v = dequantize_kv(v, flat("v_scale"), cdtype)
+        return {"k": k, "v": v}
+
+    def _paged_write_impl(self, cache, pre_kv, pre_state, write_ids,
+                          table_row, slot, pre_pos):
+        """Scatter a prefill's K/V into the pool pages named by
+        ``write_ids`` (one per written logical block; shared/overhang
+        blocks arrive redirected to the trash page), install the slot's
+        block-table row + position, and write any per-slot dense state."""
+        out = dict(cache)
+        nb = write_ids.shape[0]
+
+        def w(pool_leaf, s):
+            s = s[:, 0]                              # (stack, S, ...)
+            s = s.reshape((s.shape[0], nb, s.shape[1] // nb) + s.shape[2:])
+            return pool_leaf.at[:, write_ids].set(s.astype(pool_leaf.dtype))
+
+        out[self._kv_key] = jax.tree.map(w, cache[self._kv_key], pre_kv)
+        if pre_state is not None:
+            out["ssm"] = jax.tree.map(
+                lambda b, s: b.at[:, slot].set(s[:, 0].astype(b.dtype)),
+                cache["ssm"], pre_state)
+        out["block_tables"] = cache["block_tables"].at[slot].set(table_row)
+        out["pos"] = cache["pos"].at[slot].set(
+            pre_pos.astype(cache["pos"].dtype))
+        return out
+
+    def _cow_copy_impl(self, cache, src, dst, slot, logical_idx):
+        """Copy-on-write: duplicate page ``src`` into the reserved spare
+        ``dst`` and repoint this slot's table entry, so the imminent
+        divergent write lands on a private page."""
+        out = dict(cache)
+        out[self._kv_key] = jax.tree.map(
+            lambda p: p.at[:, dst].set(p[:, src]), cache[self._kv_key])
+        out["block_tables"] = \
+            cache["block_tables"].at[slot, logical_idx].set(dst)
+        return out
+
+    def _clear_slot_impl(self, cache, slot):
+        """Point a freed slot's table at the trash page and rewind its
+        cursor: its (masked-out) decode writes can then never corrupt
+        pages reallocated to live requests."""
+        out = dict(cache)
+        out["block_tables"] = cache["block_tables"].at[slot].set(TRASH_BLOCK)
+        out["pos"] = cache["pos"].at[slot].set(0)
+        return out
+
     # ---- time --------------------------------------------------------------
     def _now(self, t_start: float) -> float:
         """Engine clock in seconds: wall time plus fast-forwarded idle."""
@@ -140,30 +307,167 @@ class ServeEngine:
         self._rng, k = jax.random.split(self._rng)
         return k
 
+    def _block_gate(self, req: Request) -> bool:
+        """Invariant 6: admission needs enough free pool blocks for the
+        request's worst-case lifetime (prefix hits count as free)."""
+        return self._pool.can_admit(req.prompt, req.max_new_tokens,
+                                    match_tail=self._match_tail)
+
+    def _plan_tables(self, req: Request):
+        """Reserve pool pages for one admission: share matched prefix
+        pages, allocate the rest (plus the CoW spare for a matched tail),
+        and build the slot's logical→physical table."""
+        pool, bs = self._pool, self.block_size
+        plan = pool.plan(req.prompt, req.max_new_tokens,
+                         match_tail=self._match_tail)
+        # share before alloc: a matched evictable page must be revived
+        # before allocation can consider evicting it
+        for b in plan.full_matched:
+            pool.share(b)
+        if plan.tail_matched is not None:
+            pool.share(plan.tail_matched)
+        fresh = iter(pool.alloc(plan.new_needed))
+        n_full = len(plan.full_matched)
+        table = _SlotTable(blocks=list(plan.full_matched),
+                           shared=set(range(n_full)))
+        if plan.tail_matched is not None:
+            table.tail_idx = n_full              # == prompt_len // bs
+        for i in range(n_full, plan.n_logical):
+            if i == table.tail_idx:
+                table.blocks.append(plan.tail_matched)
+                table.shared.add(i)
+            else:
+                table.blocks.append(next(fresh))
+        if plan.tail_matched is not None:
+            table.cow_spare = next(fresh)
+        return plan, table
+
+    def _register_prompt_blocks(self, req: Request, plan,
+                                table: _SlotTable) -> None:
+        """Publish this admission's privately-written prompt pages in the
+        prefix trie (matched pages are already registered)."""
+        if not self._prefix_share:
+            return
+        bs, p = self.block_size, req.prompt_len
+        for i in range(len(plan.full_matched), p // bs):
+            self._pool.register(table.blocks[i], req.prompt[: (i + 1) * bs])
+        if self._match_tail and p % bs and plan.tail_matched is None:
+            self._pool.register(table.blocks[p // bs], req.prompt)
+
+    def _paged_prefill(self, slot: int, req: Request):
+        """Prefill under the paged cache; returns the first-token logits.
+
+        Dense family with a prefix hit: gather the cached prefix pages and
+        run the *suffix-only* prefill — the O(prefix) projection/attention
+        work is skipped, which is where the TTFT win on shared-prefix
+        workloads comes from. Everything else: full (bucketed or
+        exact-length) prefill; shared logical blocks write to the trash
+        page so cached content is never clobbered.
+        """
+        pool, bs, p = self._pool, self.block_size, req.prompt_len
+        plan, table = self._plan_tables(req)
+        self._admissions += 1
+        if plan.n_shared:
+            self._prefix_hits += 1
+            self._shared_block_hits += plan.n_shared
+        prompt = req.prompt_array()
+        # dense suffix path: recompute at least one position so the
+        # last-token logits exist even when every prompt block matched
+        n_pref = min(len(plan.full_matched), (p - 1) // bs) \
+            if self._suffix_capable else 0
+        if n_pref > 0:
+            prefix = self._gather_prefix(
+                self.cache[self._kv_key],
+                jnp.asarray(table.blocks[:n_pref], jnp.int32))
+            suffix = prompt[0, n_pref * bs:]
+            pad = -len(suffix) % bs
+            toks = np.zeros((1, len(suffix) + pad), np.int32)
+            toks[0, : len(suffix)] = suffix
+            logits, pre = self._suffix_prefill(
+                self.params, {"tokens": toks}, prefix,
+                jnp.asarray(p, jnp.int32))
+            first_logical = n_pref
+        else:
+            if self._padded:
+                bucket = self.scheduler.bucket_for(p)
+                toks = np.zeros((1, bucket), np.int32)
+                toks[0, :p] = prompt[0]
+                logits, pre = self._prefill(self.params, {"tokens": toks},
+                                            jnp.asarray(p, jnp.int32))
+            else:
+                logits, pre = self._prefill(self.params, {"tokens": prompt})
+            first_logical = 0
+        kv, state = self.model.split_prefill_cache(pre)
+        n_written = kv["k"].shape[2] // bs
+        write_ids = []
+        for i in range(first_logical, first_logical + n_written):
+            if i >= len(table.blocks) or i in table.shared:
+                write_ids.append(TRASH_BLOCK)
+            else:
+                write_ids.append(table.blocks[i])
+        row = np.full((self._max_blocks,), TRASH_BLOCK, np.int32)
+        row[: len(table.blocks)] = table.blocks
+        self.cache = self._paged_write(
+            self.cache, kv, state, jnp.asarray(write_ids, jnp.int32),
+            jnp.asarray(row), slot, pre["pos"])
+        self._register_prompt_blocks(req, plan, table)
+        self._tables[slot] = table
+        return logits, n_pref * bs
+
+    def _apply_cow(self, slot: int) -> None:
+        """First divergent write is imminent (the request enters the decode
+        loop): copy the shared tail page into the reserved spare."""
+        table = self._tables[slot]
+        if table.cow_spare is None:
+            return
+        src, dst = table.blocks[table.tail_idx], table.cow_spare
+        self.cache = self._cow_copy(self.cache, src, dst, slot,
+                                    table.tail_idx)
+        self._pool.free(src)
+        table.blocks[table.tail_idx] = dst
+        table.shared.discard(table.tail_idx)
+        table.cow_spare = None
+        self._cow_count += 1
+
+    def _release_paged(self, slot: int) -> None:
+        table = self._tables.pop(slot)
+        for b in table.blocks:
+            self._pool.free(b)
+        if table.cow_spare is not None:
+            self._pool.free(table.cow_spare)
+        self.cache = self._clear_slot(self.cache, slot)
+
     def _admit(self, slot: int, req: Request, now_s: float,
                results: List[RequestResult]) -> None:
         """Prefill ``req`` into ``slot`` and seed its first token."""
         p = req.prompt_len
-        prompt = req.prompt_array()
-        if self._padded:
-            bucket = self.scheduler.bucket_for(p)
-            toks = np.zeros((1, bucket), np.int32)
-            toks[0, :p] = prompt[0]
-            logits, pre = self._prefill(self.params, {"tokens": toks},
-                                        jnp.asarray(p, jnp.int32))
+        cached_tokens = 0
+        if self.paged:
+            logits, cached_tokens = self._paged_prefill(slot, req)
         else:
-            logits, pre = self._prefill(self.params, {"tokens": prompt})
+            prompt = req.prompt_array()
+            if self._padded:
+                bucket = self.scheduler.bucket_for(p)
+                toks = np.zeros((1, bucket), np.int32)
+                toks[0, :p] = prompt[0]
+                logits, pre = self._prefill(self.params, {"tokens": toks},
+                                            jnp.asarray(p, jnp.int32))
+            else:
+                logits, pre = self._prefill(self.params, {"tokens": prompt})
+            self.cache = self._write(self.cache, pre, slot)
         first = int(np.asarray(req.sampler(
             logits[:, -1], None if req.sampler.greedy else self._next_key()))[0])
-        self.cache = self._write(self.cache, pre, slot)
         t_first = self._now(self._t_start)
         metrics = RequestMetrics(arrival_s=req.arrival_s, admitted_s=now_s,
-                                 first_token_s=t_first, prompt_tokens=p)
+                                 first_token_s=t_first, prompt_tokens=p,
+                                 cached_prompt_tokens=cached_tokens)
         inf = _Inflight(request=req, slot=slot, generated=[first],
                         next_token=first, metrics=metrics)
         if first == req.eos_id or req.max_new_tokens == 1:
             self._finish(inf, t_first, results)
         else:
+            if self.paged:
+                self._apply_cow(slot)
             self._inflight[slot] = inf
 
     def _finish(self, inf: _Inflight, now_s: float,
@@ -182,6 +486,8 @@ class ServeEngine:
             tokens=np.asarray(inf.generated, np.int32),
             prompt_len=m.prompt_tokens, slot=inf.slot,
             finish_reason=reason, metrics=m))
+        if self.paged:
+            self._release_paged(inf.slot)
         self.scheduler.release(inf.slot)
         self._inflight.pop(inf.slot, None)
 
@@ -201,6 +507,9 @@ class ServeEngine:
             self._next_key()))
         self._steps += 1
         self._occupancy_sum += len(self._inflight) / self.n_slots
+        if self.paged:
+            self._block_occ_sum += self._pool.in_use / self.n_blocks
+            self._peak_blocks = max(self._peak_blocks, self._pool.in_use)
         now = self._now(self._t_start)
         for slot in sorted(self._inflight):
             inf = self._inflight[slot]
@@ -213,7 +522,16 @@ class ServeEngine:
 
     # ---- public API --------------------------------------------------------
     def submit(self, request: Request) -> None:
-        """Queue a request (admitted when arrived and a slot frees up)."""
+        """Queue a request (admitted when arrived, a slot frees up, and —
+        paged — the pool can cover its worst-case block need)."""
+        if self.paged:
+            need = blocks_needed(request.prompt_len,
+                                 request.max_new_tokens, self.block_size)
+            if need > self.n_blocks:
+                raise ValueError(
+                    f"request {request.uid}: needs {need} blocks but the "
+                    f"pool only has {self.n_blocks} — it could never be "
+                    "admitted")
         self.scheduler.submit(request)
 
     def run(self, requests: Sequence[Request] = (),
@@ -223,9 +541,11 @@ class ServeEngine:
 
         Returns ``(results sorted by uid, report)`` where ``report`` is the
         JSON-able aggregate from :func:`repro.serve.metrics.aggregate` plus
-        ``slot_reuse`` (admissions into a previously-used slot this run).
-        ``max_steps`` is a runaway backstop, not a budget: exceeding it
-        raises RuntimeError (default 1e6 decode ticks).
+        ``slot_reuse`` (admissions into a previously-used slot this run)
+        and — paged — a ``paged`` sub-report (block occupancy, prefix-hit
+        rate, resident bytes). ``max_steps`` is a runaway backstop, not a
+        budget: exceeding it raises RuntimeError (default 1e6 decode
+        ticks).
         """
         for r in requests:
             self.submit(r)
@@ -236,9 +556,17 @@ class ServeEngine:
         self._steps = 0
         self._occupancy_sum = 0.0
         self._fast_forward_s = 0.0
+        if self.paged:
+            self._prefix_hits = 0
+            self._shared_block_hits = 0
+            self._cow_count = 0
+            self._admissions = 0
+            self._block_occ_sum = 0.0
+            self._peak_blocks = 0
         log_start = len(self.scheduler.admission_log)
         self._t_start = self._clock()
         limit = max_steps if max_steps is not None else 1_000_000
+        gate = self._block_gate if self.paged else None
         while not self.scheduler.done:
             now = self._now(self._t_start)
             if not self.scheduler.active \
@@ -246,8 +574,14 @@ class ServeEngine:
                 # idle: fast-forward the engine clock to the next arrival
                 self._fast_forward_s += self.scheduler.next_arrival_s - now
                 now = self._now(self._t_start)
-            for slot, req in self.scheduler.admit_ready(now):
-                self._admit(slot, req, now, results)
+            while True:
+                # one at a time so each admission's block allocation is
+                # visible to the next gate evaluation
+                admitted = self.scheduler.admit_ready(now, gate=gate,
+                                                      limit=1)
+                if not admitted:
+                    break
+                self._admit(admitted[0][0], admitted[0][1], now, results)
             if self._inflight:
                 self._decode_tick(results)
             if self._steps >= limit:
@@ -265,5 +599,14 @@ class ServeEngine:
         report["slot_reuse"] = self.scheduler.slot_reuse_count(log_start)
         report["arch"] = self.model.cfg.name
         report["moa"] = self.model.cfg.moa_strategy.spec
+        if self.paged:
+            report["paged"] = paged_report(
+                spec=self._spec, n_slots=self.n_slots, max_len=self.max_len,
+                block_size=self.block_size, n_blocks=self.n_blocks,
+                admissions=self._admissions, prefix_hits=self._prefix_hits,
+                shared_block_hits=self._shared_block_hits,
+                cow_count=self._cow_count,
+                block_occ_sum=self._block_occ_sum, decode_steps=self._steps,
+                peak_blocks=self._peak_blocks)
         results.sort(key=lambda r: r.uid)
         return results, report

@@ -14,7 +14,7 @@ from typing import Dict, List
 
 import numpy as np
 
-__all__ = ["RequestMetrics", "aggregate"]
+__all__ = ["RequestMetrics", "aggregate", "paged_report"]
 
 
 @dataclasses.dataclass
@@ -33,6 +33,9 @@ class RequestMetrics:
     prompt_tokens: int = 0
     new_tokens: int = 0
     moa_flops: float = 0.0
+    #: prompt tokens whose prefill compute was skipped via a prefix-cache
+    #: hit (paged engine, dense family; 0 elsewhere)
+    cached_prompt_tokens: int = 0
 
     @property
     def ttft_s(self) -> float:
@@ -68,6 +71,7 @@ class RequestMetrics:
             "per_token_ms": self.per_token_ms,
             "tok_per_s": self.tok_per_s,
             "moa_flops": self.moa_flops,
+            "cached_prompt_tokens": self.cached_prompt_tokens,
         }
 
 
@@ -102,4 +106,34 @@ def aggregate(results, *, n_slots: int, decode_steps: int,
         "per_token_ms": _dist([r.metrics.per_token_ms for r in results]),
         "slot_occupancy": occupancy_sum / max(decode_steps, 1),
         "moa_flops_total": sum(r.metrics.moa_flops for r in results),
+    }
+
+
+def paged_report(*, spec, n_slots: int, max_len: int, block_size: int,
+                 n_blocks: int, admissions: int, prefix_hits: int,
+                 shared_block_hits: int, cow_count: int,
+                 block_occ_sum: float, decode_steps: int,
+                 peak_blocks: int) -> dict:
+    """Paged-pool sub-report for the engine's aggregate.
+
+    ``block_occupancy`` averages ``blocks_in_use / n_blocks`` over decode
+    steps; ``prefix_hit_rate`` is the fraction of admissions that mapped at
+    least one prompt block to an already-resident page.
+    ``resident_kv_bytes`` prices the *peak* pages actually holding live
+    request state — the number to compare against
+    ``dense_equiv_kv_bytes = n_slots · max_len`` worth of statically
+    reserved cache (``spec`` is a :class:`repro.models.api.CacheSpec`).
+    """
+    return {
+        "block_size": block_size,
+        "n_blocks": n_blocks,
+        "admissions": admissions,
+        "prefix_hits": prefix_hits,
+        "prefix_hit_rate": prefix_hits / max(admissions, 1),
+        "shared_block_hits": shared_block_hits,
+        "cow_count": cow_count,
+        "block_occupancy": block_occ_sum / max(decode_steps, 1),
+        "peak_blocks_in_use": peak_blocks,
+        "resident_kv_bytes": peak_blocks * spec.kv_block_bytes(block_size),
+        "dense_equiv_kv_bytes": spec.dense_kv_bytes(n_slots, max_len),
     }

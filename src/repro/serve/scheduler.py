@@ -3,7 +3,8 @@
 Pure Python — no device work happens here. The engine owns the batched
 cache; the scheduler decides *which request enters which slot when*.
 
-Invariants (tested in ``tests/test_serving.py``):
+Invariants (tested in ``tests/test_serving.py`` and property-tested in
+``tests/test_scheduler_properties.py``):
 
 1. A slot is either free or bound to exactly one in-flight request.
 2. Admission is FIFO over *arrived* requests (ties broken by uid): a
@@ -13,6 +14,11 @@ Invariants (tested in ``tests/test_serving.py``):
 4. ``prompt_len`` never exceeds the largest prefill bucket.
 5. A freed slot's device state is garbage until the next admission
    overwrites it (the engine masks freed slots out of all metrics).
+6. When an admission ``gate`` is installed (the paged engine's
+   memory-aware rule: "free slot **and** enough free KV blocks"), a
+   rejected head-of-queue request blocks everything behind it — FIFO is
+   never reordered, so backpressure is preempt-free: admitted requests
+   hold their worst-case block reservation and are never evicted.
 """
 
 from __future__ import annotations
@@ -100,12 +106,25 @@ class SlotScheduler:
         """Arrival time of the earliest queued request (inf if none)."""
         return self._pending[0][0] if self._pending else float("inf")
 
-    def admit_ready(self, now_s: float) -> List[Tuple[int, Request]]:
+    def admit_ready(self, now_s: float, gate=None,
+                    limit: int = 0) -> List[Tuple[int, Request]]:
         """Pop arrived requests into free slots, FIFO; returns the new
-        ``(slot, request)`` bindings (engine then prefills each)."""
+        ``(slot, request)`` bindings (engine then prefills each).
+
+        ``gate(request) -> bool`` vetoes admissions that a slot alone
+        cannot satisfy (the paged engine's block-availability check); a
+        vetoed head request stops the loop — invariant 6. ``limit`` caps
+        admissions per call (0 = unlimited); the paged engine admits one
+        at a time so each admission's allocation is visible to the next
+        gate evaluation.
+        """
         admitted = []
         while self._free and self._pending \
                 and self._pending[0][0] <= now_s:
+            if limit and len(admitted) >= limit:
+                break
+            if gate is not None and not gate(self._pending[0][3]):
+                break
             _, _, _, req = heapq.heappop(self._pending)
             slot = heapq.heappop(self._free)
             self.active[slot] = req

@@ -15,7 +15,7 @@ import numpy as np
 from repro.serve.request import Request
 from repro.serve.sampling import GREEDY, Sampler
 
-__all__ = ["poisson_workload"]
+__all__ = ["poisson_workload", "shared_prefix_workload"]
 
 
 def poisson_workload(*, n_requests: int, vocab: int, rate_rps: float = 50.0,
@@ -45,4 +45,44 @@ def poisson_workload(*, n_requests: int, vocab: int, rate_rps: float = 50.0,
         requests.append(Request(
             uid=i, prompt=prompt, max_new_tokens=g,
             arrival_s=float(arrivals[i]), sampler=sampler, eos_id=eos_id))
+    return requests
+
+
+def shared_prefix_workload(*, n_requests: int, vocab: int,
+                           rate_rps: float = 50.0, n_prefixes: int = 2,
+                           prefix_len: int = 16,
+                           suffix_len_range: Tuple[int, int] = (0, 8),
+                           gen_len_range: Tuple[int, int] = (4, 16),
+                           sampler: Sampler = GREEDY,
+                           eos_id: Optional[int] = None,
+                           seed: int = 0) -> List[Request]:
+    """Poisson workload whose prompts share system-prompt-style prefixes.
+
+    ``n_prefixes`` distinct prefixes of ``prefix_len`` tokens are drawn
+    once; each request takes one (round-robin over arrival order — the
+    worst case for slot-affinity tricks, the best case for a shared
+    physical prefix cache) and appends a random suffix of length drawn
+    from ``suffix_len_range`` (0 allowed: identical prompts, which is what
+    exercises shared-tail copy-on-write). Deterministic per ``seed``;
+    arrival semantics as :func:`poisson_workload`.
+    """
+    if n_requests < 1:
+        raise ValueError("n_requests must be >= 1")
+    if rate_rps <= 0:
+        raise ValueError("rate_rps must be > 0")
+    if n_prefixes < 1 or prefix_len < 1:
+        raise ValueError("need at least one prefix of at least one token")
+    rng = np.random.default_rng(seed)
+    prefixes = [tuple(int(t) for t in rng.integers(0, vocab, prefix_len))
+                for _ in range(n_prefixes)]
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_rps, n_requests))
+    requests = []
+    for i in range(n_requests):
+        s = int(rng.integers(suffix_len_range[0], suffix_len_range[1] + 1))
+        suffix = tuple(int(t) for t in rng.integers(0, vocab, s))
+        g = int(rng.integers(gen_len_range[0], gen_len_range[1] + 1))
+        requests.append(Request(
+            uid=i, prompt=prefixes[i % n_prefixes] + suffix,
+            max_new_tokens=g, arrival_s=float(arrivals[i]),
+            sampler=sampler, eos_id=eos_id))
     return requests

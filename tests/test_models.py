@@ -223,6 +223,47 @@ class TestCNN:
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    rtol=1e-4, atol=1e-4)
 
+    def test_lenet5_accum_im2col_parity(self, key):
+        """The accum="im2col" path (every groups==1 conv through the MOA
+        strategy) matches the lax.conv baseline end-to-end."""
+        params = cnn.init_lenet5(key)
+        x = jax.random.normal(key, (2, 32, 32, 1))
+        ref = cnn.lenet5_forward(params, x)
+        got = cnn.lenet5_forward(params, x, accum="im2col")
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)
+        serial = cnn.lenet5_forward(params, x, accum="im2col",
+                                    strategy="serial?chunk=16")
+        np.testing.assert_allclose(np.asarray(serial), np.asarray(ref),
+                                   rtol=1e-3, atol=1e-3)
+        with pytest.raises(ValueError, match="accum"):
+            cnn.lenet5_forward(params, x, accum="winograd")
+
+    def test_alexnet_accum_im2col_parity(self, key):
+        """AlexNet: groups==1 layers (conv1 stride 4, conv3 SAME padding)
+        route through im2col; the grouped layers keep lax.conv."""
+        params = cnn.init_alexnet(key)
+        x = jax.random.normal(key, (1, 227, 227, 3))
+        ref = cnn.alexnet_forward(params, x)
+        got = cnn.alexnet_forward(params, x, accum="im2col")
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_im2col_conv_same_padding(self, key):
+        """SAME padding support (needed by AlexNet conv3)."""
+        from jax import lax
+
+        kx, kw = jax.random.split(key)
+        x = jax.random.normal(kx, (2, 9, 9, 3))
+        w = jax.random.normal(kw, (4, 3, 3, 3))
+        b = jnp.zeros((4,))
+        got = cnn.im2col_conv(x, w, b, stride=1, padding="SAME")
+        want = lax.conv_general_dilated(
+            x, w, (1, 1), "SAME",
+            dimension_numbers=("NHWC", "OIHW", "NHWC"))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
     def test_im2col_conv_serial_strategy(self, key):
         kx, kw = jax.random.split(key)
         x = jax.random.normal(kx, (1, 12, 12, 3))

@@ -1,0 +1,367 @@
+"""Paged KV-cache: block pool semantics, decode parity, prefix caching.
+
+The acceptance bar: paged greedy decode is bit-identical to the
+dense-slot path across the dense / MoE / hybrid families, and on a
+shared-prefix workload the pool reports prefix hits > 0 with resident KV
+bytes strictly below the ``n_slots · max_len`` dense reservation.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config, smoke_config
+from repro.models.api import build_model
+from repro.serve import Request, ServeEngine, shared_prefix_workload
+from repro.serve.kv_pool import TRASH_BLOCK, BlockPool, blocks_needed
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def _built(arch, rng, **cfg_updates):
+    cfg = smoke_config(get_config(arch))
+    if cfg_updates:
+        cfg = dataclasses.replace(cfg, **cfg_updates)
+    model = build_model(cfg)
+    return cfg, model, model.init(rng)
+
+
+def _requests_from(tokens, gen_lens, arrivals=None):
+    arrivals = arrivals or [0.0] * len(gen_lens)
+    return [Request(uid=i, prompt=tuple(int(t) for t in np.asarray(row)),
+                    max_new_tokens=g, arrival_s=a)
+            for i, (row, g, a) in enumerate(zip(tokens, gen_lens, arrivals))]
+
+
+def _engines(model, params, *, n_slots, max_len, block_size=8, n_blocks=None):
+    dense = ServeEngine(model, params, n_slots=n_slots, max_len=max_len,
+                        clock=lambda: 0.0)
+    paged = ServeEngine(model, params, n_slots=n_slots, max_len=max_len,
+                        paged=True, block_size=block_size, n_blocks=n_blocks,
+                        clock=lambda: 0.0)
+    return dense, paged
+
+
+# ---------------------------------------------------------------------------
+# block pool semantics (host-side, no device work)
+# ---------------------------------------------------------------------------
+
+
+class TestBlockPool:
+    def test_blocks_needed_worst_case(self):
+        assert blocks_needed(8, 8, 8) == 2
+        assert blocks_needed(9, 8, 8) == 3
+        assert blocks_needed(1, 1, 8) == 1
+
+    def test_alloc_free_refcount(self):
+        pool = BlockPool(4, block_size=8)
+        a, b = pool.alloc(2)
+        assert a != b and TRASH_BLOCK not in (a, b)
+        assert pool.in_use == 2 and pool.available == 2
+        pool.share(a)
+        assert pool.refcount(a) == 2
+        pool.free(a)
+        assert pool.in_use == 2          # still referenced once
+        pool.free(a)
+        assert pool.in_use == 1 and pool.available == 3
+        with pytest.raises(KeyError, match="double free"):
+            pool.free(a)
+        pool.check()
+
+    def test_exhaustion_raises(self):
+        pool = BlockPool(2, block_size=8)
+        pool.alloc(2)
+        with pytest.raises(RuntimeError, match="available"):
+            pool.alloc(1)
+
+    def test_trie_match_and_eviction_lru(self):
+        pool = BlockPool(2, block_size=4)
+        (a,) = pool.alloc(1)
+        chain_a = (1, 2, 3, 4)
+        pool.register(a, chain_a)
+        assert pool.match(chain_a) == a
+        pool.free(a)                      # registered -> evictable, not free
+        assert pool.available == 2 and pool.match(chain_a) == a
+        # revive from evictable
+        pool.share(a)
+        assert pool.refcount(a) == 1
+        pool.free(a)
+        # filling the pool evicts LRU cached blocks and drops their entries
+        (b,) = pool.alloc(1)
+        pool.register(b, (9, 9, 9, 9))
+        pool.free(b)
+        pool.alloc(2)
+        assert pool.match(chain_a) is None and pool.evictions >= 1
+        pool.check()
+
+    def test_can_admit_counts_revived_evictable_blocks(self):
+        """Regression: a matched *evictable* block sits in ``available``
+        but admission revives it — it must not double-count as both a
+        prefix hit and allocatable capacity (the old rule over-admitted
+        and the follow-up alloc() blew up mid-serve)."""
+        pool = BlockPool(4, block_size=4)
+        prompt = (1, 2, 3, 4)
+        (a,) = pool.alloc(1)
+        pool.register(a, prompt)
+        pool.free(a)                       # evictable: still matchable
+        (held,) = pool.alloc(1)            # another request holds one page
+        # free=2, evictable=1 -> available=3; plan: 1 matched + 3 new
+        plan = pool.plan(prompt, max_new_tokens=12)
+        assert plan.full_matched == [a] and plan.new_needed == 3
+        assert not pool.can_admit(prompt, 12)   # 3 new > 3 avail - 1 revived
+        pool.free(held)
+        assert pool.can_admit(prompt, 12)
+        # the admission sequence the engine performs must now fit
+        pool.share(a)
+        got = pool.alloc(3)
+        assert len(got) == 3
+        pool.check()
+
+    def test_plan_prefix_walk_and_admission_math(self):
+        pool = BlockPool(8, block_size=4)
+        prompt = (1, 2, 3, 4, 5, 6, 7, 8, 9, 10)     # 2 full blocks + tail
+        plan = pool.plan(prompt, max_new_tokens=4)
+        assert plan.n_logical == 4 and plan.new_needed == 4
+        blocks = pool.alloc(plan.new_needed)
+        pool.register(blocks[0], prompt[:4])
+        pool.register(blocks[1], prompt[:8])
+        pool.register(blocks[2], prompt)             # partial tail chain
+        plan2 = pool.plan(prompt, max_new_tokens=4)
+        assert plan2.full_matched == blocks[:2]
+        assert plan2.tail_matched == blocks[2]
+        assert plan2.new_needed == 2                  # tail slot -> CoW spare
+        # a diverging prompt only matches the true shared prefix
+        plan3 = pool.plan(prompt[:4] + (99, 98, 97, 96), max_new_tokens=4)
+        assert plan3.full_matched == blocks[:1]
+        assert plan3.tail_matched is None
+        # dense mode ignores the tail
+        assert pool.plan(prompt, max_new_tokens=4,
+                         match_tail=False).tail_matched is None
+        assert pool.can_admit(prompt, 4)
+        pool.check()
+
+
+# ---------------------------------------------------------------------------
+# decode parity: paged vs dense-slot engines, greedy
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "moonshot-v1-16b-a3b",
+                                  "zamba2-1.2b"])
+def test_paged_matches_dense_greedy(rng, arch):
+    """Bit-identical greedy continuation across the three KV-bearing
+    families, with prompts off the block boundary and staggered lengths
+    (slot reuse mid-flight included: 4 requests into 2 slots)."""
+    cfg, model, params = _built(arch, rng)
+    toks = np.asarray(jax.random.randint(rng, (4, 13), 0, cfg.vocab),
+                      np.int32)
+    gens = [5, 7, 3, 6]
+    dense, paged = _engines(model, params, n_slots=2, max_len=32)
+    ref, _ = dense.run(_requests_from(toks, gens))
+    got, report = paged.run(_requests_from(toks, gens))
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+    assert report["paged"]["peak_blocks_in_use"] <= paged.n_blocks
+    paged._pool.check()
+    assert paged._pool.in_use == 0       # every page released at finish
+
+
+def test_paged_int8_cache_matches_dense(rng):
+    """The quantized-cache variant pages its scales alongside K/V."""
+    cfg, model, params = _built("llama3-8b", rng, kv_cache_dtype="int8")
+    toks = np.asarray(jax.random.randint(rng, (2, 13), 0, cfg.vocab),
+                      np.int32)
+    dense, paged = _engines(model, params, n_slots=2, max_len=32)
+    ref, _ = dense.run(_requests_from(toks, [5, 4]))
+    got, _ = paged.run(_requests_from(toks, [5, 4]))
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+# ---------------------------------------------------------------------------
+# prefix caching
+# ---------------------------------------------------------------------------
+
+
+def test_dense_prefix_hit_skips_prefill_compute(rng):
+    """Shared-prefix workload on the dense family: later admissions hit
+    the trie, run suffix-only prefill (``cached_prompt_tokens`` > 0), and
+    keep resident KV strictly below the dense reservation — while the
+    greedy output stays identical to the dense engine."""
+    cfg, model, params = _built("llama3-8b", rng)
+    reqs = lambda: shared_prefix_workload(
+        n_requests=6, vocab=cfg.vocab, rate_rps=100.0, n_prefixes=2,
+        prefix_len=16, suffix_len_range=(1, 6), gen_len_range=(3, 6),
+        seed=7)
+    dense, paged = _engines(model, params, n_slots=3, max_len=64)
+    ref, _ = dense.run(reqs())
+    got, report = paged.run(reqs())
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+    pg = report["paged"]
+    assert pg["prefix_hits"] > 0
+    assert pg["resident_kv_bytes"] < pg["dense_equiv_kv_bytes"]
+    assert sum(r.metrics.cached_prompt_tokens for r in got) > 0
+    paged._pool.check()
+
+
+def test_identical_prompts_copy_on_write(rng):
+    """MoE (full-prefill family): identical non-block-aligned prompts
+    share the partial tail page; each follower's first generated token
+    triggers CoW into its reserved spare — and the output still matches
+    the dense engine bit-for-bit."""
+    cfg, model, params = _built("moonshot-v1-16b-a3b", rng)
+    p = tuple(int(t) for t in
+              np.asarray(jax.random.randint(rng, (12,), 0, cfg.vocab)))
+    reqs = lambda: [Request(uid=i, prompt=p, max_new_tokens=6,
+                            arrival_s=0.1 * i) for i in range(3)]
+    dense, paged = _engines(model, params, n_slots=3, max_len=32)
+    ref, _ = dense.run(reqs())
+    got, report = paged.run(reqs())
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+    pg = report["paged"]
+    assert pg["cow_count"] >= 2 and pg["prefix_hits"] >= 2
+    paged._pool.check()
+    assert paged._pool.in_use == 0
+
+
+def test_capacity_limited_moe_never_shares_prefix_content(rng):
+    """Below the dropless regime, a token's MoE prefill output depends on
+    the whole prefill length (expert-capacity coupling), so 'identical'
+    prefixes from different-length prompts can hold different KV — the
+    engine must page memory without ever sharing content there."""
+    cfg, model, params = _built("moonshot-v1-16b-a3b", rng,
+                                capacity_factor=1.0)
+    assert not model.supports_padded_prefill      # capacity-limited regime
+    prefix = tuple(int(t) for t in
+                   np.asarray(jax.random.randint(rng, (16,), 0, cfg.vocab)))
+    reqs = lambda: [Request(uid=i, prompt=prefix + (7,) * i,
+                            max_new_tokens=4, arrival_s=0.1 * i)
+                    for i in range(3)]
+    dense, paged = _engines(model, params, n_slots=2, max_len=32)
+    ref, _ = dense.run(reqs())
+    got, report = paged.run(reqs())
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+    assert report["paged"]["prefix_hits"] == 0
+    assert report["paged"]["shared_block_hits"] == 0
+    paged._pool.check()
+
+
+def test_tight_pool_with_prefix_hits_never_overallocates(rng):
+    """Engine-level regression for gate-vs-revival accounting: shared
+    prefixes under memory pressure (matched pages cycling through the
+    evictable state) must serve every request without tripping the
+    pool-exhausted backstop."""
+    cfg, model, params = _built("llama3-8b", rng)
+    prefix = tuple(int(t) for t in
+                   np.asarray(jax.random.randint(rng, (16,), 0, cfg.vocab)))
+    reqs = [Request(uid=i, prompt=prefix + (3 + i, 5 + i),
+                    max_new_tokens=6) for i in range(4)]
+    engine = ServeEngine(model, params, n_slots=2, max_len=32, paged=True,
+                         block_size=8, n_blocks=5, clock=lambda: 0.0)
+    results, report = engine.run(reqs)
+    assert report["n_requests"] == 4
+    assert report["paged"]["peak_blocks_in_use"] <= 5
+    engine._pool.check()
+
+
+def test_prefix_cache_survives_across_runs(rng):
+    """Freed-but-registered pages are evictable, not erased: a second
+    run() on the same engine still hits the prefix cache."""
+    cfg, model, params = _built("llama3-8b", rng)
+    prefix = tuple(int(t) for t in
+                   np.asarray(jax.random.randint(rng, (16,), 0, cfg.vocab)))
+    paged = ServeEngine(model, params, n_slots=1, max_len=64, paged=True,
+                        block_size=8, clock=lambda: 0.0)
+    paged.run([Request(uid=0, prompt=prefix + (3, 1), max_new_tokens=3)])
+    _, report = paged.run([Request(uid=1, prompt=prefix + (2, 7),
+                                   max_new_tokens=3)])
+    assert report["paged"]["prefix_hits"] == 1
+
+
+# ---------------------------------------------------------------------------
+# memory-aware admission
+# ---------------------------------------------------------------------------
+
+
+def test_block_backpressure_is_preempt_free(rng):
+    """A pool sized for one request at a time: the second request waits
+    (FIFO head-of-line, invariant 6), both complete, and pages in use
+    never exceed the pool."""
+    cfg, model, params = _built("llama3-8b", rng)
+    toks = np.asarray(jax.random.randint(rng, (2, 9), 0, cfg.vocab),
+                      np.int32)
+    engine = ServeEngine(model, params, n_slots=2, max_len=32, paged=True,
+                         block_size=8, n_blocks=3, clock=lambda: 0.0)
+    results, report = engine.run(_requests_from(toks, [8, 8]))
+    assert report["n_requests"] == 2
+    assert report["paged"]["peak_blocks_in_use"] <= 3
+    # strictly serialized: uid 1 could only start after uid 0 finished
+    assert report["slot_occupancy"] <= 0.5 + 1e-9
+    uids = [u for u, _, _ in engine.scheduler.admission_log]
+    assert uids == sorted(uids)
+
+
+def test_submit_rejects_impossible_request(rng):
+    cfg, model, params = _built("llama3-8b", rng)
+    engine = ServeEngine(model, params, n_slots=1, max_len=32, paged=True,
+                         block_size=8, n_blocks=3, clock=lambda: 0.0)
+    with pytest.raises(ValueError, match="never be admitted"):
+        engine.submit(Request(uid=0, prompt=(1,) * 20, max_new_tokens=9))
+
+
+def test_paged_rejects_unpageable_family_and_bad_block_size(rng):
+    cfg, model, params = _built("mamba2-370m", rng)
+    with pytest.raises(ValueError, match="no KV cache to page"):
+        ServeEngine(model, params, n_slots=1, max_len=16, paged=True)
+    cfg, model, params = _built("llama3-8b", rng)
+    with pytest.raises(ValueError, match="divide max_len"):
+        ServeEngine(model, params, n_slots=1, max_len=20, paged=True,
+                    block_size=8)
+
+
+# ---------------------------------------------------------------------------
+# layout accounting
+# ---------------------------------------------------------------------------
+
+
+def test_cache_spec_bytes(rng):
+    """`cache_spec` is derived from the real cache shapes; resident-byte
+    math must agree with the dense layout it replaces."""
+    cfg, model, params = _built("llama3-8b", rng)
+    spec = model.cache_spec()
+    assert spec.pageable and spec.n_kv_stacks == cfg.n_layers
+    # bf16 K+V per token per layer
+    assert spec.kv_bytes_per_token == cfg.n_layers * cfg.n_kv_heads \
+        * cfg.head_dim * 2 * 2
+    assert spec.dense_kv_bytes(4, 32) == spec.kv_bytes_per_token * 128
+    assert spec.kv_block_bytes(8) * 4 == spec.dense_kv_bytes(1, 32)
+    cfg, model, params = _built("mamba2-370m", rng)
+    spec = model.cache_spec()
+    assert not spec.pageable and spec.kv_bytes_per_token == 0
+    assert spec.slot_state_bytes > 0
+
+
+def test_costing_prices_resident_blocks():
+    from repro.configs.base import ShapeSpec
+    from repro.launch.costing import (MeshMeta, estimate_cell,
+                                      kv_bytes_per_token, kv_resident_bytes)
+
+    cfg = smoke_config(get_config("llama3-8b"))
+    assert kv_resident_bytes(cfg, n_blocks_in_use=6, block_size=8) == \
+        48 * kv_bytes_per_token(cfg)
+    shape = ShapeSpec("decode", 32, 4, "decode")
+    mesh = MeshMeta(pod=1, data=1, model=1)
+    full = estimate_cell(cfg, shape, mesh)
+    resident = estimate_cell(cfg, shape, mesh, resident_kv_tokens=48)
+    assert resident.bytes_components["kv_cache_read"] < \
+        full.bytes_components["kv_cache_read"]
+    assert resident.bytes_components["kv_cache_read"] == \
+        pytest.approx(kv_bytes_per_token(cfg) * 48)

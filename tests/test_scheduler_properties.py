@@ -1,0 +1,180 @@
+"""Hypothesis property tests: scheduler + block-pool invariants.
+
+Random submit/admit/release/alloc/share/free/match sequences against
+``SlotScheduler`` and ``BlockPool``, asserting the documented invariants
+after every step: slots partition free/active (S1), FIFO admission over
+arrived requests (S2), lifetime fit (S3), bucket fit (S4), gate = strict
+head-of-line backpressure (S6); pool states partition (P1), refcount >= 1
+with no double-free (P2), trie points at live blocks (P3), alloc never
+hands out referenced blocks (P4), admission plans fit availability (P5).
+
+Skips (like ``test_moa_properties.py``) when hypothesis is absent.
+"""
+
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis package")
+from hypothesis import given, settings, strategies as st
+
+from repro.serve.kv_pool import BlockPool, blocks_needed
+from repro.serve.request import Request
+from repro.serve.scheduler import SlotScheduler
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+_MAX_LEN = 32
+
+# op stream: ("submit", arrival_s, prompt_len, max_new) | ("admit", now_s)
+# | ("release",) — release frees the longest-held active slot
+_SCHED_OPS = st.lists(
+    st.one_of(
+        st.tuples(st.just("submit"),
+                  st.floats(0.0, 10.0, allow_nan=False),
+                  st.integers(1, 16), st.integers(1, 16)),
+        st.tuples(st.just("admit"), st.floats(0.0, 10.0, allow_nan=False)),
+        st.tuples(st.just("release")),
+    ),
+    min_size=1, max_size=60)
+
+
+class TestSchedulerProperties:
+    @given(ops=_SCHED_OPS, n_slots=st.integers(1, 4))
+    @settings(max_examples=60, deadline=None)
+    def test_invariants_under_random_ops(self, ops, n_slots):
+        sched = SlotScheduler(n_slots, max_len=_MAX_LEN)
+        uid = 0
+        submitted = {}                 # uid -> arrival_s
+        admitted_order = []
+        clock_high = 0.0
+        for op in ops:
+            if op[0] == "submit":
+                _, arr, p, g = op
+                req = Request(uid=uid, prompt=(1,) * p,
+                              max_new_tokens=min(g, _MAX_LEN - p),
+                              arrival_s=arr)
+                if p + req.max_new_tokens > _MAX_LEN \
+                        or req.max_new_tokens < 1:
+                    continue
+                sched.submit(req)
+                submitted[uid] = arr
+                uid += 1
+            elif op[0] == "admit":
+                now = max(op[1], clock_high)   # engine clock is monotonic
+                clock_high = now
+                for slot, req in sched.admit_ready(now):
+                    # S2: only arrived requests are admitted
+                    assert req.arrival_s <= now
+                    # S3: fits for its whole lifetime
+                    assert req.prompt_len + req.max_new_tokens <= _MAX_LEN
+                    # S4: prompt fits a bucket
+                    assert sched.bucket_for(req.prompt_len) \
+                        <= sched.buckets[-1]
+                    admitted_order.append(req.uid)
+            elif sched.active:
+                sched.release(min(sched.active))
+            # S1: free and active slots partition the slot set
+            free = set(sched._free)
+            active = set(sched.active)
+            assert not (free & active)
+            assert free | active == set(range(n_slots))
+        # S2 (global): among same-arrival requests, admission is uid-FIFO
+        by_arrival = {}
+        for u in admitted_order:
+            by_arrival.setdefault(submitted[u], []).append(u)
+        for group in by_arrival.values():
+            assert group == sorted(group)
+
+    @given(reject_after=st.integers(0, 5))
+    @settings(max_examples=20, deadline=None)
+    def test_gate_blocks_head_of_line(self, reject_after):
+        """S6: once the gate rejects the queue head, nothing behind it is
+        admitted — FIFO is never reordered."""
+        sched = SlotScheduler(4, max_len=_MAX_LEN)
+        for u in range(6):
+            sched.submit(Request(uid=u, prompt=(1, 2), max_new_tokens=2))
+        admitted = sched.admit_ready(
+            0.0, gate=lambda req: req.uid < reject_after)
+        assert [r.uid for _, r in admitted] == \
+            list(range(min(reject_after, 4)))
+
+    @given(n=st.integers(1, 8))
+    @settings(max_examples=20, deadline=None)
+    def test_admit_limit(self, n):
+        sched = SlotScheduler(8, max_len=_MAX_LEN)
+        for u in range(8):
+            sched.submit(Request(uid=u, prompt=(1,), max_new_tokens=1))
+        assert len(sched.admit_ready(0.0, limit=n)) == n
+
+
+# ---------------------------------------------------------------------------
+# block pool
+# ---------------------------------------------------------------------------
+
+# op stream over a pool: alloc n | free i-th live | share i-th live |
+# register i-th live | match+admit a synthetic prompt
+_POOL_OPS = st.lists(
+    st.one_of(
+        st.tuples(st.just("alloc"), st.integers(1, 4)),
+        st.tuples(st.just("free"), st.integers(0, 30)),
+        st.tuples(st.just("share"), st.integers(0, 30)),
+        st.tuples(st.just("register"), st.integers(0, 30)),
+        st.tuples(st.just("plan"), st.integers(1, 20), st.integers(1, 8)),
+    ),
+    min_size=1, max_size=80)
+
+
+class TestBlockPoolProperties:
+    @given(ops=_POOL_OPS, n_blocks=st.integers(2, 12))
+    @settings(max_examples=60, deadline=None)
+    def test_invariants_under_random_ops(self, ops, n_blocks):
+        bs = 4
+        pool = BlockPool(n_blocks, block_size=bs)
+        live = []                      # (block_id, outstanding_refs)
+        chain_seq = 0
+        for op in ops:
+            kind = op[0]
+            if kind == "alloc":
+                n = min(op[1], pool.available)
+                if n:
+                    got = pool.alloc(n)
+                    # P4: never hands out a still-referenced block
+                    assert not (set(got) & {b for b, _ in live})
+                    live.extend((b, 1) for b in got)
+            elif kind == "free" and live:
+                i = op[1] % len(live)
+                b, refs = live[i]
+                pool.free(b)
+                if refs == 1:
+                    live.pop(i)
+                    # P2: freeing again raises unless re-referenced
+                    if pool.refcount(b) == 0:
+                        with pytest.raises(KeyError):
+                            pool.free(b)
+                else:
+                    live[i] = (b, refs - 1)
+            elif kind == "share" and live:
+                i = op[1] % len(live)
+                b, refs = live[i]
+                pool.share(b)
+                live[i] = (b, refs + 1)
+                assert pool.refcount(b) == refs + 1
+            elif kind == "register" and live:
+                i = op[1] % len(live)
+                chain_seq += 1
+                pool.register(live[i][0], (chain_seq,) * bs)
+            elif kind == "plan":
+                p, g = op[1], op[2]
+                plan = pool.plan(tuple(range(p)), g)
+                assert plan.n_logical == blocks_needed(p, g, bs)
+                assert 0 <= plan.new_needed <= plan.n_logical
+                # P5: can_admit iff the plan fits current availability
+                assert pool.can_admit(tuple(range(p)), g) == \
+                    (plan.new_needed <= pool.available)
+            # P1-P3 after every operation
+            pool.check()
+            # refcounts match our model
+            for b, refs in live:
+                assert pool.refcount(b) == refs
