@@ -11,10 +11,18 @@ Two record schemas (both validated by ``scripts/check_bench_schema.py``):
   comparison block (paged-vs-dense TTFT, prefix hits, resident KV bytes
   vs the dense reservation). ``--shared-prefix`` swaps in the
   system-prompt-style workload that actually exercises the prefix cache.
+* ``serving-v3`` (``--spec-decode``): the same workload through plain
+  decode and speculative decode at a **sweep of forced accept rates**
+  (oracle drafter with independent per-token corruption) — the paper's
+  "does the multiplexing gamble pay" question measured end-to-end, with
+  the acceptance-aware cost-model prediction alongside each measured
+  point (docs/spec-decode.md).
 
   PYTHONPATH=src python -m benchmarks.serving --smoke --json out.json
   PYTHONPATH=src python -m benchmarks.serving --smoke --paged \
       --shared-prefix --block-size 8 --json paged.json
+  PYTHONPATH=src python -m benchmarks.serving --smoke --spec-decode \
+      --spec-k 3 --json spec.json
 """
 
 from __future__ import annotations
@@ -26,9 +34,10 @@ import sys
 import jax
 
 from repro.configs.registry import get_config, smoke_config
+from repro.launch.costing import spec_decode_cost
 from repro.models.api import build_model
-from repro.serve import (GREEDY, Sampler, ServeEngine, poisson_workload,
-                         shared_prefix_workload)
+from repro.serve import (GREEDY, OracleDrafter, Sampler, ServeEngine,
+                         poisson_workload, shared_prefix_workload)
 
 
 def _build(arch: str, smoke: bool):
@@ -166,6 +175,104 @@ def run_paged(*, arch: str = "llama3-8b", smoke: bool = True,
     }
 
 
+def _slot_norm_tokens_per_step(agg: dict) -> float:
+    """Tick-emitted tokens per active-slot step (plain decode ≡ 1.0).
+
+    Matches the spec report's normalization: each request's first token
+    comes from its prefill, not a decode tick, so it is excluded.
+    """
+    slot_steps = agg["slot_occupancy"] * agg["decode_steps"] * agg["n_slots"]
+    return (agg["total_new_tokens"] - agg["n_requests"]) \
+        / max(slot_steps, 1e-9)
+
+
+def run_spec(*, arch: str = "llama3-8b", smoke: bool = True,
+             requests: int = 8, rate_rps: float = 50.0, slots: int = 4,
+             max_len: int = 96, spec_k: int = 3,
+             accept_probs=(1.0, 0.75, 0.5, 0.0),
+             prompt_len_range=(4, 24), gen_len_range=(2, 12),
+             temperature: float = 0.0, seed: int = 0,
+             warmup: bool = True) -> dict:
+    """Plain-vs-speculative comparison at a sweep of forced accept rates;
+    ``serving-v3`` record.
+
+    Every run serves the identical request stream. The oracle drafter
+    proposes the target's own greedy continuation with each token
+    independently corrupted at rate ``1 - accept_prob``, so the *measured*
+    accept rate tracks the knob and ``tokens_per_step`` (slot-step
+    normalized: plain decode ≡ 1.0) traces the payoff curve that the
+    acceptance-aware estimator (:func:`repro.launch.costing
+    .spec_decode_cost`) predicts — measured and predicted land side by
+    side in ``comparison``, the paper's promising-on-paper vs
+    synthesized-reality split.
+    """
+    cfg, model = _build(arch, smoke)
+    rng = jax.random.PRNGKey(seed)
+    params = model.init(rng)
+    make_workload = _workload_factory(
+        cfg, requests=requests, rate_rps=rate_rps, shared_prefix=False,
+        prefix_len=0, n_prefixes=1, prompt_len_range=prompt_len_range,
+        gen_len_range=gen_len_range, temperature=temperature, seed=seed)
+
+    engine = ServeEngine(model, params, n_slots=slots, max_len=max_len,
+                         rng=rng)
+    if warmup:
+        engine.run(make_workload())
+    plain_results, plain_report = engine.run(make_workload())
+    plain = {"requests": [r.to_json() for r in plain_results],
+             "aggregate": plain_report}
+    plain_tps = _slot_norm_tokens_per_step(plain_report)
+
+    s_attn = float(sum(prompt_len_range) / 2 + sum(gen_len_range) / 2)
+    spec_runs, curve = [], []
+    for accept in accept_probs:
+        engine = ServeEngine(
+            model, params, n_slots=slots, max_len=max_len, rng=rng,
+            drafter=OracleDrafter(spec_k, accept_prob=accept, seed=seed))
+        if warmup:
+            engine.run(make_workload())
+        results, report = engine.run(make_workload())
+        spec_runs.append({"accept_prob": accept,
+                          "requests": [r.to_json() for r in results],
+                          "aggregate": report})
+        predicted = spec_decode_cost(cfg, k=spec_k, accept_prob=accept,
+                                     s_attn=s_attn, draft_cfg=cfg)
+        sp = report["spec"]
+        curve.append({
+            "accept_prob": accept,
+            "measured_accept_rate": sp["accept_rate"],
+            "tokens_per_step": sp["tokens_per_step"],
+            "speedup_vs_plain": sp["tokens_per_step"] / max(plain_tps, 1e-9),
+            "predicted_tokens_per_step":
+                predicted["expected_tokens_per_step"],
+            "predicted_flops_overhead": predicted["flops_overhead"],
+            "ttft_p50_ms": report["ttft_ms"]["p50"],
+        })
+    best = max(curve, key=lambda c: c["tokens_per_step"])
+    return {
+        "schema": "serving-v3",
+        "config": {
+            "arch": cfg.name, "family": cfg.family, "smoke": smoke,
+            "moa": cfg.moa_strategy.spec, "n_slots": slots,
+            "max_len": max_len, "requests": requests, "rate_rps": rate_rps,
+            "prompt_len_range": list(prompt_len_range),
+            "gen_len_range": list(gen_len_range),
+            "temperature": temperature, "seed": seed, "warmup": warmup,
+            "spec_k": spec_k, "accept_probs": list(accept_probs),
+            "drafter": "oracle",
+        },
+        "plain": plain,
+        "spec_runs": spec_runs,
+        "comparison": {
+            "tokens_per_step_plain": plain_tps,
+            "ttft_p50_ms_plain": plain_report["ttft_ms"]["p50"],
+            "curve": curve,
+            "best_tokens_per_step": best["tokens_per_step"],
+            "best_accept_prob": best["accept_prob"],
+        },
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(
         description="Continuous-batching serving benchmark (JSON output)")
@@ -179,6 +286,14 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--paged", action="store_true",
                     help="run the dense-vs-paged comparison (serving-v2)")
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="run the plain-vs-speculative accept-rate sweep "
+                         "(serving-v3; see docs/spec-decode.md)")
+    ap.add_argument("--spec-k", type=int, default=3,
+                    help="[--spec-decode] draft tokens per verify window")
+    ap.add_argument("--accept-probs", default="1.0,0.75,0.5,0.0",
+                    help="[--spec-decode] comma-separated forced accept "
+                         "probabilities to sweep")
     ap.add_argument("--block-size", type=int, default=16,
                     help="[--paged] tokens per physical KV page")
     ap.add_argument("--blocks", type=int, default=0,
@@ -196,22 +311,45 @@ def main(argv=None):
                     help="write the JSON record here (default: stdout)")
     args = ap.parse_args(argv)
 
+    if args.paged and args.spec_decode:
+        raise SystemExit("--paged and --spec-decode are separate "
+                         "comparisons; run them as two records")
+    if args.spec_decode and args.shared_prefix:
+        raise SystemExit("--spec-decode sweeps the plain Poisson workload; "
+                         "--shared-prefix belongs to the --paged "
+                         "comparison")
     common = dict(arch=args.arch, smoke=args.smoke, requests=args.requests,
                   rate_rps=args.rate, slots=args.slots, max_len=args.max_len,
                   temperature=args.temperature, seed=args.seed,
-                  warmup=not args.no_warmup,
-                  shared_prefix=args.shared_prefix,
-                  prefix_len=args.prefix_len, n_prefixes=args.prefixes)
-    if args.paged:
+                  warmup=not args.no_warmup)
+    if args.spec_decode:
+        record = run_spec(spec_k=args.spec_k,
+                          accept_probs=tuple(
+                              float(a) for a in
+                              args.accept_probs.split(",") if a),
+                          **common)
+    elif args.paged:
         record = run_paged(block_size=args.block_size, n_blocks=args.blocks,
-                           **common)
+                           shared_prefix=args.shared_prefix,
+                           prefix_len=args.prefix_len,
+                           n_prefixes=args.prefixes, **common)
     else:
-        record = run(**common)
+        record = run(shared_prefix=args.shared_prefix,
+                     prefix_len=args.prefix_len, n_prefixes=args.prefixes,
+                     **common)
     text = json.dumps(record, indent=2)
     if args.json:
         with open(args.json, "w") as f:
             f.write(text + "\n")
-        if record["schema"] == "serving-v2":
+        if record["schema"] == "serving-v3":
+            c = record["comparison"]
+            pts = ", ".join(
+                f"a={p['accept_prob']:.2f}:{p['tokens_per_step']:.2f}"
+                for p in c["curve"])
+            print(f"[bench] wrote {args.json}: serving-v3, "
+                  f"tok/step plain={c['tokens_per_step_plain']:.2f} "
+                  f"spec[{pts}]", file=sys.stderr)
+        elif record["schema"] == "serving-v2":
             c = record["comparison"]
             print(f"[bench] wrote {args.json}: serving-v2, "
                   f"ttft p50 dense={c['ttft_p50_ms_dense']:.0f}ms "

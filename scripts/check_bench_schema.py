@@ -1,5 +1,6 @@
 #!/usr/bin/env python3
-"""Validate serving benchmark JSON records (``serving-v1`` / ``serving-v2``).
+"""Validate serving benchmark JSON records (``serving-v1`` / ``serving-v2``
+/ ``serving-v3``).
 
 Stdlib-only (runs in CI without extra deps). Checks required keys and
 value types — extra keys are allowed (schemas grow forward-compatibly),
@@ -57,6 +58,25 @@ _COMPARISON = {
     "resident_kv_bytes": NUM, "dense_equiv_kv_bytes": NUM,
 }
 
+_CONFIG_V3 = dict(_CONFIG_V1, spec_k=int, accept_probs=list, drafter=STR)
+
+_SPEC_AGGREGATE = {
+    "k": int, "verify_ticks": int, "emitted_tokens": int,
+    "tokens_per_step": NUM, "accepted_hist": list, "accept_rate": NUM,
+    "mean_accepted": NUM, "draft_steps": int, "draft_steps_per_tick": NUM,
+}
+
+_SPEC_POINT = {
+    "accept_prob": NUM, "measured_accept_rate": NUM, "tokens_per_step": NUM,
+    "speedup_vs_plain": NUM, "predicted_tokens_per_step": NUM,
+    "predicted_flops_overhead": NUM, "ttft_p50_ms": NUM,
+}
+
+_SPEC_COMPARISON = {
+    "tokens_per_step_plain": NUM, "ttft_p50_ms_plain": NUM,
+    "best_tokens_per_step": NUM, "best_accept_prob": NUM,
+}
+
 
 def _check(record, schema, path, errors):
     """Recursively check required keys + types (dict schemas nest)."""
@@ -109,9 +129,29 @@ def validate(record: dict) -> list:
         paged_agg = record.get("paged", {}).get("aggregate", {})
         _check(paged_agg.get("paged", {}), _PAGED_AGGREGATE,
                "$.paged.aggregate.paged", errors)
+    elif schema == "serving-v3":
+        _check(record, {"config": _CONFIG_V3,
+                        "comparison": _SPEC_COMPARISON}, "$", errors)
+        _check_run(record.get("plain", {}), "$.plain", errors)
+        runs = record.get("spec_runs")
+        if not isinstance(runs, list) or not runs:
+            errors.append("$.spec_runs: expected non-empty list")
+        else:
+            for i, sr in enumerate(runs):
+                path = f"$.spec_runs[{i}]"
+                _check(sr, {"accept_prob": NUM}, path, errors)
+                _check_run(sr, path, errors)
+                _check(sr.get("aggregate", {}).get("spec", {}),
+                       _SPEC_AGGREGATE, f"{path}.aggregate.spec", errors)
+        curve = record.get("comparison", {}).get("curve")
+        if not isinstance(curve, list) or not curve:
+            errors.append("$.comparison.curve: expected non-empty list")
+        else:
+            for i, pt in enumerate(curve):
+                _check(pt, _SPEC_POINT, f"$.comparison.curve[{i}]", errors)
     else:
         errors.append(f"$.schema: unknown schema {schema!r} "
-                      "(expected serving-v1 or serving-v2)")
+                      "(expected serving-v1, serving-v2 or serving-v3)")
     return errors
 
 

@@ -1,12 +1,16 @@
 #!/usr/bin/env python3
-"""Markdown link check: every relative link in README.md + docs/ resolves,
-and every ``*.md`` file a ``src/`` docstring or comment cites exists.
+"""Markdown link check + docs coverage: every relative link in README.md +
+docs/ resolves, every ``*.md`` file a ``src/`` docstring or comment cites
+exists, and every ``src/repro/`` package is mentioned in at least one
+``docs/`` page (no orphan subsystems — the docs tree is the map).
 
 Stdlib-only (runs in CI without extra deps). External (http/https/mailto)
 links are not fetched — only intra-repo targets are verified, anchors
 stripped. Source references are resolved against the repo root (regression
-guard: docstrings once cited an EXPERIMENTS.md that never existed). Exit
-code 1 with a per-link report on any broken target.
+guard: docstrings once cited an EXPERIMENTS.md that never existed). A
+package counts as documented when some docs page names it as
+``repro.<pkg>`` or ``<pkg>/``. Exit code 1 with a per-link / per-orphan
+report on any violation.
 
   python scripts/check_md_links.py [root]
 """
@@ -44,6 +48,23 @@ def _src_md_refs(root: pathlib.Path):
                 yield py, line_no, ref
 
 
+def _doc_orphans(root: pathlib.Path):
+    """``src/repro`` packages never mentioned in any docs page.
+
+    A package is any ``src/repro/`` subdirectory holding Python sources;
+    a mention is ``repro.<pkg>`` or ``<pkg>/`` anywhere in ``docs/``.
+    """
+    pkg_root = root / "src" / "repro"
+    pkgs = sorted(d.name for d in pkg_root.iterdir()
+                  if d.is_dir() and any(d.glob("*.py")))
+    docs_text = "\n".join(p.read_text()
+                          for p in sorted((root / "docs").glob("**/*.md")))
+    orphans = [p for p in pkgs
+               if f"repro.{p}" not in docs_text
+               and f"{p}/" not in docs_text]
+    return pkgs, orphans
+
+
 def check(root: pathlib.Path) -> int:
     files = [root / "README.md"] + sorted((root / "docs").glob("**/*.md"))
     broken = []
@@ -68,9 +89,13 @@ def check(root: pathlib.Path) -> int:
         except ValueError:
             name = md
         print(f"BROKEN {name}: {target}")
+    pkgs, orphans = _doc_orphans(root)
+    for pkg in orphans:
+        print(f"ORPHAN src/repro/{pkg}: not mentioned in any docs/ page")
     print(f"checked {len(files)} markdown files + {n_refs} source "
-          f"references; {len(broken)} broken")
-    return 1 if broken else 0
+          f"references + {len(pkgs)} packages; {len(broken)} broken, "
+          f"{len(orphans)} undocumented")
+    return 1 if broken or orphans else 0
 
 
 if __name__ == "__main__":

@@ -33,7 +33,9 @@ from typing import Dict, Optional
 from repro.configs.base import ModelConfig, ShapeSpec
 
 __all__ = ["CellCost", "estimate_cell", "request_decode_cost",
-           "kv_bytes_per_token", "kv_resident_bytes"]
+           "kv_bytes_per_token", "kv_resident_bytes",
+           "expected_accepted_len", "spec_decode_cost",
+           "spec_request_decode_cost", "spec_break_even_accept"]
 
 BF16 = 2
 F32 = 4
@@ -267,9 +269,140 @@ def request_decode_cost(cfg: ModelConfig, *, prompt_tokens: int,
     return total
 
 
+def spec_request_decode_cost(cfg: ModelConfig, *, k: int,
+                             tick_contexts) -> float:
+    """Strategy-priced FLOPs one speculatively-served request actually
+    spent on target-side verify passes.
+
+    ``tick_contexts`` lists the request's committed context length
+    (tokens whose K/V was in its slot) at each verify tick it was active;
+    each tick scores ``k + 1`` tokens attending on average the mid-window
+    context. This is the *measured* counterpart of
+    :func:`spec_decode_cost`'s ``flops_per_token_spec × emitted`` —
+    unlike :func:`request_decode_cost`, rejected draft positions are
+    compute spent, so a low accept rate shows up as more FLOPs per
+    emitted token, not fewer. Draft-model work is not attributed per
+    request (it is batched across slots); the engine reports it in
+    ``report["spec"]["draft_steps"]``. Units: FLOPs (global, this
+    request's verify share only).
+    """
+    total = 0.0
+    for ctx in tick_contexts:
+        s_attn = float(ctx) + (k + 2) / 2.0
+        total += sum(forward_flops(cfg, tokens=float(k + 1), s_attn=s_attn,
+                                   decode=True).values())
+    return total
+
+
 def _train_multiplier(cfg: ModelConfig) -> float:
     """fwd=1, bwd=2, remat recompute: full≈+1, dots≈+0.5, none=+0."""
     return {"full": 4.0, "dots": 3.5, "none": 3.0}[cfg.remat]
+
+
+# ---------------------------------------------------------------------------
+# speculative decoding: the acceptance-aware "does the gamble pay" model
+# ---------------------------------------------------------------------------
+# The paper's §4 lesson in serving clothes: §3.1 serialization looked
+# great in arithmetic-count terms and lost after synthesis. Speculative
+# decoding spends (k+1)·target + k·draft scoring work per tick to collapse
+# serial decode steps, and only the *accept rate* — an emergent workload
+# property, like the synthesizer's routing — decides whether the bet pays.
+# These estimators price the bet both ways (steps saved vs FLOPs burned)
+# so the serving stack can be sized before a benchmark run; the measured
+# counterpart is the engine's ``report["spec"]``
+# (docs/cost-model.md §speculative).
+
+
+def expected_accepted_len(k: int, accept_prob: float) -> float:
+    """Expected accepted draft tokens per verify with i.i.d. per-position
+    accept probability ``a``: the draft survives position ``i`` only if
+    all earlier positions survived, so ``E[N] = Σ_{i=1..k} a^i``."""
+    if k < 0:
+        raise ValueError(f"k must be >= 0, got {k}")
+    a = min(max(accept_prob, 0.0), 1.0)
+    return float(sum(a ** i for i in range(1, k + 1)))
+
+
+def _decode_step_flops(cfg: ModelConfig, *, tokens: float,
+                       s_attn: float) -> float:
+    return sum(forward_flops(cfg, tokens=tokens, s_attn=s_attn,
+                             decode=True).values())
+
+
+def spec_decode_cost(cfg: ModelConfig, *, k: int, accept_prob: float,
+                     s_attn: float,
+                     draft_cfg: Optional[ModelConfig] = None) -> Dict[str, float]:
+    """Acceptance-aware speculative-decoding estimate at context ``s_attn``.
+
+    Per verify tick the target scores ``k + 1`` tokens in one pass and the
+    drafter spends ``k`` draft-model steps (0 for lookup drafters —
+    ``draft_cfg=None``); the tick emits ``E = expected_accepted_len + 1``
+    tokens. Two currencies, mirroring the paper's ALM-vs-latency split:
+
+    * ``step_speedup`` — emitted tokens per *serial target pass*, assuming
+      a (k+1)-token verify costs one decode step's latency (decode is
+      weight-stream-bound, so the verify amortizes the same HBM traffic —
+      the TPU analogue of the serializer's free clocking) and a draft step
+      costs its FLOPs-ratio fraction of a target step;
+    * ``flops_overhead`` — strategy-priced FLOPs per *emitted* token over
+      plain decode, which is always ≥ 1: speculation burns compute to buy
+      latency, exactly the multiplexing trade the paper warns must be
+      measured, not assumed.
+
+    All FLOPs inherit the per-site MOA strategy multipliers (LOA ~6×).
+    Returns a dict with both, plus the raw per-tick terms.
+    """
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+    emitted = expected_accepted_len(k, accept_prob) + 1.0
+    target_step = _decode_step_flops(cfg, tokens=1.0, s_attn=s_attn)
+    verify = _decode_step_flops(cfg, tokens=float(k + 1), s_attn=s_attn)
+    if draft_cfg is None:
+        draft_step, draft_total = 0.0, 0.0
+    else:
+        draft_step = _decode_step_flops(draft_cfg, tokens=1.0,
+                                        s_attn=s_attn)
+        draft_total = k * draft_step
+    draft_ratio = draft_step / max(target_step, 1e-30)
+    # one verify ≈ one target-step latency; each draft step ≈ its relative
+    # FLOPs share of a target step
+    tick_latency_steps = 1.0 + k * draft_ratio
+    return {
+        "k": float(k),
+        "accept_prob": float(accept_prob),
+        "expected_tokens_per_step": emitted,
+        "target_step_flops": target_step,
+        "verify_flops": verify,
+        "draft_flops": draft_total,
+        "flops_per_token_plain": target_step,
+        "flops_per_token_spec": (verify + draft_total) / emitted,
+        "flops_overhead": (verify + draft_total) / (emitted * target_step),
+        "step_speedup": emitted / tick_latency_steps,
+    }
+
+
+def spec_break_even_accept(cfg: ModelConfig, *, k: int, s_attn: float,
+                           draft_cfg: Optional[ModelConfig] = None,
+                           tol: float = 1e-3) -> float:
+    """Smallest per-position accept probability at which speculation wins
+    (``step_speedup > 1``), by bisection; 1.0 means it never pays at this
+    ``k`` / draft-cost point (the benchmark's negative-result column)."""
+    def speedup(a: float) -> float:
+        return spec_decode_cost(cfg, k=k, accept_prob=a, s_attn=s_attn,
+                                draft_cfg=draft_cfg)["step_speedup"]
+
+    if speedup(1.0) <= 1.0:
+        return 1.0
+    lo, hi = 0.0, 1.0
+    if speedup(lo) > 1.0:
+        return 0.0
+    while hi - lo > tol:
+        mid = 0.5 * (lo + hi)
+        if speedup(mid) > 1.0:
+            hi = mid
+        else:
+            lo = mid
+    return hi
 
 
 # ---------------------------------------------------------------------------

@@ -25,7 +25,8 @@ import numpy as np
 from repro.configs.base import ShapeSpec
 from repro.configs.registry import get_config, smoke_config
 from repro.models.api import build_model
-from repro.serve import GREEDY, Sampler, ServeEngine, poisson_workload
+from repro.serve import (GREEDY, Sampler, ServeEngine, poisson_workload,
+                         resolve_drafter)
 
 __all__ = ["serve_batch", "main"]
 
@@ -114,12 +115,17 @@ def _run_engine(args):
     cfg, model = _build(args)
     rng = jax.random.PRNGKey(args.seed)
     params = model.init(rng)
-    max_len = args.max_len or (args.prompt_len + args.gen_len + 1) * 2
+    spec_margin = args.spec_k if args.spec_decode else 0
+    max_len = args.max_len \
+        or (args.prompt_len + args.gen_len + spec_margin + 1) * 2
     if args.paged and max_len % args.block_size:
         max_len += args.block_size - max_len % args.block_size
+    drafter = resolve_drafter(args.drafter, args.spec_k) \
+        if args.spec_decode else None
     engine = ServeEngine(model, params, n_slots=args.slots, max_len=max_len,
                          paged=args.paged, block_size=args.block_size,
-                         n_blocks=args.blocks or None, rng=rng)
+                         n_blocks=args.blocks or None, rng=rng,
+                         drafter=drafter)
     requests = poisson_workload(
         n_requests=args.requests, vocab=cfg.vocab, rate_rps=args.rate,
         prompt_len_range=(min(4, args.prompt_len), args.prompt_len),
@@ -138,6 +144,13 @@ def _run_engine(args):
           f"p95={report['ttft_ms']['p95']:.0f}ms, "
           f"occupancy={report['slot_occupancy']:.2f}, "
           f"slot_reuse={report['slot_reuse']}")
+    if args.spec_decode:
+        sp = report["spec"]
+        print(f"[serve] spec: drafter={args.drafter} k={sp['k']}, "
+              f"{sp['tokens_per_step']:.2f} tokens/step "
+              f"(plain decode = 1.00), accept rate "
+              f"{sp['accept_rate']:.2f}, accepted hist "
+              f"{sp['accepted_hist']}, draft steps {sp['draft_steps']}")
     if args.paged:
         pg = report["paged"]
         print(f"[serve] paged: {pg['n_blocks']}x{pg['block_size']}-token "
@@ -179,6 +192,18 @@ def main():
     ap.add_argument("--blocks", type=int, default=0,
                     help="[engine --paged] pool size in pages (0 = dense "
                          "equivalent slots*max_len/block_size)")
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="[engine] speculative decoding: draft k tokens "
+                         "per tick, verify in one pass "
+                         "(docs/spec-decode.md)")
+    ap.add_argument("--drafter", default="ngram?n=3",
+                    help="[engine --spec-decode] drafter spec: "
+                         "ngram[?n=N] (prompt lookup) or "
+                         "oracle[?accept=P] (target-as-drafter, forced "
+                         "accept rate)")
+    ap.add_argument("--spec-k", type=int, default=3,
+                    help="[engine --spec-decode] draft tokens per verify "
+                         "window")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature (0 = greedy)")
     ap.add_argument("--greedy", action="store_true",

@@ -27,8 +27,9 @@ from repro.layers.rope import apply_rope
 
 __all__ = [
     "init_attention", "attention_forward", "attention_decode",
-    "attention_decode_paged", "flash_attention", "full_attention",
-    "init_kv_cache", "init_kv_pool", "gather_paged_kv",
+    "attention_decode_paged", "attention_verify", "attention_verify_paged",
+    "flash_attention", "full_attention", "init_kv_cache", "init_kv_pool",
+    "gather_paged_kv",
 ]
 
 _NEG_INF = -1e30  # finite sentinel: keeps exp() well-defined on all-masked rows
@@ -62,6 +63,9 @@ def full_attention(q, k, v, *, causal: bool, positions_q=None, positions_kv=None
     ``kv_len`` limits which cache positions are attended: a scalar applies
     to the whole batch, a ``(B,)`` vector gives per-sequence valid lengths
     (continuous-batching decode, where slots sit at different positions).
+    ``positions_q`` may be ``(Sq,)`` (shared) or ``(B, Sq)`` — per-sequence
+    query positions, the speculative-verify case where every slot scores
+    its draft window starting at its own cursor.
     """
     B, Sq, H, D = q.shape
     _, Skv, Hk, _ = k.shape
@@ -73,15 +77,16 @@ def full_attention(q, k, v, *, causal: bool, positions_q=None, positions_kv=None
         positions_q = jnp.arange(Sq)
     if positions_kv is None:
         positions_kv = jnp.arange(Skv)
-    mask = jnp.ones((Sq, Skv), bool)
+    pq = positions_q if jnp.ndim(positions_q) == 2 else positions_q[None]
+    mask = jnp.ones((pq.shape[0], Sq, Skv), bool)       # (B | 1, Sq, Skv)
     if causal:
-        mask &= positions_kv[None, :] <= positions_q[:, None]
-    if kv_len is not None and jnp.ndim(kv_len) == 0:
-        mask &= positions_kv[None, :] < kv_len
-    mask = mask[None, None, None]                       # (1, 1, 1, Sq, Skv)
-    if kv_len is not None and jnp.ndim(kv_len) != 0:
-        per_seq = positions_kv[None, :] < kv_len[:, None]   # (B, Skv)
-        mask = mask & per_seq[:, None, None, None, :]
+        mask &= positions_kv[None, None, :] <= pq[:, :, None]
+    if kv_len is not None:
+        if jnp.ndim(kv_len) == 0:
+            mask &= positions_kv[None, None, :] < kv_len
+        else:
+            mask &= positions_kv[None, None, :] < kv_len[:, None, None]
+    mask = mask[:, None, None]                          # (B|1, 1, 1, Sq, Skv)
     s = jnp.where(mask, s, _NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
@@ -333,6 +338,126 @@ def _scatter_per_batch(cache, new, pos):
     B = cache.shape[0]
     idx = pos.astype(jnp.int32)
     return cache.at[jnp.arange(B), idx].set(new[:, 0].astype(cache.dtype))
+
+
+def _verify_positions(pos, batch: int, n_tokens: int):
+    """Per-slot query positions ``(B, T)`` for a T-token verify window
+    starting at each slot's cursor (scalar ``pos`` broadcasts)."""
+    start = jnp.full((batch,), pos) if jnp.ndim(pos) == 0 else pos
+    return start.astype(jnp.int32)[:, None] + jnp.arange(n_tokens)[None, :]
+
+
+def attention_verify(params: Params, x, cache: Params, pos, *, n_heads: int,
+                     n_kv_heads: int, head_dim: int,
+                     rope_theta: float = 10000.0, use_rope: bool = True,
+                     compute_dtype=jnp.bfloat16,
+                     strategy=None) -> Tuple[jax.Array, Params]:
+    """Speculative verify: score ``T`` tokens per slot in one call.
+
+    ``x (B, T, d)`` holds the pending token followed by the draft window;
+    slot ``b``'s tokens sit at positions ``pos[b] .. pos[b]+T-1``. All T
+    K/V entries are written (tentatively — the engine's commit/rewind
+    decides how many survive via the ``pos`` cursor; rows past the cursor
+    are causally masked garbage exactly like freed-slot rows), and each
+    query attends the cache causally at its own per-slot position, so the
+    per-position math is identical to T sequential
+    :func:`attention_decode` calls (tests/test_spec_decode.py parity).
+    """
+    B, T, _ = x.shape
+    q, k_new, v_new = _project_qkv(
+        params, x, n_heads=n_heads, n_kv_heads=n_kv_heads, head_dim=head_dim,
+        compute_dtype=compute_dtype, strategy=strategy)
+    pos_q = _verify_positions(pos, B, T)                 # (B, T)
+    if use_rope:
+        q = apply_rope(q, pos_q, theta=rope_theta)
+        k_new = apply_rope(k_new, pos_q, theta=rope_theta)
+
+    b_idx = jnp.arange(B)[:, None]
+
+    def write(buf, new):
+        # out-of-range rows (a slot near max_len) drop, never clamp
+        return buf.at[b_idx, pos_q].set(new.astype(buf.dtype),
+                                        mode="drop")
+
+    new_cache = dict(cache)
+    if "k_scale" in cache:
+        kq, ks = quantize_kv(k_new)
+        vq, vs = quantize_kv(v_new)
+        new_cache["k"] = write(cache["k"], kq)
+        new_cache["v"] = write(cache["v"], vq)
+        new_cache["k_scale"] = write(cache["k_scale"], ks)
+        new_cache["v_scale"] = write(cache["v_scale"], vs)
+        k_cache = dequantize_kv(new_cache["k"], new_cache["k_scale"],
+                                compute_dtype)
+        v_cache = dequantize_kv(new_cache["v"], new_cache["v_scale"],
+                                compute_dtype)
+    else:
+        new_cache["k"] = k_cache = write(cache["k"], k_new)
+        new_cache["v"] = v_cache = write(cache["v"], v_new)
+
+    o = full_attention(q, k_cache, v_cache, causal=True, positions_q=pos_q)
+    o = o.reshape(B, T, n_heads * head_dim)
+    y = _moa_dot(o, params["wo"].astype(compute_dtype),
+                 strategy=strategy, compute_dtype=compute_dtype)
+    return y, new_cache
+
+
+def attention_verify_paged(params: Params, x, pool: Params, block_tables,
+                           pos, *, n_heads: int, n_kv_heads: int,
+                           head_dim: int, rope_theta: float = 10000.0,
+                           use_rope: bool = True,
+                           compute_dtype=jnp.bfloat16,
+                           strategy=None) -> Tuple[jax.Array, Params]:
+    """Paged twin of :func:`attention_verify`.
+
+    The T tentative K/V entries scatter to pages
+    ``block_tables[b, (pos+i) // bs]``. The engine's admission reserves a
+    ``k``-token margin of private pages past every request's worst-case
+    length, so speculative writes only ever land on pages owned by the
+    writing slot (or the trash page, for logical blocks past the table) —
+    a rejected position is rolled back by rewinding ``pos`` alone and the
+    page row is simply overwritten when decode reaches it again.
+    """
+    B, T, _ = x.shape
+    bs = pool["k"].shape[1]
+    q, k_new, v_new = _project_qkv(
+        params, x, n_heads=n_heads, n_kv_heads=n_kv_heads, head_dim=head_dim,
+        compute_dtype=compute_dtype, strategy=strategy)
+    pos_q = _verify_positions(pos, B, T)                 # (B, T)
+    if use_rope:
+        q = apply_rope(q, pos_q, theta=rope_theta)
+        k_new = apply_rope(k_new, pos_q, theta=rope_theta)
+
+    b_idx = jnp.arange(B)[:, None]
+    logical = pos_q // bs
+    n_logical = block_tables.shape[1]
+    blk = block_tables[b_idx, jnp.minimum(logical, n_logical - 1)]
+    # positions past the table (idle slots sitting at high cursors) go to
+    # physical block 0 — the engine's write-trash page
+    blk = jnp.where(logical < n_logical, blk, 0)         # (B, T)
+    off = pos_q % bs
+
+    def write(pool_leaf, new):
+        return pool_leaf.at[blk, off].set(new.astype(pool_leaf.dtype))
+
+    new_pool = dict(pool)
+    if "k_scale" in pool:
+        kq, ks = quantize_kv(k_new)
+        vq, vs = quantize_kv(v_new)
+        new_pool["k"] = write(pool["k"], kq)
+        new_pool["v"] = write(pool["v"], vq)
+        new_pool["k_scale"] = write(pool["k_scale"], ks)
+        new_pool["v_scale"] = write(pool["v_scale"], vs)
+    else:
+        new_pool["k"] = write(pool["k"], k_new)
+        new_pool["v"] = write(pool["v"], v_new)
+
+    k_cache, v_cache = gather_paged_kv(new_pool, block_tables, compute_dtype)
+    o = full_attention(q, k_cache, v_cache, causal=True, positions_q=pos_q)
+    o = o.reshape(B, T, n_heads * head_dim)
+    y = _moa_dot(o, params["wo"].astype(compute_dtype),
+                 strategy=strategy, compute_dtype=compute_dtype)
+    return y, new_pool
 
 
 # ---------------------------------------------------------------------------

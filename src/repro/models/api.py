@@ -230,6 +230,58 @@ class Model:
         """
         return self._mod.decode_step(params, cache, tokens, self.cfg)
 
+    # ---- speculative decoding (docs/spec-decode.md) ------------------------
+    @property
+    def supports_spec_decode(self) -> bool:
+        """Whether a T-token verify is exact for this family.
+
+        Attention families verify in one wide call; MoE only in the
+        dropless regime (below it, expert capacity couples the draft
+        window's tokens — the padded-prefill condition again). SSM/hybrid
+        verify by a scanned decode step with state snapshots, exact by
+        construction. Encoder has no decode; VLM is not served.
+        """
+        cfg = self.cfg
+        if cfg.family == "moe":
+            return cfg.capacity_factor >= cfg.n_experts / max(cfg.top_k, 1)
+        return cfg.family in ("dense", "ssm", "hybrid")
+
+    def verify_step(self, params, cache, tokens):
+        """Score ``tokens (B, T)`` in one call: column 0 is each slot's
+        pending next token, columns ``1..T-1`` the drafted continuation.
+
+        Returns ``(logits (B, T, V), cache, aux)``: ``logits[:, i]``
+        bit-matches the ``i``-th of T sequential :meth:`decode_step`
+        calls; the cache holds all T tentative writes with ``pos`` still
+        at the pre-verify cursor; ``aux`` is the opaque rewind state for
+        :meth:`commit_verified` (``None`` for attention families, stacked
+        recurrent-state snapshots for SSM/hybrid).
+        """
+        if not self.supports_spec_decode:
+            raise ValueError(
+                f"family {self.cfg.family!r} (cfg {self.cfg.name!r}) has no "
+                "exact multi-token verify (capacity-limited MoE couples the "
+                "draft window through expert capacity)")
+        return self._mod.verify_step(params, cache, tokens, self.cfg)
+
+    def paged_verify_step(self, params, cache, tokens):
+        """:meth:`verify_step` against the paged cache layout (same
+        contract; tentative writes route through the block tables)."""
+        if not self.supports_spec_decode:
+            raise ValueError(
+                f"family {self.cfg.family!r} (cfg {self.cfg.name!r}) has no "
+                "exact multi-token verify (capacity-limited MoE couples the "
+                "draft window through expert capacity)")
+        return self._mod.paged_verify_step(params, cache, tokens, self.cfg)
+
+    def commit_verified(self, cache, keep, aux=None):
+        """Finalize a verify: advance each slot's ``pos`` by ``keep (B,)``
+        (accepted drafts + 1; 0 for idle slots) and — recurrent families —
+        restore the state snapshot at the accepted length. Rejected
+        positions need no physical rollback: position-addressed rows past
+        the cursor are masked garbage until overwritten."""
+        return self._mod.commit_verified(cache, keep, aux, self.cfg)
+
     # ---- shapes ------------------------------------------------------------
     def _token_split(self, seq_len: int):
         """VLM: split total sequence into (patch prefix, text)."""

@@ -17,9 +17,11 @@ from repro.layers.embedding import embed, init_embedding, unembed
 from repro.layers.ssd import (init_mamba2_block, init_ssm_state,
                               mamba2_decode, mamba2_forward)
 from repro.models import transformer as dense
+from repro.models import verify_common
 from repro.parallel import constrain
 
-__all__ = ["init_params", "forward", "init_cache", "prefill", "decode_step"]
+__all__ = ["init_params", "forward", "init_cache", "prefill", "decode_step",
+           "verify_step", "commit_verified"]
 
 
 def _init_layer(rng, cfg: ModelConfig) -> Params:
@@ -125,3 +127,18 @@ def decode_step(params: Params, cache: Params, tokens, cfg: ModelConfig):
     logits = unembed(params["embed"], h, compute_dtype=cfg.cdtype)
     return (constrain(logits, "batch", None, "vocab"),
             {"layers": new_layers, "pos": cache["pos"] + 1})
+
+
+def verify_step(params: Params, cache: Params, tokens, cfg: ModelConfig):
+    """Score ``tokens (B, T)`` via T scanned decode steps with per-step
+    state snapshots — the recurrent state cannot be cursor-rewound, so the
+    commit restores the snapshot at each slot's accepted length (see
+    :mod:`repro.models.verify_common`)."""
+    return verify_common.scan_verify(
+        lambda p, c, t: decode_step(p, c, t, cfg), params, cache, tokens,
+        state_keys=("layers",))
+
+
+def commit_verified(cache: Params, keep, aux, cfg: ModelConfig) -> Params:
+    del cfg
+    return verify_common.scan_commit(cache, keep, aux)

@@ -22,7 +22,8 @@ from repro.models import transformer as dense
 from repro.parallel import constrain
 
 __all__ = ["init_params", "forward", "init_cache", "init_paged_cache",
-           "prefill", "decode_step", "paged_decode_step"]
+           "prefill", "decode_step", "paged_decode_step", "verify_step",
+           "paged_verify_step", "commit_verified"]
 
 
 def _init_layer(rng, cfg: ModelConfig) -> Params:
@@ -204,3 +205,43 @@ def paged_decode_step(params: Params, cache: Params, tokens,
     logits = unembed(params["embed"], h, compute_dtype=cfg.cdtype)
     return (constrain(logits, "batch", None, "vocab"),
             {"layers": new_layers, "block_tables": tables, "pos": pos + 1})
+
+
+# ---------------------------------------------------------------------------
+# Speculative verify (docs/spec-decode.md)
+# ---------------------------------------------------------------------------
+# The dense verify skeleton with the MoE MLP swapped in. Exactness
+# caveat: routing a (B, T) window through the experts in one call matches
+# T sequential decode steps only in the *dropless* regime — below it,
+# expert capacity couples tokens across the window
+# (``Model.supports_spec_decode`` gates on exactly this, the same
+# condition as padded prefill).
+
+
+def _moe_mlp_fn(cfg: ModelConfig):
+    def mlp_fn(layer, hn):
+        m, _ = moe_forward(layer["moe"], hn, n_experts=cfg.n_experts,
+                           top_k=cfg.top_k,
+                           capacity_factor=cfg.capacity_factor,
+                           compute_dtype=cfg.cdtype,
+                           strategy=cfg.moa_for("moe"))
+        return m
+    return mlp_fn
+
+
+def verify_step(params: Params, cache: Params, tokens, cfg: ModelConfig):
+    """Score ``tokens (B, T)`` in one call; same contract as
+    :func:`repro.models.transformer.verify_step`."""
+    return dense.verify_impl(params, cache, tokens, cfg, paged=False,
+                             mlp_fn=_moe_mlp_fn(cfg))
+
+
+def paged_verify_step(params: Params, cache: Params, tokens,
+                      cfg: ModelConfig):
+    """Paged twin of :func:`verify_step`; same contract as
+    :func:`repro.models.transformer.paged_verify_step`."""
+    return dense.verify_impl(params, cache, tokens, cfg, paged=True,
+                             mlp_fn=_moe_mlp_fn(cfg))
+
+
+commit_verified = dense.commit_verified

@@ -24,8 +24,8 @@ from repro.parallel import constrain
 
 __all__ = [
     "init_params", "forward", "init_cache", "init_paged_cache", "prefill",
-    "prefill_suffix", "decode_step", "paged_decode_step", "init_layer",
-    "layer_forward",
+    "prefill_suffix", "decode_step", "paged_decode_step", "verify_step",
+    "paged_verify_step", "commit_verified", "init_layer", "layer_forward",
 ]
 
 
@@ -389,3 +389,109 @@ def paged_decode_step(params: Params, cache: Params, tokens,
     new_cache = {"layers": new_layers, "block_tables": tables,
                  "pos": pos + 1}
     return constrain(logits, "batch", None, "vocab"), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Speculative verify (docs/spec-decode.md)
+# ---------------------------------------------------------------------------
+
+
+def _verify_scan(params: Params, cache: Params, tokens, cfg: ModelConfig,
+                 attn_fn, mlp_fn):
+    """Shared T-token verify skeleton: ``tokens (B, T)`` scored in one
+    forward, each slot's window starting at its own ``pos`` cursor.
+    ``attn_fn(layer, hn, layer_cache) -> (attn_out, new_layer_cache)``
+    abstracts the dense-vs-paged KV read/write; ``mlp_fn(layer, hn)`` the
+    dense-vs-MoE MLP."""
+    h = embed(params["embed"], tokens, compute_dtype=cfg.cdtype)
+    h = constrain(h, "batch", None, "embed")
+
+    def body(carry, xs):
+        layer, layer_cache = xs
+        hn = rms_norm(layer["attn_norm"], carry)
+        a, new_cache = attn_fn(layer, hn, layer_cache)
+        h2 = carry + a
+        hn = rms_norm(layer["mlp_norm"], h2)
+        return h2 + mlp_fn(layer, hn), new_cache
+
+    h, new_layers = lax.scan(body, h, (params["layers"], cache["layers"]))
+    h = rms_norm(params["final_norm"], h)
+    logits = unembed(params["embed"], h, compute_dtype=cfg.cdtype)
+    return constrain(logits, "batch", None, "vocab"), new_layers
+
+
+def verify_impl(params: Params, cache: Params, tokens, cfg: ModelConfig, *,
+                paged: bool, mlp_fn=None):
+    """Verify implementation shared by the dense and MoE families (which
+    differ only in the MLP block); ``paged`` selects the KV read/write
+    path. See :func:`verify_step` for the contract."""
+    if mlp_fn is None:
+        def mlp_fn(layer, hn):
+            return swiglu(layer["mlp"], hn, strategy=cfg.moa_for("mlp"),
+                          compute_dtype=cfg.cdtype)
+    pos = cache["pos"]
+    if paged:
+        tables = cache["block_tables"]
+
+        def attn_fn(layer, hn, layer_pool):
+            return attn_lib.attention_verify_paged(
+                layer["attn"], hn, layer_pool, tables, pos,
+                n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+                compute_dtype=cfg.cdtype,
+                strategy=cfg.moa_for("attention"))
+    else:
+        def attn_fn(layer, hn, layer_cache):
+            return attn_lib.attention_verify(
+                layer["attn"], hn, layer_cache, pos, n_heads=cfg.n_heads,
+                n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                rope_theta=cfg.rope_theta, compute_dtype=cfg.cdtype,
+                strategy=cfg.moa_for("attention"))
+
+    logits, new_layers = _verify_scan(params, cache, tokens, cfg, attn_fn,
+                                      mlp_fn)
+    new_cache = {"layers": new_layers, "pos": pos}
+    if paged:
+        new_cache["block_tables"] = tables
+    return logits, new_cache, None
+
+
+def verify_step(params: Params, cache: Params, tokens, cfg: ModelConfig):
+    """Score ``T`` tokens per slot in one call (speculative verify).
+
+    ``tokens (B, T)``: column 0 is each slot's pending next token, columns
+    ``1..T-1`` the drafted continuation. All T K/V entries are written
+    *tentatively* and logits are returned at every position — logits
+    ``[:, i]`` bit-match the ``i``-th of T sequential :func:`decode_step`
+    calls. The returned cache's ``pos`` stays at the pre-verify cursor;
+    :func:`commit_verified` advances it by the per-slot accepted length,
+    which is the whole rewind story for position-addressed KV (rejected
+    rows are masked garbage until overwritten, same as freed-slot rows).
+    Returns ``(logits (B, T, V), cache, aux)`` with ``aux=None`` (no
+    recurrent state in this family).
+    """
+    return verify_impl(params, cache, tokens, cfg, paged=False)
+
+
+def paged_verify_step(params: Params, cache: Params, tokens,
+                      cfg: ModelConfig):
+    """Paged twin of :func:`verify_step` (``init_paged_cache`` layout).
+
+    Tentative writes scatter through the block tables; the engine's
+    admission margin guarantees they land on slot-private pages (or the
+    trash page), so rejection rolls back by rewinding ``pos`` alone.
+    """
+    return verify_impl(params, cache, tokens, cfg, paged=True)
+
+
+def commit_verified(cache: Params, keep, aux, cfg: ModelConfig) -> Params:
+    """Advance each slot's cursor past its accepted tokens.
+
+    ``keep (B,)``: accepted drafts + 1 for active slots (at least the
+    pending token survives), 0 for idle slots. ``aux`` is unused — the KV
+    cache is position-addressed, so the cursor *is* the rollback.
+    """
+    del aux
+    new_cache = dict(cache)
+    new_cache["pos"] = cache["pos"] + keep.astype(cache["pos"].dtype)
+    return new_cache

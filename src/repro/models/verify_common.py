@@ -1,0 +1,86 @@
+"""Scan-based speculative verify for families with recurrent state.
+
+Attention-only families verify a ``T``-token draft window in one wide
+call (:func:`repro.layers.attention.attention_verify`) because their decode
+state is position-addressed: rejecting a draft suffix is a cursor rewind.
+SSM and hybrid families carry a *recurrent* state that the draft tokens
+mutate irreversibly, so their verify is a ``lax.scan`` of the family's own
+single-token ``decode_step`` — bit-identical to sequential decode by
+construction — that snapshots the recurrent leaves after every step. The
+commit then selects, per slot, the snapshot at the accepted length: slots
+that rejected the whole window restore the pre-verify state (snapshot 0).
+
+Conventions shared with the attention-family verify:
+
+* ``verify`` returns ``(logits (B, T, V), cache, aux)`` with the cache's
+  ``pos`` cursor left at its *pre-verify* value (position-addressed leaves
+  hold all T tentative writes; recurrent leaves hold the post-T state,
+  which ``commit`` overwrites from ``aux``);
+* ``commit(cache, keep, aux)`` advances ``pos`` by the per-slot ``keep``
+  (accepted drafts + 1; 0 for idle slots) and restores recurrent leaves
+  from snapshot ``keep``.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = ["scan_verify", "select_snapshots", "scan_commit"]
+
+
+def scan_verify(decode_fn, params, cache, tokens,
+                state_keys: Sequence[str]) -> Tuple[jax.Array, dict, dict]:
+    """Verify ``tokens (B, T)`` as T sequential ``decode_fn`` steps.
+
+    ``decode_fn(params, cache, (B, 1) tokens) -> (logits, cache)`` is the
+    family's decode step. ``state_keys`` name the cache entries holding
+    recurrent (non-position-addressed) state; their post-step values are
+    stacked into ``aux`` with the pre-verify state prepended, so
+    ``aux[key]`` leaves are ``(T + 1, ...)``.
+    """
+    pos0 = cache["pos"]
+
+    def step(c, tok):
+        logits, c2 = decode_fn(params, c, tok[:, None])
+        return c2, (logits[:, 0], {k: c2[k] for k in state_keys})
+
+    final, (logits, snaps) = lax.scan(step, cache, tokens.T)
+    aux = {
+        key: jax.tree.map(
+            lambda first, rest: jnp.concatenate([first[None], rest], axis=0),
+            cache[key], snaps[key])
+        for key in state_keys
+    }
+    new_cache = dict(final)
+    new_cache["pos"] = pos0
+    return jnp.moveaxis(logits, 0, 1), new_cache, aux
+
+
+def select_snapshots(aux: dict, keep) -> dict:
+    """Per-slot snapshot selection: leaf ``(T+1, stack, B, ...)`` →
+    ``(stack, B, ...)`` taking step ``keep[b]`` for slot ``b``.
+
+    All recurrent cache leaves in this repo are laid out
+    ``(stack, batch, ...)`` (layer or application-point stack first), so
+    the snapshot axis order is ``(T+1, stack, B, ...)`` after stacking.
+    """
+
+    def sel(leaf):
+        per_slot = jnp.moveaxis(leaf, 2, 0)              # (B, T+1, stack, ..)
+        out = jax.vmap(lambda snaps, i: snaps[i])(per_slot, keep)
+        return jnp.moveaxis(out, 0, 1)                   # (stack, B, ...)
+
+    return {key: jax.tree.map(sel, tree) for key, tree in aux.items()}
+
+
+def scan_commit(cache, keep, aux) -> dict:
+    """Advance ``pos`` by ``keep`` and restore recurrent leaves from the
+    per-slot accepted snapshot."""
+    new_cache = dict(cache)
+    new_cache.update(select_snapshots(aux, keep))
+    new_cache["pos"] = cache["pos"] + keep.astype(cache["pos"].dtype)
+    return new_cache

@@ -30,10 +30,12 @@ from repro.layers.ssd import (init_mamba2_block, init_ssm_state,
                               mamba2_decode, mamba2_forward)
 from repro.models import mamba2 as mamba_lm
 from repro.models import transformer as dense
+from repro.models import verify_common
 from repro.parallel import constrain
 
 __all__ = ["init_params", "forward", "init_cache", "init_paged_cache",
-           "prefill", "decode_step", "paged_decode_step", "n_applications"]
+           "prefill", "decode_step", "paged_decode_step", "verify_step",
+           "paged_verify_step", "commit_verified", "n_applications"]
 
 
 def n_applications(cfg: ModelConfig) -> int:
@@ -343,3 +345,37 @@ def paged_decode_step(params: Params, cache: Params, tokens,
     return (constrain(logits, "batch", None, "vocab"),
             {"ssm": new_ssm, "kv": new_kv, "block_tables": tables,
              "pos": pos + 1})
+
+
+# ---------------------------------------------------------------------------
+# Speculative verify (docs/spec-decode.md)
+# ---------------------------------------------------------------------------
+# The hybrid's KV caches are position-addressed (cursor rewind suffices),
+# but the Mamba-2 states are recurrent — verify is a scan of the family's
+# own decode step with per-step SSM snapshots, and the commit restores
+# each slot's snapshot at its accepted length.
+
+
+def verify_step(params: Params, cache: Params, tokens, cfg: ModelConfig):
+    """Score ``tokens (B, T)`` via T scanned decode steps; bit-identical
+    to sequential decode by construction. Returns ``(logits, cache, aux)``
+    — ``aux`` holds the stacked SSM snapshots for
+    :func:`commit_verified`."""
+    return verify_common.scan_verify(
+        lambda p, c, t: decode_step(p, c, t, cfg), params, cache, tokens,
+        state_keys=("ssm",))
+
+
+def paged_verify_step(params: Params, cache: Params, tokens,
+                      cfg: ModelConfig):
+    """Paged twin of :func:`verify_step`: the scanned step is
+    :func:`paged_decode_step`, so tentative KV writes route through the
+    block tables (slot-private pages — the engine's admission margin)."""
+    return verify_common.scan_verify(
+        lambda p, c, t: paged_decode_step(p, c, t, cfg), params, cache,
+        tokens, state_keys=("ssm",))
+
+
+def commit_verified(cache: Params, keep, aux, cfg: ModelConfig) -> Params:
+    del cfg
+    return verify_common.scan_commit(cache, keep, aux)

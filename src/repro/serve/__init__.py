@@ -8,8 +8,11 @@ bucketed prefill, and one batched :meth:`~repro.models.api.Model.decode_step`
 per engine tick folds one token per active slot into the per-slot KV/SSM
 state. ``ServeEngine(paged=True)`` swaps the dense per-slot cache regions
 for a shared paged block pool with ref-counted prefix caching and
-memory-aware admission (:mod:`repro.serve.kv_pool`). See
-``docs/serving.md`` and ``docs/paged-kv.md`` for the design and
+memory-aware admission (:mod:`repro.serve.kv_pool`);
+``ServeEngine(drafter=...)`` switches the decode tick to speculative
+decoding — draft ``k`` tokens, verify in one pass, commit the accepted
+prefix (:mod:`repro.serve.spec`). See ``docs/serving.md``,
+``docs/paged-kv.md`` and ``docs/spec-decode.md`` for the design and
 scheduler/pool invariants.
 
 Public surface::
@@ -27,11 +30,15 @@ from repro.serve.metrics import RequestMetrics, aggregate
 from repro.serve.request import FinishReason, Request, RequestResult
 from repro.serve.sampling import GREEDY, Sampler, sample_batch
 from repro.serve.scheduler import SlotScheduler
+from repro.serve.spec import (Drafter, DraftModelDrafter, NgramDrafter,
+                              OracleDrafter, resolve_drafter, verify_accept)
 from repro.serve.workload import poisson_workload, shared_prefix_workload
 
 __all__ = [
-    "AdmissionPlan", "BlockPool", "FinishReason", "GREEDY", "Request",
+    "AdmissionPlan", "BlockPool", "Drafter", "DraftModelDrafter",
+    "FinishReason", "GREEDY", "NgramDrafter", "OracleDrafter", "Request",
     "RequestMetrics", "RequestResult", "Sampler", "ServeEngine",
-    "SlotScheduler", "aggregate", "blocks_needed", "sample_batch",
-    "poisson_workload", "shared_prefix_workload",
+    "SlotScheduler", "aggregate", "blocks_needed", "resolve_drafter",
+    "sample_batch", "verify_accept", "poisson_workload",
+    "shared_prefix_workload",
 ]

@@ -20,8 +20,16 @@ Two cache layouts (``docs/paged-kv.md``):
   (preempt-free backpressure), and on the dense family a prefix-cache hit
   skips recomputing the shared prefill blocks entirely.
 
+A :class:`~repro.serve.spec.Drafter` switches the decode tick to
+**speculative** mode (``docs/spec-decode.md``): draft ``k`` tokens per
+slot, score them in one ``(n_slots, k+1)`` ``verify_step``, commit each
+slot's accepted prefix — up to ``k + 1`` tokens per tick, rejection being
+a per-slot cursor rewind (plus a state-snapshot restore for recurrent
+families).
+
 Shape discipline (everything ``jax.jit`` sees is from a fixed set):
   * decode: always ``(n_slots, 1)`` tokens against the same cache shapes;
+  * speculative verify: always ``(n_slots, k + 1)`` tokens, one shape;
   * prefill: one shape per prompt bucket (attention families right-pad and
     pass ``prompt_len``; SSM/hybrid compile one prefill per exact length
     because pad tokens would pollute the recurrent state — see
@@ -40,12 +48,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.launch.costing import request_decode_cost
+from repro.launch.costing import request_decode_cost, spec_request_decode_cost
 from repro.serve.kv_pool import TRASH_BLOCK, BlockPool, blocks_needed
-from repro.serve.metrics import RequestMetrics, aggregate, paged_report
+from repro.serve.metrics import (RequestMetrics, aggregate, paged_report,
+                                 spec_report)
 from repro.serve.request import FinishReason, Request, RequestResult
 from repro.serve.sampling import sample_batch
 from repro.serve.scheduler import SlotScheduler
+from repro.serve.spec import Drafter, verify_accept
 
 __all__ = ["ServeEngine"]
 
@@ -60,6 +70,9 @@ class _Inflight:
     generated: List[int]
     next_token: int
     metrics: RequestMetrics
+    #: spec mode: committed context length at each verify tick this
+    #: request was active (feeds the acceptance-aware FLOPs pricing)
+    tick_contexts: List[int] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -127,6 +140,15 @@ class ServeEngine:
         trade capacity for admission backpressure.
     rng:
         Key for sampled (non-greedy) requests. Defaults to ``PRNGKey(0)``.
+    drafter:
+        A :class:`repro.serve.spec.Drafter` switches the decode tick to
+        *speculative* mode: each tick proposes ``drafter.k`` tokens per
+        slot, scores them in one ``verify_step``, and commits the accepted
+        prefix — up to ``k + 1`` tokens per tick instead of 1 (see
+        ``docs/spec-decode.md``). Requires ``model.supports_spec_decode``.
+        The scheduler then reserves a ``k``-row margin per request
+        (tentative verify writes must stay inside the slot), and paged
+        admission reserves the matching extra blocks.
     clock:
         Monotonic time source in seconds (injectable for deterministic
         tests). Idle gaps before the next arrival are fast-forwarded, so a
@@ -136,20 +158,29 @@ class ServeEngine:
     def __init__(self, model, params, *, n_slots: int, max_len: int,
                  prompt_buckets: Sequence[int] = (), paged: bool = False,
                  block_size: int = 16, n_blocks: Optional[int] = None,
-                 rng=None, clock: Callable[[], float] = time.monotonic):
+                 rng=None, drafter: Optional[Drafter] = None,
+                 clock: Callable[[], float] = time.monotonic):
         if model.cfg.family == "encoder":
             raise ValueError("encoder-only arch has no decode step")
         if model.cfg.family == "vlm":
             raise ValueError("vlm serving is not supported: the engine "
                              "feeds token-only prompts, but vlm prefill "
                              "needs a patch batch")
+        if drafter is not None and not model.supports_spec_decode:
+            raise ValueError(
+                f"family {model.cfg.family!r} (cfg {model.cfg.name!r}) has "
+                "no exact multi-token verify — speculative decoding needs "
+                "Model.supports_spec_decode")
         self.model = model
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
+        self.drafter = drafter
+        self.spec_k = drafter.k if drafter is not None else 0
         self.scheduler = SlotScheduler(n_slots, max_len,
                                        [b for b in prompt_buckets
-                                        if b <= max_len])
+                                        if b <= max_len],
+                                       spec_margin=self.spec_k)
         self._clock = clock
         self._rng = jax.random.PRNGKey(0) if rng is None else rng
         self._padded = model.supports_padded_prefill
@@ -172,11 +203,25 @@ class ServeEngine:
                 lambda p, b: model.prefill(p, b, max_len=max_len))
         self._write = jax.jit(_write_slot, donate_argnums=(0,))
         self._sample = jax.jit(sample_batch)
+        if drafter is not None:
+            verify = model.paged_verify_step if paged else model.verify_step
+            self._verify = jax.jit(verify, donate_argnums=(1,))
+            self._commit = jax.jit(model.commit_verified,
+                                   donate_argnums=(0,))
+            self._accept = jax.jit(verify_accept)
 
         self._inflight: Dict[int, _Inflight] = {}
         self._steps = 0
         self._occupancy_sum = 0.0
         self._fast_forward_s = 0.0
+        self._spec_ticks = 0
+        self._spec_emitted = 0
+        self._spec_slot_steps = 0.0
+        self._accept_hist = [0] * (self.spec_k + 1)
+        self._draft_steps_start = 0
+        self._tick_contexts: Dict[int, List[int]] = {}
+        if drafter is not None:
+            drafter.bind(self)
 
     # ---- paged setup -------------------------------------------------------
     def _init_paged(self, block_size: int, n_blocks: Optional[int]) -> None:
@@ -309,16 +354,20 @@ class ServeEngine:
 
     def _block_gate(self, req: Request) -> bool:
         """Invariant 6: admission needs enough free pool blocks for the
-        request's worst-case lifetime (prefix hits count as free)."""
-        return self._pool.can_admit(req.prompt, req.max_new_tokens,
+        request's worst-case lifetime (prefix hits count as free; spec
+        mode adds the verify window's tentative-write margin)."""
+        return self._pool.can_admit(req.prompt,
+                                    req.max_new_tokens + self.spec_k,
                                     match_tail=self._match_tail)
 
     def _plan_tables(self, req: Request):
         """Reserve pool pages for one admission: share matched prefix
         pages, allocate the rest (plus the CoW spare for a matched tail),
-        and build the slot's logical→physical table."""
+        and build the slot's logical→physical table. In spec mode the
+        plan covers ``spec_k`` rows past the worst-case length, so every
+        tentative verify write lands on a slot-private page."""
         pool, bs = self._pool, self.block_size
-        plan = pool.plan(req.prompt, req.max_new_tokens,
+        plan = pool.plan(req.prompt, req.max_new_tokens + self.spec_k,
                          match_tail=self._match_tail)
         # share before alloc: a matched evictable page must be revived
         # before allocation can consider evicting it
@@ -455,6 +504,8 @@ class ServeEngine:
             else:
                 logits, pre = self._prefill(self.params, {"tokens": prompt})
             self.cache = self._write(self.cache, pre, slot)
+        if self.drafter is not None:
+            self.drafter.admit(slot, req.prompt)
         first = int(np.asarray(req.sampler(
             logits[:, -1], None if req.sampler.greedy else self._next_key()))[0])
         t_first = self._now(self._t_start)
@@ -488,6 +539,9 @@ class ServeEngine:
             finish_reason=reason, metrics=m))
         if self.paged:
             self._release_paged(inf.slot)
+        if self.drafter is not None:
+            self.drafter.release(inf.slot)
+            self._tick_contexts[inf.request.uid] = inf.tick_contexts
         self.scheduler.release(inf.slot)
         self._inflight.pop(inf.slot, None)
 
@@ -520,13 +574,76 @@ class ServeEngine:
                     or len(inf.generated) >= inf.request.max_new_tokens:
                 self._finish(inf, now, results)
 
+    def _spec_tick(self, results: List[RequestResult]) -> None:
+        """One speculative tick: draft → verify → accept → commit.
+
+        The drafter proposes ``k`` tokens per active slot; one
+        ``verify_step`` scores the pending token plus the draft window,
+        writing all ``k + 1`` K/V rows tentatively; the jitted acceptance
+        picks each slot's accepted prefix (greedy exact-match or exact
+        rejection sampling); the commit advances each slot's cursor by
+        ``accepted + 1`` (0 for idle slots), which *is* the rejection
+        rollback — rejected rows are masked garbage until overwritten.
+        Each slot emits ``accepted + 1`` tokens, the last becoming its
+        pending next token.
+        """
+        k = self.spec_k
+        histories = {slot: tuple(inf.request.prompt) + tuple(inf.generated)
+                     for slot, inf in self._inflight.items()}
+        proposals = self.drafter.propose(histories)
+        toks = np.zeros((self.n_slots, k + 1), np.int32)
+        temps = np.zeros((self.n_slots,), np.float32)
+        greedy = np.ones((self.n_slots,), bool)
+        for slot, inf in self._inflight.items():
+            toks[slot, 0] = inf.next_token
+            toks[slot, 1:] = proposals[slot]
+            temps[slot] = max(inf.request.sampler.temperature, 0.0)
+            greedy[slot] = inf.request.sampler.greedy
+        logits, self.cache, aux = self._verify(self.params, self.cache,
+                                               jnp.asarray(toks))
+        out, n_acc = self._accept(logits, jnp.asarray(toks[:, 1:]),
+                                  jnp.asarray(temps), jnp.asarray(greedy),
+                                  self._next_key())
+        out, n_acc = np.asarray(out), np.asarray(n_acc)
+        keep = np.zeros((self.n_slots,), np.int32)
+        for slot in self._inflight:
+            keep[slot] = n_acc[slot] + 1
+        self.cache = self._commit(self.cache, jnp.asarray(keep), aux)
+        self._steps += 1
+        self._spec_ticks += 1
+        self._occupancy_sum += len(self._inflight) / self.n_slots
+        self._spec_slot_steps += len(self._inflight)
+        if self.paged:
+            self._block_occ_sum += self._pool.in_use / self.n_blocks
+            self._peak_blocks = max(self._peak_blocks, self._pool.in_use)
+        now = self._now(self._t_start)
+        for slot in sorted(self._inflight):
+            inf = self._inflight[slot]
+            inf.tick_contexts.append(
+                inf.request.prompt_len + len(inf.generated) - 1)
+            accepted = int(n_acc[slot])
+            self._accept_hist[accepted] += 1
+            done = False
+            for tok in out[slot, : accepted + 1]:
+                tok = int(tok)
+                inf.generated.append(tok)
+                inf.next_token = tok
+                self._spec_emitted += 1
+                if tok == inf.request.eos_id \
+                        or len(inf.generated) >= inf.request.max_new_tokens:
+                    done = True
+                    break
+            if done:
+                self._finish(inf, now, results)
+
     # ---- public API --------------------------------------------------------
     def submit(self, request: Request) -> None:
         """Queue a request (admitted when arrived, a slot frees up, and —
         paged — the pool can cover its worst-case block need)."""
         if self.paged:
             need = blocks_needed(request.prompt_len,
-                                 request.max_new_tokens, self.block_size)
+                                 request.max_new_tokens + self.spec_k,
+                                 self.block_size)
             if need > self.n_blocks:
                 raise ValueError(
                     f"request {request.uid}: needs {need} blocks but the "
@@ -556,6 +673,13 @@ class ServeEngine:
         self._steps = 0
         self._occupancy_sum = 0.0
         self._fast_forward_s = 0.0
+        if self.drafter is not None:
+            self._spec_ticks = 0
+            self._spec_emitted = 0
+            self._spec_slot_steps = 0.0
+            self._accept_hist = [0] * (self.spec_k + 1)
+            self._draft_steps_start = self.drafter.draft_steps
+            self._tick_contexts: Dict[int, List[int]] = {}
         if self.paged:
             self._prefix_hits = 0
             self._shared_block_hits = 0
@@ -583,22 +707,40 @@ class ServeEngine:
                     break
                 self._admit(admitted[0][0], admitted[0][1], now, results)
             if self._inflight:
-                self._decode_tick(results)
+                if self.drafter is not None:
+                    self._spec_tick(results)
+                else:
+                    self._decode_tick(results)
             if self._steps >= limit:
                 raise RuntimeError(
                     f"serve engine exceeded {limit} decode steps with "
                     f"{len(self._inflight)} requests still in flight")
         wall = self._now(self._t_start)
         for r in results:
-            r.metrics.moa_flops = request_decode_cost(
-                self.model.cfg, prompt_tokens=r.metrics.prompt_tokens,
-                new_tokens=r.metrics.new_tokens)
+            if self.drafter is not None:
+                # acceptance-aware: every (k+1)-token verify pass this
+                # request sat through is compute spent, accepted or not
+                r.metrics.moa_flops = spec_request_decode_cost(
+                    self.model.cfg, k=self.spec_k,
+                    tick_contexts=self._tick_contexts.get(r.uid, ()))
+            else:
+                r.metrics.moa_flops = request_decode_cost(
+                    self.model.cfg, prompt_tokens=r.metrics.prompt_tokens,
+                    new_tokens=r.metrics.new_tokens)
         report = aggregate(results, n_slots=self.n_slots,
                            decode_steps=self._steps,
                            occupancy_sum=self._occupancy_sum, wall_s=wall)
         report["slot_reuse"] = self.scheduler.slot_reuse_count(log_start)
         report["arch"] = self.model.cfg.name
         report["moa"] = self.model.cfg.moa_strategy.spec
+        if self.drafter is not None:
+            report["spec"] = spec_report(
+                k=self.spec_k, verify_ticks=self._spec_ticks,
+                emitted_tokens=self._spec_emitted,
+                slot_steps=self._spec_slot_steps,
+                accepted_hist=self._accept_hist,
+                draft_steps=self.drafter.draft_steps
+                - self._draft_steps_start)
         if self.paged:
             report["paged"] = paged_report(
                 spec=self._spec, n_slots=self.n_slots, max_len=self.max_len,

@@ -14,7 +14,7 @@ from typing import Dict, List
 
 import numpy as np
 
-__all__ = ["RequestMetrics", "aggregate", "paged_report"]
+__all__ = ["RequestMetrics", "aggregate", "paged_report", "spec_report"]
 
 
 @dataclasses.dataclass
@@ -136,4 +136,33 @@ def paged_report(*, spec, n_slots: int, max_len: int, block_size: int,
         "peak_blocks_in_use": peak_blocks,
         "resident_kv_bytes": peak_blocks * spec.kv_block_bytes(block_size),
         "dense_equiv_kv_bytes": spec.dense_kv_bytes(n_slots, max_len),
+    }
+
+
+def spec_report(*, k: int, verify_ticks: int, emitted_tokens: int,
+                slot_steps: float, accepted_hist, draft_steps: int) -> dict:
+    """Speculative-decode sub-report for the engine's aggregate.
+
+    ``tokens_per_step`` is **slot-step normalized**: emitted tokens over
+    the sum of active slots across verify ticks, so plain decode scores
+    exactly 1.0 and a fully-accepted window of ``k`` drafts scores
+    ``k + 1`` — the "did the multiplexing gamble pay" number.
+    ``accepted_hist[i]`` counts verify ticks (per slot) that accepted
+    exactly ``i`` draft tokens; ``draft_steps`` is the drafter's model
+    calls (0 for lookup drafters) — the overhead side of the bet.
+    """
+    hist = [int(c) for c in accepted_hist]
+    total = sum(hist)
+    return {
+        "k": k,
+        "verify_ticks": verify_ticks,
+        "emitted_tokens": emitted_tokens,
+        "tokens_per_step": emitted_tokens / max(slot_steps, 1e-9),
+        "accepted_hist": hist,
+        "accept_rate": (sum(i * c for i, c in enumerate(hist))
+                        / max(total * k, 1)),
+        "mean_accepted": sum(i * c for i, c in enumerate(hist))
+                         / max(total, 1),
+        "draft_steps": draft_steps,
+        "draft_steps_per_tick": draft_steps / max(verify_ticks, 1),
     }

@@ -10,7 +10,9 @@ Invariants (tested in ``tests/test_serving.py`` and property-tested in
 2. Admission is FIFO over *arrived* requests (ties broken by uid): a
    request is arrived once the engine clock reaches its ``arrival_s``.
 3. An admitted request fits its slot for its whole lifetime:
-   ``prompt_len + max_new_tokens <= max_len`` (checked at submit).
+   ``prompt_len + max_new_tokens + spec_margin <= max_len`` (checked at
+   submit; ``spec_margin`` is 0 unless the engine runs speculative decode,
+   where it reserves room for the verify window's tentative writes).
 4. ``prompt_len`` never exceeds the largest prefill bucket.
 5. A freed slot's device state is garbage until the next admission
    overwrites it (the engine masks freed slots out of all metrics).
@@ -54,11 +56,19 @@ class SlotScheduler:
     """FIFO admission of arrived requests into free decode slots."""
 
     def __init__(self, n_slots: int, max_len: int,
-                 buckets: Sequence[int] = ()):
+                 buckets: Sequence[int] = (), spec_margin: int = 0):
         if n_slots < 1:
             raise ValueError("need at least one slot")
+        if spec_margin < 0:
+            raise ValueError("spec_margin must be >= 0")
         self.n_slots = n_slots
         self.max_len = max_len
+        #: extra cache rows reserved past every request's worst-case length
+        #: (speculative decoding: a verify window of k draft tokens may
+        #: tentatively write up to k rows past the final committed token,
+        #: and those writes must stay inside the slot — invariant 3 becomes
+        #: ``prompt + max_new_tokens + spec_margin <= max_len``)
+        self.spec_margin = spec_margin
         self.buckets: Tuple[int, ...] = tuple(sorted(buckets)) \
             or default_buckets(max_len)
         self._free: List[int] = list(range(n_slots))   # min-heap: lowest id
@@ -77,10 +87,13 @@ class SlotScheduler:
         """Queue a request for admission at its ``arrival_s`` (invariant 3
         and 4 checked here, so a bad request fails before taking a slot)."""
         p = request.prompt_len
-        if p + request.max_new_tokens > self.max_len:
+        if p + request.max_new_tokens + self.spec_margin > self.max_len:
+            margin = (f" + spec_margin {self.spec_margin}"
+                      if self.spec_margin else "")
             raise ValueError(
                 f"request {request.uid}: prompt {p} + max_new_tokens "
-                f"{request.max_new_tokens} exceeds max_len {self.max_len}")
+                f"{request.max_new_tokens}{margin} exceeds max_len "
+                f"{self.max_len}")
         if p > self.buckets[-1]:
             raise ValueError(
                 f"request {request.uid}: prompt {p} tokens exceeds the "

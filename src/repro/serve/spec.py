@@ -1,0 +1,366 @@
+"""Speculative decoding: draft proposers + acceptance rules.
+
+The paper's core lesson is that a time-multiplexing trick which looks good
+on paper (§3.1 serialization) must be validated end-to-end on the real
+target — synthesis, not arithmetic, decides whether it pays. Speculative
+decoding is the serving-level version of the same gamble: spend one
+``k+1``-token verify pass (plus draft work) to collapse up to ``k+1``
+serial decode steps into one engine tick. Whether it pays is decided by
+the *measured* accept rate, not the proposal heuristic — the engine
+reports it (``report["spec"]``) and ``repro.launch.costing``'s
+acceptance-aware estimator prices the bet up front
+(:func:`repro.launch.costing.spec_decode_cost`).
+
+Pieces:
+
+* :class:`Drafter` — the proposer interface. Per engine tick it sees every
+  active slot's token history (prompt + generated, ending with the pending
+  next token) and must return exactly ``k`` proposed continuation tokens
+  per slot. Proposals are **deterministic** (greedy / lookup): that makes
+  the temperature acceptance rule below exact without carrying draft
+  distributions around.
+* :class:`NgramDrafter` — prompt-lookup decoding: match the history's last
+  n-gram against its own earlier occurrences and propose what followed.
+  Zero model cost; wins on repetitive/agentic traffic.
+* :class:`DraftModelDrafter` — a small draft model greedily continuing
+  each slot on its own slot cache, teacher-forced on the committed tokens
+  each tick through its own verify/commit machinery (so any family with
+  an exact verify can draft).
+* :class:`OracleDrafter` — the target model drafting for itself: greedy
+  proposals match the target's greedy continuation exactly, forcing accept
+  rate 1 (``accept_prob < 1`` corrupts tokens independently to sweep the
+  measured accept rate — the benchmark's knob).
+* :func:`verify_accept` — the jitted acceptance rule: greedy exact-match
+  rows and temperature rejection-sampling rows share one call. With a
+  deterministic proposal the rejection-sampling scheme (accept token ``d``
+  w.p. ``p(d)``; on rejection sample from ``p`` with ``d`` zeroed and
+  renormalized) provably preserves the target distribution.
+* :func:`resolve_drafter` — spec-string registry (``"ngram?n=3"``,
+  ``"oracle?accept=0.5"``) mirroring the MOA strategy registry grammar.
+"""
+
+from __future__ import annotations
+
+import abc
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Drafter", "NgramDrafter", "DraftModelDrafter", "OracleDrafter",
+           "verify_accept", "resolve_drafter"]
+
+
+# ---------------------------------------------------------------------------
+# acceptance
+# ---------------------------------------------------------------------------
+
+
+def verify_accept(logits, draft, temps, greedy, rng):
+    """Mixed-policy acceptance over one verify window.
+
+    ``logits (B, T, V)`` are the verify pass's per-position target logits
+    (position ``i`` is the distribution of the token *after* the ``i``-th
+    fed token), ``draft (B, T-1)`` the proposed tokens, ``temps (B,)`` and
+    ``greedy (B,)`` each slot's sampling policy. Returns
+    ``(out (B, T) int32, n_acc (B,) int32)``: slot ``b`` emits
+    ``out[b, : n_acc[b] + 1]`` — its accepted drafts followed by one
+    correction/bonus token (which is *not* yet in the cache: it becomes
+    the slot's pending next token).
+
+    Greedy rows accept a draft token iff it equals the target argmax, and
+    the emitted tokens are the argmax sequence itself — so a drafter that
+    proposes the target's greedy continuation yields bit-identical output
+    to plain greedy decode, just fewer ticks. Temperature rows run exact
+    rejection sampling against the deterministic proposal (see module
+    docstring); all randomness comes from ``rng``, so a fixed engine seed
+    reproduces the run.
+    """
+    B, T, V = logits.shape
+    g = jnp.argmax(logits, axis=-1).astype(jnp.int32)            # (B, T)
+    lp = logits.astype(jnp.float32) \
+        / jnp.maximum(temps, 1e-6)[:, None, None]
+    p = jax.nn.softmax(lp, axis=-1)
+    ku, kr, kb = jax.random.split(rng, 3)
+
+    p_draft = jnp.take_along_axis(p[:, :-1], draft[..., None],
+                                  axis=-1)[..., 0]               # (B, T-1)
+    acc_sampled = jax.random.uniform(ku, (B, T - 1)) < p_draft
+    acc_greedy = draft == g[:, :-1]
+    acc = jnp.where(greedy[:, None], acc_greedy, acc_sampled)
+    n_acc = jnp.sum(jnp.cumprod(acc.astype(jnp.int32), axis=1), axis=1)
+
+    # temperature continuation: residual sample at the rejection position,
+    # bonus sample after a fully-accepted window
+    resid = p[:, :-1] * (1.0 - jax.nn.one_hot(draft, V, dtype=p.dtype))
+    resid_tok = jax.random.categorical(
+        kr, jnp.log(jnp.maximum(resid, 1e-30)), axis=-1)         # (B, T-1)
+    bonus_tok = jax.random.categorical(kb, lp[:, -1], axis=-1)   # (B,)
+    idx = jnp.arange(T - 1)[None]
+    cont = jnp.where(idx < n_acc[:, None], draft, resid_tok)
+    out_sampled = jnp.concatenate([cont, bonus_tok[:, None]], axis=1)
+    out = jnp.where(greedy[:, None], g, out_sampled).astype(jnp.int32)
+    return out, n_acc.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# drafters
+# ---------------------------------------------------------------------------
+
+
+class Drafter(abc.ABC):
+    """Draft proposer for the serve engine's speculative decode tick.
+
+    Lifecycle: the engine calls :meth:`bind` once at construction (the
+    drafter sees slot count, capacity, and the target model), then
+    :meth:`admit` / :meth:`release` as requests enter and leave slots, and
+    :meth:`propose` once per verify tick. ``draft_steps`` counts draft
+    model calls (0 for model-free drafters) — the engine surfaces it as
+    the draft-overhead metric.
+    """
+
+    def __init__(self, k: int):
+        if k < 1:
+            raise ValueError(f"draft window k must be >= 1, got {k}")
+        self.k = k
+        self.draft_steps = 0
+
+    def bind(self, engine) -> None:
+        """Called once by the engine before serving starts."""
+
+    def admit(self, slot: int, prompt: Sequence[int]) -> None:
+        """A request entered ``slot`` with this prompt."""
+
+    def release(self, slot: int) -> None:
+        """The request in ``slot`` finished."""
+
+    @abc.abstractmethod
+    def propose(self, histories: Dict[int, Sequence[int]]
+                ) -> Dict[int, List[int]]:
+        """Propose exactly ``k`` continuation tokens per active slot.
+
+        ``histories[slot]`` is the slot's full token stream — prompt plus
+        every committed token, the last being the pending next token whose
+        K/V the coming verify writes first. Short heuristic matches must
+        be padded to ``k`` (padding is just extra rejected positions).
+        """
+
+
+class NgramDrafter(Drafter):
+    """Prompt-lookup decoding: propose what followed the last n-gram.
+
+    For each slot, the longest suffix n-gram (``max_ngram`` down to 1)
+    that reoccurs earlier in the history selects its most recent prior
+    occurrence, and the ``k`` tokens that followed it become the draft
+    (padded by repeating the last token). No model, no state — the whole
+    bet is that generation revisits its own context (quoting, code edits,
+    agent loops).
+    """
+
+    def __init__(self, k: int, *, max_ngram: int = 3):
+        super().__init__(k)
+        if max_ngram < 1:
+            raise ValueError(f"max_ngram must be >= 1, got {max_ngram}")
+        self.max_ngram = max_ngram
+
+    def propose(self, histories):
+        return {slot: self._lookup(list(hist))
+                for slot, hist in histories.items()}
+
+    def _lookup(self, hist: List[int]) -> List[int]:
+        pad = [hist[-1]] * self.k
+        for n in range(min(self.max_ngram, len(hist) - 1), 0, -1):
+            pat = hist[-n:]
+            for start in range(len(hist) - n - 1, -1, -1):
+                if hist[start:start + n] == pat:
+                    cont = hist[start + n:start + n + self.k]
+                    if cont:
+                        return cont + pad[:self.k - len(cont)]
+        return pad
+
+
+class DraftModelDrafter(Drafter):
+    """A small model greedily continuing every slot on its own slot cache.
+
+    The drafter owns a dense slot cache shaped like the engine's
+    (``n_slots × max_len``) and keeps it in sync by *teacher-forcing* the
+    committed tokens each tick before rolling out ``k`` greedy steps.
+    Sync uses the draft model's own verify/commit machinery — a
+    ``verify_step`` over the padded per-slot deltas committed at each
+    slot's true delta length handles heterogeneous lengths exactly, for
+    attention *and* recurrent families alike — and the greedy rollout runs
+    on a throwaway copy of the cache, so speculation never pollutes the
+    synced state. The draft model can be any family with an exact verify
+    (``Model.supports_spec_decode``).
+    """
+
+    def __init__(self, model, params, k: int):
+        super().__init__(k)
+        if not model.supports_spec_decode:
+            raise ValueError(
+                f"draft model family {model.cfg.family!r} has no exact "
+                "multi-token verify, so its state cannot be re-synced "
+                "after a rejected speculation")
+        self.model = model
+        self.params = params
+
+    def bind(self, engine) -> None:
+        from repro.serve.engine import _write_slot  # cycle-free at runtime
+
+        model = self.model
+        self.n_slots, self.max_len = engine.n_slots, engine.max_len
+        self._bucket_for = engine.scheduler.bucket_for
+        cache = model.init_cache(self.n_slots, self.max_len)
+        cache["pos"] = jnp.zeros((self.n_slots,), jnp.int32)
+        self.cache = cache
+        if model.supports_padded_prefill:
+            self._prefill = jax.jit(
+                lambda p, b, pl: model.prefill(p, b, max_len=self.max_len,
+                                               prompt_len=pl))
+        else:
+            self._prefill = jax.jit(
+                lambda p, b: model.prefill(p, b, max_len=self.max_len))
+        self._write = jax.jit(_write_slot, donate_argnums=(0,))
+        # teacher-force sync: verify + commit (no donation on verify — the
+        # rollout snapshot must survive)
+        self._tf = jax.jit(model.verify_step)
+        self._commit = jax.jit(model.commit_verified, donate_argnums=(0,))
+        self._step = jax.jit(self._step_impl, donate_argnums=(0,))
+        self._consumed: Dict[int, int] = {}
+
+    def _step_impl(self, cache, tokens):
+        """One greedy draft decode step."""
+        logits, cache = self.model.decode_step(self.params, cache, tokens)
+        return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), cache
+
+    def admit(self, slot, prompt):
+        p = len(prompt)
+        toks = np.asarray(prompt, np.int32)[None, :]
+        if self.model.supports_padded_prefill:
+            bucket = self._bucket_for(p)
+            padded = np.zeros((1, bucket), np.int32)
+            padded[0, :p] = toks[0]
+            _, pre = self._prefill(self.params, {"tokens": padded},
+                                   jnp.asarray(p, jnp.int32))
+        else:
+            _, pre = self._prefill(self.params, {"tokens": toks})
+        self.cache = self._write(self.cache, pre, slot)
+        self._consumed[slot] = p
+        self.draft_steps += 1
+
+    def release(self, slot):
+        self._consumed.pop(slot, None)
+
+    def propose(self, histories):
+        slots = sorted(histories)
+        hists = {s: list(histories[s]) for s in slots}
+        deltas = {s: hists[s][self._consumed[s]:] for s in slots}
+        B, k = self.n_slots, self.k
+        # teacher-force the committed deltas in one verify window (the
+        # pending next token is always unconsumed, so every active slot
+        # has at least one delta token; padding past a slot's delta is
+        # committed away by its keep count). Fixed k+1 width — a tick
+        # commits at most k accepted drafts + 1 correction — so the
+        # verify compiles exactly once.
+        n_tf = max(max(len(d) for d in deltas.values()), k + 1)
+        tf_toks = np.zeros((B, n_tf), np.int32)
+        keep = np.zeros((B,), np.int32)
+        for s in slots:
+            tf_toks[s, : len(deltas[s])] = deltas[s]
+            keep[s] = len(deltas[s])
+        logits, cache, aux = self._tf(self.params, self.cache,
+                                      jnp.asarray(tf_toks))
+        self.cache = self._commit(cache, jnp.asarray(keep), aux)
+        self.draft_steps += n_tf
+        logits = np.asarray(logits, np.float32)
+        drafts = np.zeros((B, k), np.int32)
+        for s in slots:
+            drafts[s, 0] = int(np.argmax(logits[s, len(deltas[s]) - 1]))
+        # greedy rollout of the remaining k-1 drafts on a throwaway cache
+        # copy — speculation must not pollute the synced state
+        if k > 1:
+            synced = self.cache
+            self.cache = jax.tree.map(jnp.copy, synced)
+            cur = jnp.asarray(drafts[:, 0])
+            for j in range(1, k):
+                cur, self.cache = self._step(self.cache, cur[:, None])
+                drafts[:, j] = np.asarray(cur)
+                self.draft_steps += 1
+            self.cache = synced
+        for s in slots:
+            self._consumed[s] = len(hists[s])
+        return {s: drafts[s].tolist() for s in slots}
+
+
+class OracleDrafter(DraftModelDrafter):
+    """The target model drafting for itself (the accept-rate dial).
+
+    Greedy proposals from the target's own weights match the target's
+    greedy continuation token-for-token, so greedy requests accept every
+    draft — the forced accept-rate-1 configuration the parity tests and
+    the benchmark's upper bound use. ``accept_prob < 1`` independently
+    corrupts each proposed token (off-by-one mod vocab — guaranteed to
+    miss the greedy argmax), sweeping the *measured* accept rate for the
+    "does the gamble pay" curve. Real draft compute is spent either way;
+    this drafter measures the acceptance mechanism, not end-to-end win.
+    """
+
+    def __init__(self, k: int, *, accept_prob: float = 1.0, seed: int = 0):
+        Drafter.__init__(self, k)
+        if not 0.0 <= accept_prob <= 1.0:
+            raise ValueError(f"accept_prob must be in [0, 1], "
+                             f"got {accept_prob}")
+        self.accept_prob = accept_prob
+        self._corrupt_rng = np.random.default_rng(seed)
+
+    def bind(self, engine) -> None:
+        self.model = engine.model
+        self.params = engine.params
+        super().bind(engine)
+
+    def propose(self, histories):
+        out = super().propose(histories)
+        if self.accept_prob >= 1.0:
+            return out
+        vocab = self.model.cfg.vocab
+        for s, toks in out.items():
+            corrupt = self._corrupt_rng.random(self.k) >= self.accept_prob
+            out[s] = [int((t + 1) % vocab) if c else int(t)
+                      for t, c in zip(toks, corrupt)]
+        return out
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def resolve_drafter(spec: str, k: int) -> Drafter:
+    """Build a drafter from a spec string (MOA-registry grammar:
+    ``name?key=val&key=val``).
+
+    ``"ngram"`` / ``"ngram?n=3"`` → :class:`NgramDrafter`;
+    ``"oracle"`` / ``"oracle?accept=0.5&seed=1"`` → :class:`OracleDrafter`.
+    :class:`DraftModelDrafter` needs a built model and parameters, so it
+    has no spec-string form — construct it directly.
+    """
+    name, _, query = spec.partition("?")
+    args: Dict[str, str] = {}
+    if query:
+        for pair in query.split("&"):
+            key, _, val = pair.partition("=")
+            if not key or not val:
+                raise ValueError(f"bad drafter spec {spec!r}")
+            args[key] = val
+    if name == "ngram":
+        drafter = NgramDrafter(k, max_ngram=int(args.pop("n", 3)))
+    elif name == "oracle":
+        drafter = OracleDrafter(k, accept_prob=float(args.pop("accept", 1.0)),
+                                seed=int(args.pop("seed", 0)))
+    else:
+        raise ValueError(f"unknown drafter {name!r} (known: ngram, oracle)")
+    if args:
+        raise ValueError(f"drafter {name!r} got unknown keys "
+                         f"{sorted(args)}")
+    return drafter

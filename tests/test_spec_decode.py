@@ -1,0 +1,431 @@
+"""Speculative decoding: verify-step parity, engine equivalence, drafters,
+acceptance, costing, and the serving-v3 schema.
+
+The load-bearing claims (docs/spec-decode.md):
+
+* ``verify_step`` over a k-token window is **bit-identical** to k
+  sequential ``decode_step`` calls — dense/MoE/hybrid, dense and paged
+  caches, with slots at heterogeneous positions;
+* with a forced accept-rate-1 drafter, speculative greedy decode emits
+  **bit-identical outputs** to plain greedy decode (and with a forced
+  accept-rate-0 drafter too: the rewind path, exercised every tick);
+* temperature requests are deterministic per engine seed;
+* rejection never corrupts state — including recurrent SSM snapshots and
+  paged tentative writes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config, smoke_config
+from repro.launch.costing import (expected_accepted_len,
+                                  spec_break_even_accept, spec_decode_cost)
+from repro.models.api import build_model
+from repro.serve import (DraftModelDrafter, NgramDrafter, OracleDrafter,
+                         Request, Sampler, ServeEngine, poisson_workload,
+                         resolve_drafter, verify_accept)
+from repro.serve.engine import _write_slot
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+_BUILT = {}
+
+
+def _built(arch):
+    """Module-cached (cfg, model, params): params init dominates runtime."""
+    if arch not in _BUILT:
+        cfg = smoke_config(get_config(arch))
+        model = build_model(cfg)
+        _BUILT[arch] = (cfg, model, model.init(jax.random.PRNGKey(0)))
+    return _BUILT[arch]
+
+
+def _staggered_cache(model, cfg, params, rng, *, n_slots=3, max_len=32,
+                     plens=(5, 9, 7)):
+    """Batched dense cache with per-slot prefills of different lengths —
+    the engine's mid-flight shape."""
+    cache = model.init_cache(n_slots, max_len)
+    cache["pos"] = jnp.zeros((n_slots,), jnp.int32)
+    for b, p in enumerate(plens):
+        toks = jax.random.randint(jax.random.fold_in(rng, b), (1, p), 0,
+                                  cfg.vocab)
+        _, pre = model.prefill(params, {"tokens": toks}, max_len=max_len)
+        cache = _write_slot(cache, pre, b)
+    return cache
+
+
+def _workload(cfg, *, n=6, seed=1, temperature=0.0):
+    sampler = Sampler(temperature)
+    return poisson_workload(
+        n_requests=n, rate_rps=100.0, vocab=cfg.vocab,
+        prompt_len_range=(4, 12), gen_len_range=(3, 10), sampler=sampler,
+        seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# verify-step parity: one call vs k sequential decode steps
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "moonshot-v1-16b-a3b",
+                                  "zamba2-1.2b", "mamba2-370m"])
+def test_verify_bitwise_matches_sequential_decode(rng, arch):
+    """verify_step logits at every window position are bit-identical to
+    the corresponding sequential decode_step call, with slots sitting at
+    heterogeneous positions; committing the full window reproduces the
+    sequential cursor."""
+    cfg, model, params = _built(arch)
+    B, T = 3, 4
+    cache = _staggered_cache(model, cfg, params, rng)
+    vtoks = jnp.asarray(jax.random.randint(jax.random.fold_in(rng, 99),
+                                           (B, T), 0, cfg.vocab), jnp.int32)
+    seq_cache = jax.tree.map(lambda a: a, cache)
+    seq_logits = []
+    for i in range(T):
+        lg, seq_cache = model.decode_step(params, seq_cache,
+                                          vtoks[:, i:i + 1])
+        seq_logits.append(np.asarray(lg[:, 0], np.float32))
+    vlogits, vcache, aux = model.verify_step(params, cache, vtoks)
+    np.testing.assert_array_equal(np.stack(seq_logits, axis=1),
+                                  np.asarray(vlogits, np.float32))
+    # pos is untouched until commit; a full-window commit lands exactly on
+    # the sequential cursor
+    np.testing.assert_array_equal(np.asarray(vcache["pos"]),
+                                  np.asarray(cache["pos"]))
+    committed = model.commit_verified(vcache, jnp.full((B,), T, jnp.int32),
+                                      aux)
+    np.testing.assert_array_equal(np.asarray(committed["pos"]),
+                                  np.asarray(seq_cache["pos"]))
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "zamba2-1.2b"])
+def test_verify_rewind_resumes_exactly(rng, arch):
+    """Commit at keep < T, then decode onward: logits match a run that
+    never speculated — the cursor rewind (and, hybrid, the SSM snapshot
+    restore) leaves no trace of the rejected suffix."""
+    cfg, model, params = _built(arch)
+    B, T = 3, 4
+    keep = jnp.asarray([1, 3, 2], jnp.int32)
+    cache = _staggered_cache(model, cfg, params, rng)
+    ref_cache = jax.tree.map(lambda a: a, cache)
+    vtoks = jnp.asarray(jax.random.randint(jax.random.fold_in(rng, 7),
+                                           (B, T), 0, cfg.vocab), jnp.int32)
+    _, vcache, aux = model.verify_step(params, cache, vtoks)
+    rewound = model.commit_verified(vcache, keep, aux)
+    # reference: feed only the kept prefix, sequentially — slots whose
+    # keep ran out freeze at their previous state (per-leaf (B,) select)
+    for i in range(int(jnp.max(keep))):
+        _, stepped = model.decode_step(params, ref_cache, vtoks[:, i:i + 1])
+        mask = np.asarray(keep) > i
+        ref_cache = jax.tree.map(
+            lambda new, old: jnp.where(_mask_for(new, mask), new, old),
+            stepped, ref_cache)
+    next_tok = jnp.asarray(jax.random.randint(jax.random.fold_in(rng, 8),
+                                              (B, 1), 0, cfg.vocab))
+    got, _ = model.decode_step(params, rewound, next_tok)
+    want, _ = model.decode_step(params, ref_cache, next_tok)
+    np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                  np.asarray(want, np.float32))
+
+
+def _mask_for(leaf, mask):
+    """Broadcast a (B,) bool mask onto a cache leaf.
+
+    ``pos`` is ``(B,)``; every other leaf is ``(stack, B, ...)``.
+    """
+    m = jnp.asarray(mask)
+    if leaf.ndim == 1:
+        return m
+    return m.reshape((1, -1) + (1,) * (leaf.ndim - 2))
+
+
+# ---------------------------------------------------------------------------
+# engine equivalence: spec greedy ≡ plain greedy, accept 1 and accept 0
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch,paged", [
+    ("llama3-8b", False), ("llama3-8b", True),
+    ("moonshot-v1-16b-a3b", False),
+    ("zamba2-1.2b", False), ("zamba2-1.2b", True),
+])
+def test_spec_greedy_bit_identical_to_plain(rng, arch, paged):
+    """Acceptance criterion: with the forced accept-rate-1 oracle drafter,
+    speculative greedy decode emits bit-identical outputs to plain greedy
+    decode — dense, MoE, hybrid; dense and paged caches — and at accept
+    rate 1 the engine reports > 1.5 tokens per slot-step."""
+    cfg, model, params = _built(arch)
+    plain = ServeEngine(model, params, n_slots=3, max_len=48, paged=paged,
+                        block_size=8, rng=rng, clock=lambda: 0.0)
+    ref, _ = plain.run(_workload(cfg))
+    spec = ServeEngine(model, params, n_slots=3, max_len=48, paged=paged,
+                       block_size=8, rng=rng, clock=lambda: 0.0,
+                       drafter=OracleDrafter(3))
+    got, report = spec.run(_workload(cfg))
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+    sp = report["spec"]
+    assert sp["accept_rate"] == 1.0
+    assert sp["tokens_per_step"] > 1.5
+    assert sp["verify_ticks"] < sum(r.tokens.size for r in ref)
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "zamba2-1.2b"])
+def test_spec_all_rejected_still_identical(rng, arch):
+    """Accept-rate-0 oracle (every draft corrupted): the rewind path runs
+    every tick and outputs still match plain greedy exactly — rejection
+    rolls back KV rows and recurrent state without a trace."""
+    cfg, model, params = _built(arch)
+    plain = ServeEngine(model, params, n_slots=3, max_len=48, rng=rng,
+                        clock=lambda: 0.0)
+    ref, _ = plain.run(_workload(cfg))
+    spec = ServeEngine(model, params, n_slots=3, max_len=48, rng=rng,
+                       clock=lambda: 0.0,
+                       drafter=OracleDrafter(3, accept_prob=0.0))
+    got, report = spec.run(_workload(cfg))
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+    assert report["spec"]["accept_rate"] == 0.0
+    assert report["spec"]["tokens_per_step"] == pytest.approx(1.0)
+
+
+def test_spec_ngram_drafter_end_to_end(rng):
+    """The ngram drafter never changes greedy outputs (any drafter is
+    output-neutral under greedy acceptance) and the report's histogram
+    accounts for every slot-tick."""
+    cfg, model, params = _built("llama3-8b")
+    plain = ServeEngine(model, params, n_slots=2, max_len=48, rng=rng,
+                        clock=lambda: 0.0)
+    ref, _ = plain.run(_workload(cfg, n=4))
+    spec = ServeEngine(model, params, n_slots=2, max_len=48, rng=rng,
+                       clock=lambda: 0.0,
+                       drafter=resolve_drafter("ngram?n=2", 3))
+    got, report = spec.run(_workload(cfg, n=4))
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+    sp = report["spec"]
+    assert sp["draft_steps"] == 0
+    # histogram counts (slot, tick) pairs: at least one active slot per
+    # tick, at most n_slots
+    assert sp["verify_ticks"] <= sum(sp["accepted_hist"]) \
+        <= sp["verify_ticks"] * 2
+
+
+def test_spec_temperature_deterministic_per_seed(rng):
+    """Seeded temperature spec decode reproduces itself exactly (all
+    randomness flows through the engine key) and differs from greedy."""
+    cfg, model, params = _built("llama3-8b")
+
+    def run_once():
+        engine = ServeEngine(model, params, n_slots=2, max_len=48,
+                             rng=jax.random.PRNGKey(3), clock=lambda: 0.0,
+                             drafter=OracleDrafter(2, accept_prob=0.5))
+        return engine.run(_workload(cfg, n=4, temperature=0.8))
+
+    r1, rep1 = run_once()
+    r2, rep2 = run_once()
+    for a, b in zip(r1, r2):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+    assert rep1["spec"]["accepted_hist"] == rep2["spec"]["accepted_hist"]
+
+
+def test_spec_draft_model_drafter_is_oracle_for_same_model(rng):
+    """DraftModelDrafter pointed at the target model itself behaves as a
+    perfect drafter (greedy proposals == target greedy) — accept rate 1."""
+    cfg, model, params = _built("llama3-8b")
+    drafter = DraftModelDrafter(model, params, 2)
+    engine = ServeEngine(model, params, n_slots=2, max_len=48, rng=rng,
+                         clock=lambda: 0.0, drafter=drafter)
+    _, report = engine.run(_workload(cfg, n=4))
+    assert report["spec"]["accept_rate"] == 1.0
+    assert report["spec"]["draft_steps"] > 0
+
+
+def test_spec_moa_flops_acceptance_aware(rng):
+    """Per-request moa_flops prices the verify work actually spent:
+    rejected drafts are compute, so the accept-0 run costs strictly more
+    FLOPs than both the accept-1 run and the plain run (same outputs)."""
+    cfg, model, params = _built("llama3-8b")
+
+    def total_flops(drafter):
+        engine = ServeEngine(model, params, n_slots=2, max_len=48, rng=rng,
+                             clock=lambda: 0.0, drafter=drafter)
+        _, report = engine.run(_workload(cfg, n=4))
+        return report["moa_flops_total"]
+
+    plain_engine = ServeEngine(model, params, n_slots=2, max_len=48,
+                               rng=rng, clock=lambda: 0.0)
+    _, plain_report = plain_engine.run(_workload(cfg, n=4))
+    at_one = total_flops(OracleDrafter(3))
+    at_zero = total_flops(OracleDrafter(3, accept_prob=0.0))
+    assert at_zero > at_one
+    assert at_zero > plain_report["moa_flops_total"]
+
+
+# ---------------------------------------------------------------------------
+# scheduler margin + gating
+# ---------------------------------------------------------------------------
+
+
+def test_spec_margin_tightens_admission(rng):
+    """Invariant 3 with spec margin: a request that fits plain mode is
+    rejected when prompt + max_new + k would overflow the slot."""
+    cfg, model, params = _built("llama3-8b")
+    engine = ServeEngine(model, params, n_slots=1, max_len=16, rng=rng,
+                         clock=lambda: 0.0, drafter=OracleDrafter(3))
+    ok = Request(uid=0, prompt=(1, 2, 3, 4), max_new_tokens=9)
+    engine.submit(ok)
+    with pytest.raises(ValueError, match="spec_margin"):
+        engine.submit(Request(uid=1, prompt=(1, 2, 3, 4),
+                              max_new_tokens=10))
+
+
+def test_spec_rejects_unverifiable_family(rng):
+    """Capacity-limited MoE has no exact multi-token verify."""
+    import dataclasses
+    cfg, model, params = _built("moonshot-v1-16b-a3b")
+    tight = dataclasses.replace(cfg, capacity_factor=1.0)
+    tight_model = build_model(tight)
+    assert not tight_model.supports_spec_decode
+    with pytest.raises(ValueError, match="verify"):
+        ServeEngine(tight_model, params, n_slots=2, max_len=48,
+                    drafter=OracleDrafter(2))
+
+
+# ---------------------------------------------------------------------------
+# acceptance rule
+# ---------------------------------------------------------------------------
+
+
+def _logits_for(targets, vocab, peak=50.0):
+    """(B, T) target ids → logits strongly peaked on them."""
+    return peak * jax.nn.one_hot(jnp.asarray(targets), vocab)
+
+
+def test_verify_accept_greedy_prefix():
+    """Greedy rows accept exactly the matching prefix and emit the argmax
+    sequence: accepted drafts, then the correction token."""
+    vocab, B, T = 11, 2, 4
+    g = jnp.asarray([[1, 2, 3, 4], [5, 6, 7, 8]])
+    logits = _logits_for(g, vocab)
+    draft = jnp.asarray([[1, 2, 9], [9, 6, 7]])     # row0: 2 accepted
+    out, n_acc = verify_accept(
+        logits, draft, jnp.zeros((B,), jnp.float32),
+        jnp.ones((B,), bool), jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(n_acc), [2, 0])
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(g))
+
+
+def test_verify_accept_temperature_degenerate():
+    """With the target distribution collapsed onto single tokens,
+    temperature acceptance is forced: matching drafts are accepted with
+    probability ~1, mismatching ones rejected with the residual sample
+    equal to the target token."""
+    vocab, B = 7, 2
+    g = jnp.asarray([[1, 2, 3], [4, 5, 6]])
+    logits = _logits_for(g, vocab, peak=200.0)
+    draft = jnp.asarray([[1, 2], [0, 5]])           # row1 rejects at 0
+    out, n_acc = verify_accept(
+        logits, draft, jnp.full((B,), 0.7, jnp.float32),
+        jnp.zeros((B,), bool), jax.random.PRNGKey(1))
+    np.testing.assert_array_equal(np.asarray(n_acc), [2, 0])
+    # row0 fully accepted: drafts then bonus (= argmax under the
+    # collapsed distribution); row1: residual at position 0 must be the
+    # target token (all other mass is ~0)
+    np.testing.assert_array_equal(np.asarray(out[0]), [1, 2, 3])
+    assert int(out[1, 0]) == 4
+
+
+def test_ngram_drafter_lookup_and_fallback():
+    d = NgramDrafter(3, max_ngram=2)
+    # "...7 8 9 ... 7 8" → propose what followed [7, 8] last time: 9, 1, 2
+    hist = [7, 8, 9, 1, 2, 3, 7, 8]
+    assert d.propose({0: hist})[0] == [9, 1, 2]
+    # no repeat anywhere: pad with the last token
+    assert d.propose({1: [1, 2, 3]})[1] == [3, 3, 3]
+
+
+def test_resolve_drafter_specs():
+    assert isinstance(resolve_drafter("ngram?n=2", 3), NgramDrafter)
+    oracle = resolve_drafter("oracle?accept=0.25&seed=7", 2)
+    assert isinstance(oracle, OracleDrafter)
+    assert oracle.accept_prob == 0.25
+    with pytest.raises(ValueError, match="unknown drafter"):
+        resolve_drafter("mystery", 2)
+    with pytest.raises(ValueError, match="unknown keys"):
+        resolve_drafter("ngram?depth=2", 2)
+
+
+# ---------------------------------------------------------------------------
+# acceptance-aware costing
+# ---------------------------------------------------------------------------
+
+
+def test_expected_accepted_len_bounds():
+    assert expected_accepted_len(3, 1.0) == 3.0
+    assert expected_accepted_len(3, 0.0) == 0.0
+    assert expected_accepted_len(4, 0.5) == pytest.approx(
+        0.5 + 0.25 + 0.125 + 0.0625)
+
+
+def test_spec_decode_cost_shape():
+    """FLOPs overhead ≥ 1 always; tokens/step monotone in accept prob;
+    free drafter's speedup equals the emitted-token count."""
+    cfg = smoke_config(get_config("llama3-8b"))
+    prev = 0.0
+    for a in (0.0, 0.5, 1.0):
+        c = spec_decode_cost(cfg, k=3, accept_prob=a, s_attn=64)
+        assert c["flops_overhead"] >= 1.0 - 1e-9
+        assert c["expected_tokens_per_step"] >= prev
+        assert c["step_speedup"] == pytest.approx(
+            c["expected_tokens_per_step"])
+        prev = c["expected_tokens_per_step"]
+    at_one = spec_decode_cost(cfg, k=3, accept_prob=1.0, s_attn=64)
+    assert at_one["flops_overhead"] == pytest.approx(1.0)
+    # a costly draft model needs a real accept rate to pay; a free
+    # drafter breaks even immediately (within the bisection tolerance —
+    # at a = 0 exactly, the gamble is a wash, not a win)
+    assert spec_break_even_accept(cfg, k=3, s_attn=64, draft_cfg=cfg) > 0.01
+    assert spec_break_even_accept(cfg, k=3, s_attn=64) <= 1e-3
+
+
+# ---------------------------------------------------------------------------
+# serving-v3 record + schema
+# ---------------------------------------------------------------------------
+
+
+def test_serving_v3_record_validates(rng):
+    """The --spec-decode benchmark emits a schema-valid serving-v3 record
+    and its accept-1 point clears the ≥1.5× tokens-per-step bar."""
+    import importlib.util
+    import pathlib
+    import sys as _sys
+
+    from benchmarks.serving import run_spec
+
+    record = run_spec(requests=5, rate_rps=100.0, slots=2, max_len=48,
+                      spec_k=3, accept_probs=(1.0, 0.0),
+                      prompt_len_range=(4, 10), gen_len_range=(4, 10),
+                      warmup=False)
+    assert record["schema"] == "serving-v3"
+    assert record["comparison"]["tokens_per_step_plain"] == pytest.approx(
+        1.0)
+    at_one = record["comparison"]["curve"][0]
+    assert at_one["accept_prob"] == 1.0
+    assert at_one["tokens_per_step"] >= 1.5
+    assert at_one["speedup_vs_plain"] >= 1.5
+
+    root = pathlib.Path(__file__).resolve().parents[1]
+    spec_path = root / "scripts" / "check_bench_schema.py"
+    spec = importlib.util.spec_from_file_location("check_bench_schema",
+                                                  spec_path)
+    mod = importlib.util.module_from_spec(spec)
+    _sys.modules["check_bench_schema"] = mod
+    spec.loader.exec_module(mod)
+    assert mod.validate(record) == []
