@@ -1,7 +1,7 @@
 """Serving benchmark: continuous-batching engine under a Poisson workload,
 JSON results (the BENCH trajectory's machine-readable record).
 
-Two record schemas (both validated by ``scripts/check_bench_schema.py``):
+Record schemas (all validated by ``scripts/check_bench_schema.py``):
 
 * ``serving-v1`` (default): one engine run — run configuration,
   per-request records (TTFT ms, per-token latency ms, tok/s,
@@ -18,11 +18,21 @@ Two record schemas (both validated by ``scripts/check_bench_schema.py``):
   the acceptance-aware cost-model prediction alongside each measured
   point (docs/spec-decode.md).
 
+* ``serving-v4`` (``--mesh DxM``): the same workload through a
+  single-device engine and a **mesh-sharded** engine (params
+  tensor-parallel, KV cache sharded over slots and heads, per
+  ``docs/sharded-serving.md``) — per-axis mesh shape, tok/s and TTFT side
+  by side, plus a greedy token-parity bit (the sharded mapping validated
+  on the actual device topology, the paper's core lesson). On CPU the
+  mesh runs on XLA host-platform devices.
+
   PYTHONPATH=src python -m benchmarks.serving --smoke --json out.json
   PYTHONPATH=src python -m benchmarks.serving --smoke --paged \
       --shared-prefix --block-size 8 --json paged.json
   PYTHONPATH=src python -m benchmarks.serving --smoke --spec-decode \
       --spec-k 3 --json spec.json
+  PYTHONPATH=src python -m benchmarks.serving --smoke --mesh 2x4 \
+      --json sharded.json
 """
 
 from __future__ import annotations
@@ -32,9 +42,11 @@ import json
 import sys
 
 import jax
+import numpy as np
 
 from repro.configs.registry import get_config, smoke_config
 from repro.launch.costing import spec_decode_cost
+from repro.launch.mesh import ensure_host_devices, make_mesh, parse_mesh
 from repro.models.api import build_model
 from repro.serve import (GREEDY, OracleDrafter, Sampler, ServeEngine,
                          poisson_workload, shared_prefix_workload)
@@ -75,7 +87,10 @@ def run(*, arch: str = "llama3-8b", smoke: bool = True, requests: int = 8,
 
     ``warmup`` replays the same workload once unmeasured first, so XLA
     compilation of each prefill bucket and the decode step lands outside
-    the measured TTFT / per-token distributions.
+    the measured TTFT / per-token distributions; the measured run also
+    executes the engine's warmup tick, so any residual compile time is
+    reported as ``aggregate.compile_s`` instead of folding into
+    ``wall_s``.
     """
     cfg, model = _build(arch, smoke)
     rng = jax.random.PRNGKey(seed)
@@ -89,7 +104,7 @@ def run(*, arch: str = "llama3-8b", smoke: bool = True, requests: int = 8,
         gen_len_range=gen_len_range, temperature=temperature, seed=seed)
     if warmup:
         engine.run(make_workload())
-    results, report = engine.run(make_workload())
+    results, report = engine.run(make_workload(), warmup=warmup)
     return {
         "schema": "serving-v1",
         "config": {
@@ -141,7 +156,7 @@ def run_paged(*, arch: str = "llama3-8b", smoke: bool = True,
             # once admissions start hitting the warm trie
             for _ in range(2 if mode == "paged" else 1):
                 engine.run(make_workload())
-        results, report = engine.run(make_workload())
+        results, report = engine.run(make_workload(), warmup=warmup)
         runs[mode] = {"requests": [r.to_json() for r in results],
                       "aggregate": report}
     paged_agg = runs["paged"]["aggregate"]
@@ -218,7 +233,8 @@ def run_spec(*, arch: str = "llama3-8b", smoke: bool = True,
                          rng=rng)
     if warmup:
         engine.run(make_workload())
-    plain_results, plain_report = engine.run(make_workload())
+    plain_results, plain_report = engine.run(make_workload(),
+                                             warmup=warmup)
     plain = {"requests": [r.to_json() for r in plain_results],
              "aggregate": plain_report}
     plain_tps = _slot_norm_tokens_per_step(plain_report)
@@ -231,7 +247,7 @@ def run_spec(*, arch: str = "llama3-8b", smoke: bool = True,
             drafter=OracleDrafter(spec_k, accept_prob=accept, seed=seed))
         if warmup:
             engine.run(make_workload())
-        results, report = engine.run(make_workload())
+        results, report = engine.run(make_workload(), warmup=warmup)
         spec_runs.append({"accept_prob": accept,
                           "requests": [r.to_json() for r in results],
                           "aggregate": report})
@@ -273,6 +289,80 @@ def run_spec(*, arch: str = "llama3-8b", smoke: bool = True,
     }
 
 
+def run_sharded(*, arch: str = "llama3-8b", smoke: bool = True,
+                requests: int = 8, rate_rps: float = 50.0, slots: int = 4,
+                max_len: int = 96, mesh_shape=(2, 4),
+                prompt_len_range=(4, 24), gen_len_range=(2, 12),
+                temperature: float = 0.0, seed: int = 0,
+                warmup: bool = True) -> dict:
+    """Single-device vs mesh-sharded engine on one workload; ``serving-v4``.
+
+    The sharded engine places the parameters tensor-parallel and the KV
+    cache slot/head-sharded (``docs/sharded-serving.md``); both engines
+    serve the identical request stream, so the comparison isolates the
+    device mapping: tok/s and TTFT per topology, plus
+    ``greedy_tokens_match`` — the bit-identical-output check that the
+    paper's "validate the mapping on the device" lesson demands. The mesh
+    must already be satisfiable by the visible devices (the CLI requests
+    XLA host-platform devices before jax initializes).
+    """
+    cfg, model = _build(arch, smoke)
+    rng = jax.random.PRNGKey(seed)
+    params = model.init(rng)
+    make_workload = _workload_factory(
+        cfg, requests=requests, rate_rps=rate_rps, shared_prefix=False,
+        prefix_len=0, n_prefixes=1, prompt_len_range=prompt_len_range,
+        gen_len_range=gen_len_range, temperature=temperature, seed=seed)
+    mesh = make_mesh(tuple(mesh_shape))
+    runs = {}
+    for mode, m in (("single", None), ("sharded", mesh)):
+        engine = ServeEngine(model, params, n_slots=slots, max_len=max_len,
+                             rng=rng, mesh=m)
+        if warmup:
+            engine.run(make_workload())
+        results, report = engine.run(make_workload(), warmup=warmup)
+        runs[mode] = {"results": results,
+                      "requests": [r.to_json() for r in results],
+                      "aggregate": report}
+    single_agg = runs["single"]["aggregate"]
+    shard_agg = runs["sharded"]["aggregate"]
+    tokens_match = all(
+        np.array_equal(a.tokens, b.tokens)
+        for a, b in zip(runs["single"]["results"],
+                        runs["sharded"]["results"]))
+    for mode in runs:
+        del runs[mode]["results"]
+    return {
+        "schema": "serving-v4",
+        "config": {
+            "arch": cfg.name, "family": cfg.family, "smoke": smoke,
+            "moa": cfg.moa_strategy.spec, "n_slots": slots,
+            "max_len": max_len, "requests": requests, "rate_rps": rate_rps,
+            "prompt_len_range": list(prompt_len_range),
+            "gen_len_range": list(gen_len_range),
+            "temperature": temperature, "seed": seed, "warmup": warmup,
+            "mesh": {
+                "shape": [int(s) for s in mesh.devices.shape],
+                "axes": list(mesh.axis_names),
+                "n_devices": int(mesh.devices.size),
+            },
+        },
+        "single": runs["single"],
+        "sharded": runs["sharded"],
+        "comparison": {
+            "greedy_tokens_match": bool(tokens_match),
+            "tok_per_s_single": single_agg["tok_per_s"],
+            "tok_per_s_sharded": shard_agg["tok_per_s"],
+            "sharded_speedup": shard_agg["tok_per_s"]
+                / max(single_agg["tok_per_s"], 1e-9),
+            "ttft_p50_ms_single": single_agg["ttft_ms"]["p50"],
+            "ttft_p50_ms_sharded": shard_agg["ttft_ms"]["p50"],
+            "compile_s_single": single_agg["compile_s"],
+            "compile_s_sharded": shard_agg["compile_s"],
+        },
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(
         description="Continuous-batching serving benchmark (JSON output)")
@@ -286,6 +376,10 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--paged", action="store_true",
                     help="run the dense-vs-paged comparison (serving-v2)")
+    ap.add_argument("--mesh", default="",
+                    help="run the single-vs-sharded comparison on a DxM "
+                         "device mesh, e.g. 2x4 (serving-v4; see "
+                         "docs/sharded-serving.md)")
     ap.add_argument("--spec-decode", action="store_true",
                     help="run the plain-vs-speculative accept-rate sweep "
                          "(serving-v3; see docs/spec-decode.md)")
@@ -311,18 +405,24 @@ def main(argv=None):
                     help="write the JSON record here (default: stdout)")
     args = ap.parse_args(argv)
 
-    if args.paged and args.spec_decode:
-        raise SystemExit("--paged and --spec-decode are separate "
-                         "comparisons; run them as two records")
-    if args.spec_decode and args.shared_prefix:
-        raise SystemExit("--spec-decode sweeps the plain Poisson workload; "
-                         "--shared-prefix belongs to the --paged "
+    if sum(map(bool, (args.paged, args.spec_decode, args.mesh))) > 1:
+        raise SystemExit("--paged, --spec-decode and --mesh are separate "
+                         "comparisons; run them as separate records")
+    if (args.spec_decode or args.mesh) and args.shared_prefix:
+        raise SystemExit("--spec-decode and --mesh use the plain Poisson "
+                         "workload; --shared-prefix belongs to the --paged "
                          "comparison")
     common = dict(arch=args.arch, smoke=args.smoke, requests=args.requests,
                   rate_rps=args.rate, slots=args.slots, max_len=args.max_len,
                   temperature=args.temperature, seed=args.seed,
                   warmup=not args.no_warmup)
-    if args.spec_decode:
+    if args.mesh:
+        # must run before jax initializes its backends: XLA locks the
+        # host-platform device count at first init
+        shape = parse_mesh(args.mesh)
+        ensure_host_devices(shape)
+        record = run_sharded(mesh_shape=shape, **common)
+    elif args.spec_decode:
         record = run_spec(spec_k=args.spec_k,
                           accept_probs=tuple(
                               float(a) for a in
@@ -341,7 +441,17 @@ def main(argv=None):
     if args.json:
         with open(args.json, "w") as f:
             f.write(text + "\n")
-        if record["schema"] == "serving-v3":
+        if record["schema"] == "serving-v4":
+            c = record["comparison"]
+            m = record["config"]["mesh"]
+            axes = "x".join(str(s) for s in m["shape"])
+            print(f"[bench] wrote {args.json}: serving-v4, mesh {axes} "
+                  f"({m['n_devices']} devices), tok/s "
+                  f"single={c['tok_per_s_single']:.1f} "
+                  f"sharded={c['tok_per_s_sharded']:.1f}, greedy tokens "
+                  f"{'MATCH' if c['greedy_tokens_match'] else 'DIVERGE'}",
+                  file=sys.stderr)
+        elif record["schema"] == "serving-v3":
             c = record["comparison"]
             pts = ", ".join(
                 f"a={p['accept_prob']:.2f}:{p['tokens_per_step']:.2f}"

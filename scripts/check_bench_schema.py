@@ -1,6 +1,6 @@
 #!/usr/bin/env python3
 """Validate serving benchmark JSON records (``serving-v1`` / ``serving-v2``
-/ ``serving-v3``).
+/ ``serving-v3`` / ``serving-v4``).
 
 Stdlib-only (runs in CI without extra deps). Checks required keys and
 value types — extra keys are allowed (schemas grow forward-compatibly),
@@ -30,9 +30,9 @@ _REQUEST = {
 
 _AGGREGATE = {
     "n_requests": int, "n_slots": int, "decode_steps": int, "wall_s": NUM,
-    "total_new_tokens": int, "tok_per_s": NUM, "ttft_ms": _DIST,
-    "per_token_ms": _DIST, "slot_occupancy": NUM, "moa_flops_total": NUM,
-    "slot_reuse": int, "arch": STR, "moa": STR,
+    "compile_s": NUM, "total_new_tokens": int, "tok_per_s": NUM,
+    "ttft_ms": _DIST, "per_token_ms": _DIST, "slot_occupancy": NUM,
+    "moa_flops_total": NUM, "slot_reuse": int, "arch": STR, "moa": STR,
 }
 
 _PAGED_AGGREGATE = {
@@ -75,6 +75,16 @@ _SPEC_POINT = {
 _SPEC_COMPARISON = {
     "tokens_per_step_plain": NUM, "ttft_p50_ms_plain": NUM,
     "best_tokens_per_step": NUM, "best_accept_prob": NUM,
+}
+
+_CONFIG_V4 = dict(_CONFIG_V1,
+                  mesh={"shape": list, "axes": list, "n_devices": int})
+
+_V4_COMPARISON = {
+    "greedy_tokens_match": bool, "tok_per_s_single": NUM,
+    "tok_per_s_sharded": NUM, "sharded_speedup": NUM,
+    "ttft_p50_ms_single": NUM, "ttft_p50_ms_sharded": NUM,
+    "compile_s_single": NUM, "compile_s_sharded": NUM,
 }
 
 
@@ -149,9 +159,24 @@ def validate(record: dict) -> list:
         else:
             for i, pt in enumerate(curve):
                 _check(pt, _SPEC_POINT, f"$.comparison.curve[{i}]", errors)
+    elif schema == "serving-v4":
+        _check(record, {"config": _CONFIG_V4,
+                        "comparison": _V4_COMPARISON}, "$", errors)
+        for mode in ("single", "sharded"):
+            _check_run(record.get(mode, {}), f"$.{mode}", errors)
+        mesh = record.get("config", {}).get("mesh", {})
+        if isinstance(mesh, dict):
+            shape, n = mesh.get("shape"), mesh.get("n_devices")
+            if isinstance(shape, list) and isinstance(n, int):
+                prod = 1
+                for s in shape:
+                    prod *= s if isinstance(s, int) else 0
+                if prod != n:
+                    errors.append("$.config.mesh: shape does not multiply "
+                                  f"to n_devices ({shape} vs {n})")
     else:
-        errors.append(f"$.schema: unknown schema {schema!r} "
-                      "(expected serving-v1, serving-v2 or serving-v3)")
+        errors.append(f"$.schema: unknown schema {schema!r} (expected "
+                      "serving-v1, serving-v2, serving-v3 or serving-v4)")
     return errors
 
 

@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.configs.base import ShapeSpec
 from repro.configs.registry import get_config, smoke_config
+from repro.launch.mesh import ensure_host_devices, make_mesh, parse_mesh
 from repro.models.api import build_model
 from repro.serve import (GREEDY, Sampler, ServeEngine, poisson_workload,
                          resolve_drafter)
@@ -122,18 +123,24 @@ def _run_engine(args):
         max_len += args.block_size - max_len % args.block_size
     drafter = resolve_drafter(args.drafter, args.spec_k) \
         if args.spec_decode else None
+    mesh = make_mesh(parse_mesh(args.mesh)) if args.mesh else None
     engine = ServeEngine(model, params, n_slots=args.slots, max_len=max_len,
                          paged=args.paged, block_size=args.block_size,
                          n_blocks=args.blocks or None, rng=rng,
-                         drafter=drafter)
+                         drafter=drafter, mesh=mesh)
     requests = poisson_workload(
         n_requests=args.requests, vocab=cfg.vocab, rate_rps=args.rate,
         prompt_len_range=(min(4, args.prompt_len), args.prompt_len),
         gen_len_range=(min(2, args.gen_len), args.gen_len),
         sampler=_sampler(args), seed=args.seed)
-    results, report = engine.run(requests)
+    results, report = engine.run(requests, warmup=not args.no_warmup)
     print(f"[serve] arch={cfg.name} slots={args.slots} max_len={max_len} "
           f"requests={args.requests} rate={args.rate}/s")
+    if mesh is not None:
+        axes = ", ".join(f"{a}={s}" for a, s in
+                         zip(mesh.axis_names, mesh.devices.shape))
+        print(f"[serve] mesh: ({axes}) over {mesh.devices.size} devices, "
+              f"family rules for {cfg.family!r} (docs/sharded-serving.md)")
     for r in results:
         m = r.metrics
         print(f"[serve]   req {r.uid}: slot={r.slot} prompt={r.prompt_len} "
@@ -143,7 +150,9 @@ def _run_engine(args):
           f"ttft p50={report['ttft_ms']['p50']:.0f}ms "
           f"p95={report['ttft_ms']['p95']:.0f}ms, "
           f"occupancy={report['slot_occupancy']:.2f}, "
-          f"slot_reuse={report['slot_reuse']}")
+          f"slot_reuse={report['slot_reuse']}, "
+          f"warmup compile={report['compile_s']*1e3:.0f}ms (kept out of "
+          f"wall_s)")
     if args.spec_decode:
         sp = report["spec"]
         print(f"[serve] spec: drafter={args.drafter} k={sp['k']}, "
@@ -204,12 +213,24 @@ def main():
     ap.add_argument("--spec-k", type=int, default=3,
                     help="[engine --spec-decode] draft tokens per verify "
                          "window")
+    ap.add_argument("--mesh", default="",
+                    help="[engine] run sharded on a DxM device mesh (e.g. "
+                         "2x4): params tensor-parallel, KV cache sharded "
+                         "over slots/heads (docs/sharded-serving.md). On "
+                         "CPU the devices are XLA host-platform devices")
+    ap.add_argument("--no-warmup", action="store_true",
+                    help="[engine] skip the unmeasured warmup tick "
+                         "(first-call XLA compile time then lands in "
+                         "wall_s instead of compile_s)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature (0 = greedy)")
     ap.add_argument("--greedy", action="store_true",
                     help="force greedy decode regardless of --temperature")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.mesh:
+        # before any backend touch: XLA locks device count at first init
+        ensure_host_devices(parse_mesh(args.mesh))
     if args.static:
         _run_static(args)
     else:

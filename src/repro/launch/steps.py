@@ -24,7 +24,8 @@ from repro.models.api import Model
 from repro.optim import (AdamWConfig, adamw_init, adamw_update,
                          compressed_gradients, cosine_schedule,
                          init_error_feedback)
-from repro.parallel import ShardingRules, logical_to_spec
+from repro.parallel import (ShardingRules, logical_to_spec,
+                            replicate_uneven_kv_heads)
 
 __all__ = [
     "infer_param_axes", "build_shardings", "batch_specs", "cache_specs",
@@ -238,7 +239,12 @@ def rules_for(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
         batch_ways *= axis_sizes.get(a, 1)
     if shape.phase == "decode" and shape.global_batch < batch_ways:
         rules = rules.with_overrides(batch=None, kv_seq="data", seq=None)
-    return rules
+    # the decode path's in-flight cache constraints
+    # (attention._constrain_cache) would pin an uneven kv-head sharding
+    # (GQA kv < model axis) against GSPMD's padded choice and trigger full
+    # rematerialization copies — replicate the cache head axis instead
+    # (the input-side _CACHE_TABLE sharding is divisibility-dropped too)
+    return replicate_uneven_kv_heads(rules, cfg.n_kv_heads, mesh)
 
 
 # ---------------------------------------------------------------------------

@@ -24,6 +24,7 @@ from jax import lax
 
 from repro.layers.common import Params, dense_init
 from repro.layers.rope import apply_rope
+from repro.parallel import constrain
 
 __all__ = [
     "init_attention", "attention_forward", "attention_decode",
@@ -206,8 +207,6 @@ def attention_forward(params: Params, x, *, positions, n_heads: int,
     the Megatron attn-out all-reduce (which moves the full activation
     twice) — the §Perf collective lever for attention-heavy cells.
     """
-    from repro.parallel import constrain
-
     B, S, _ = x.shape
     q, k, v = _project_qkv(params, x, n_heads=n_heads, n_kv_heads=n_kv_heads,
                            head_dim=head_dim, compute_dtype=compute_dtype,
@@ -229,6 +228,37 @@ def attention_forward(params: Params, x, *, positions, n_heads: int,
                     strategy=strategy, compute_dtype=compute_dtype)
 
 
+def _constrain_cache(cache: Params) -> Params:
+    """Pin a dense ``(batch, seq, heads, dim)`` KV cache's layout under an
+    active sharding context (no-op otherwise): slots on the data axis, KV
+    heads on the model axis. Scatter updates route through this so the
+    donated cache buffer's sharding never drifts between decode steps
+    (docs/sharded-serving.md)."""
+    out = dict(cache)
+    for key in ("k", "v"):
+        out[key] = constrain(out[key], "batch", "kv_seq",
+                             "kv_heads_cache", "head_dim")
+    for key in ("k_scale", "v_scale"):
+        if key in out:
+            out[key] = constrain(out[key], "batch", "scale_seq",
+                                 "kv_heads_cache")
+    return out
+
+
+def _constrain_pool(pool: Params) -> Params:
+    """Paged twin of :func:`_constrain_cache`: the physical block axis is
+    shared across slots (replicated — block tables are logical), only the
+    head dimension shards."""
+    out = dict(pool)
+    for key in ("k", "v"):
+        out[key] = constrain(out[key], None, None,
+                             "kv_heads_cache", "head_dim")
+    for key in ("k_scale", "v_scale"):
+        if key in out:
+            out[key] = constrain(out[key], None, None, "kv_heads_cache")
+    return out
+
+
 def init_kv_cache(batch: int, max_len: int, n_kv_heads: int, head_dim: int,
                   dtype=jnp.bfloat16) -> Params:
     """KV cache; ``dtype=int8`` stores quantized K/V with per-(pos, head)
@@ -243,7 +273,7 @@ def init_kv_cache(batch: int, max_len: int, n_kv_heads: int, head_dim: int,
                                      jnp.float32)
         cache["v_scale"] = jnp.zeros((batch, max_len, n_kv_heads),
                                      jnp.float32)
-    return cache
+    return _constrain_cache(cache)
 
 
 def init_kv_pool(n_phys_blocks: int, block_size: int, n_kv_heads: int,
@@ -252,7 +282,9 @@ def init_kv_pool(n_phys_blocks: int, block_size: int, n_kv_heads: int,
     per-slot region. Same leaf set as :func:`init_kv_cache` with the
     sequence axis factored into ``(n_phys_blocks, block_size)``; physical
     block 0 is the engine's write-trash page (see
-    :mod:`repro.serve.kv_pool`)."""
+    :mod:`repro.serve.kv_pool`). The head dimension is constrained so a
+    mesh-backed engine materializes the pool model-axis-sharded from the
+    start."""
     pool = {
         "k": jnp.zeros((n_phys_blocks, block_size, n_kv_heads, head_dim),
                        dtype),
@@ -264,7 +296,7 @@ def init_kv_pool(n_phys_blocks: int, block_size: int, n_kv_heads: int,
                                     jnp.float32)
         pool["v_scale"] = jnp.zeros((n_phys_blocks, block_size, n_kv_heads),
                                     jnp.float32)
-    return pool
+    return _constrain_pool(pool)
 
 
 def quantize_kv(x):
@@ -317,13 +349,16 @@ def attention_decode(params: Params, x, cache: Params, pos, *, n_heads: int,
         new_cache["v"] = write(cache["v"], vq)
         new_cache["k_scale"] = write(cache["k_scale"], ks)
         new_cache["v_scale"] = write(cache["v_scale"], vs)
+        new_cache = _constrain_cache(new_cache)
         k_cache = dequantize_kv(new_cache["k"], new_cache["k_scale"],
                                 compute_dtype)
         v_cache = dequantize_kv(new_cache["v"], new_cache["v_scale"],
                                 compute_dtype)
     else:
-        new_cache["k"] = k_cache = write(cache["k"], k_new)
-        new_cache["v"] = v_cache = write(cache["v"], v_new)
+        new_cache["k"] = write(cache["k"], k_new)
+        new_cache["v"] = write(cache["v"], v_new)
+        new_cache = _constrain_cache(new_cache)
+        k_cache, v_cache = new_cache["k"], new_cache["v"]
 
     kv_len = pos + 1
     o = full_attention(q, k_cache, v_cache, causal=False, kv_len=kv_len)
@@ -387,13 +422,16 @@ def attention_verify(params: Params, x, cache: Params, pos, *, n_heads: int,
         new_cache["v"] = write(cache["v"], vq)
         new_cache["k_scale"] = write(cache["k_scale"], ks)
         new_cache["v_scale"] = write(cache["v_scale"], vs)
+        new_cache = _constrain_cache(new_cache)
         k_cache = dequantize_kv(new_cache["k"], new_cache["k_scale"],
                                 compute_dtype)
         v_cache = dequantize_kv(new_cache["v"], new_cache["v_scale"],
                                 compute_dtype)
     else:
-        new_cache["k"] = k_cache = write(cache["k"], k_new)
-        new_cache["v"] = v_cache = write(cache["v"], v_new)
+        new_cache["k"] = write(cache["k"], k_new)
+        new_cache["v"] = write(cache["v"], v_new)
+        new_cache = _constrain_cache(new_cache)
+        k_cache, v_cache = new_cache["k"], new_cache["v"]
 
     o = full_attention(q, k_cache, v_cache, causal=True, positions_q=pos_q)
     o = o.reshape(B, T, n_heads * head_dim)
@@ -451,6 +489,7 @@ def attention_verify_paged(params: Params, x, pool: Params, block_tables,
     else:
         new_pool["k"] = write(pool["k"], k_new)
         new_pool["v"] = write(pool["v"], v_new)
+    new_pool = _constrain_pool(new_pool)
 
     k_cache, v_cache = gather_paged_kv(new_pool, block_tables, compute_dtype)
     o = full_attention(q, k_cache, v_cache, causal=True, positions_q=pos_q)
@@ -486,6 +525,10 @@ def gather_paged_kv(pool: Params, block_tables, dtype=jnp.bfloat16):
     if "k_scale" in pool:
         k = dequantize_kv(k, flat("k_scale"), dtype)
         v = dequantize_kv(v, flat("v_scale"), dtype)
+    # the gathered logical view carries the dense-slot layout: slots over
+    # data, heads over model (the score reduction then never reshards)
+    k = constrain(k, "batch", "kv_seq", "kv_heads_cache", "head_dim")
+    v = constrain(v, "batch", "kv_seq", "kv_heads_cache", "head_dim")
     return k, v
 
 
@@ -533,6 +576,7 @@ def attention_decode_paged(params: Params, x, pool: Params, block_tables,
             k_new[:, 0].astype(pool["k"].dtype))
         new_pool["v"] = pool["v"].at[blk, off].set(
             v_new[:, 0].astype(pool["v"].dtype))
+    new_pool = _constrain_pool(new_pool)
 
     k_cache, v_cache = gather_paged_kv(new_pool, block_tables, compute_dtype)
     o = full_attention(q, k_cache, v_cache, causal=False, kv_len=cur + 1)

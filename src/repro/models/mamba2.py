@@ -112,6 +112,7 @@ def prefill(params: Params, batch: dict, cfg: ModelConfig, *, max_len: int):
 
 def decode_step(params: Params, cache: Params, tokens, cfg: ModelConfig):
     h = embed(params["embed"], tokens, compute_dtype=cfg.cdtype)
+    h = constrain(h, "batch", None, "embed")
 
     def body(carry, xs):
         layer, state = xs
@@ -120,7 +121,7 @@ def decode_step(params: Params, cache: Params, tokens, cfg: ModelConfig):
             layer["mixer"], hn, state, d_state=cfg.d_state,
             headdim=cfg.headdim, n_groups=cfg.n_groups, expand=cfg.expand,
             compute_dtype=cfg.cdtype)
-        return carry + y, new_state
+        return carry + constrain(y, "batch", None, "embed"), new_state
 
     h, new_layers = lax.scan(body, h, (params["layers"], cache["layers"]))
     h = rms_norm(params["final_norm"], h)

@@ -149,6 +149,7 @@ def prefill(params: Params, batch: dict, cfg: ModelConfig, *, max_len: int,
 def decode_step(params: Params, cache: Params, tokens, cfg: ModelConfig):
     pos = cache["pos"]
     h = embed(params["embed"], tokens, compute_dtype=cfg.cdtype)
+    h = constrain(h, "batch", None, "embed")
 
     def body(carry, xs):
         layer, layer_cache = xs
@@ -158,14 +159,14 @@ def decode_step(params: Params, cache: Params, tokens, cfg: ModelConfig):
             n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
             rope_theta=cfg.rope_theta, compute_dtype=cfg.cdtype,
             strategy=cfg.moa_for("attention"))
-        h2 = carry + a
+        h2 = carry + constrain(a, "batch", None, "embed")
         hn = rms_norm(layer["mlp_norm"], h2)
         m, _ = moe_forward(layer["moe"], hn, n_experts=cfg.n_experts,
                            top_k=cfg.top_k,
                            capacity_factor=cfg.capacity_factor,
                            compute_dtype=cfg.cdtype,
                            strategy=cfg.moa_for("moe"))
-        return h2 + m, new_cache
+        return h2 + constrain(m, "batch", None, "embed"), new_cache
 
     h, new_layers = lax.scan(body, h, (params["layers"], cache["layers"]))
     h = rms_norm(params["final_norm"], h)
@@ -182,6 +183,7 @@ def paged_decode_step(params: Params, cache: Params, tokens,
     tables."""
     pos, tables = cache["pos"], cache["block_tables"]
     h = embed(params["embed"], tokens, compute_dtype=cfg.cdtype)
+    h = constrain(h, "batch", None, "embed")
 
     def body(carry, xs):
         layer, layer_pool = xs
@@ -191,14 +193,14 @@ def paged_decode_step(params: Params, cache: Params, tokens,
             n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
             rope_theta=cfg.rope_theta, compute_dtype=cfg.cdtype,
             strategy=cfg.moa_for("attention"))
-        h2 = carry + a
+        h2 = carry + constrain(a, "batch", None, "embed")
         hn = rms_norm(layer["mlp_norm"], h2)
         m, _ = moe_forward(layer["moe"], hn, n_experts=cfg.n_experts,
                            top_k=cfg.top_k,
                            capacity_factor=cfg.capacity_factor,
                            compute_dtype=cfg.cdtype,
                            strategy=cfg.moa_for("moe"))
-        return h2 + m, new_pool
+        return h2 + constrain(m, "batch", None, "embed"), new_pool
 
     h, new_layers = lax.scan(body, h, (params["layers"], cache["layers"]))
     h = rms_norm(params["final_norm"], h)

@@ -241,6 +241,7 @@ def prefill(params: Params, batch: dict, cfg: ModelConfig, *, max_len: int):
 def decode_step(params: Params, cache: Params, tokens, cfg: ModelConfig):
     pos = cache["pos"]
     h = embed(params["embed"], tokens, compute_dtype=cfg.cdtype)
+    h = constrain(h, "batch", None, "embed")
     n_apps, per_group, tail = _grouped(cfg)
     head_states = jax.tree.map(
         lambda a: a[: n_apps * per_group].reshape(
@@ -256,7 +257,7 @@ def decode_step(params: Params, cache: Params, tokens, cfg: ModelConfig):
             layer["mixer"], hn, state, d_state=cfg.d_state,
             headdim=cfg.headdim, n_groups=cfg.n_groups, expand=cfg.expand,
             compute_dtype=cfg.cdtype)
-        return carry + y, new_state
+        return carry + constrain(y, "batch", None, "embed"), new_state
 
     def group_body(carry, xs):
         group_layers, group_states, app_norm, kv = xs
@@ -268,11 +269,11 @@ def decode_step(params: Params, cache: Params, tokens, cfg: ModelConfig):
             n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
             rope_theta=cfg.rope_theta, compute_dtype=cfg.cdtype,
             strategy=cfg.moa_for("attention"))
-        out = out + a
+        out = out + constrain(a, "batch", None, "embed")
         hn = rms_norm(app_norm["mlp"], out)
-        out = out + swiglu(params["shared_mlp"], hn,
-                           strategy=cfg.moa_for("mlp"),
-                           compute_dtype=cfg.cdtype)
+        m = swiglu(params["shared_mlp"], hn, strategy=cfg.moa_for("mlp"),
+                   compute_dtype=cfg.cdtype)
+        out = out + constrain(m, "batch", None, "embed")
         return out, (new_states, new_kv)
 
     h, (new_head_states, new_kv) = lax.scan(
@@ -297,6 +298,7 @@ def paged_decode_step(params: Params, cache: Params, tokens,
     tables; the dense per-slot SSM recurrence is untouched."""
     pos, tables = cache["pos"], cache["block_tables"]
     h = embed(params["embed"], tokens, compute_dtype=cfg.cdtype)
+    h = constrain(h, "batch", None, "embed")
     n_apps, per_group, tail = _grouped(cfg)
     head_states = jax.tree.map(
         lambda a: a[: n_apps * per_group].reshape(
@@ -312,7 +314,7 @@ def paged_decode_step(params: Params, cache: Params, tokens,
             layer["mixer"], hn, state, d_state=cfg.d_state,
             headdim=cfg.headdim, n_groups=cfg.n_groups, expand=cfg.expand,
             compute_dtype=cfg.cdtype)
-        return carry + y, new_state
+        return carry + constrain(y, "batch", None, "embed"), new_state
 
     def group_body(carry, xs):
         group_layers, group_states, app_norm, kv_pool = xs
@@ -324,11 +326,11 @@ def paged_decode_step(params: Params, cache: Params, tokens,
             n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
             head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
             compute_dtype=cfg.cdtype, strategy=cfg.moa_for("attention"))
-        out = out + a
+        out = out + constrain(a, "batch", None, "embed")
         hn = rms_norm(app_norm["mlp"], out)
-        out = out + swiglu(params["shared_mlp"], hn,
-                           strategy=cfg.moa_for("mlp"),
-                           compute_dtype=cfg.cdtype)
+        m = swiglu(params["shared_mlp"], hn, strategy=cfg.moa_for("mlp"),
+                   compute_dtype=cfg.cdtype)
+        out = out + constrain(m, "batch", None, "embed")
         return out, (new_states, new_pool)
 
     h, (new_head_states, new_kv) = lax.scan(

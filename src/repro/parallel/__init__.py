@@ -1,9 +1,11 @@
 from repro.parallel.sharding import (
     ShardingRules, DEFAULT_RULES, activate, active_context, constrain,
-    logical_to_spec, param_shardings,
+    logical_to_spec, param_shardings, replicate_uneven_kv_heads,
+    serve_cache_shardings, serve_rules_for,
 )
 
 __all__ = [
     "ShardingRules", "DEFAULT_RULES", "activate", "active_context",
     "constrain", "logical_to_spec", "param_shardings",
+    "replicate_uneven_kv_heads", "serve_cache_shardings", "serve_rules_for",
 ]

@@ -33,7 +33,9 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["ShardingRules", "DEFAULT_RULES", "activate", "active_context",
-           "constrain", "logical_to_spec", "param_shardings"]
+           "constrain", "logical_to_spec", "param_shardings",
+           "replicate_uneven_kv_heads", "serve_rules_for",
+           "serve_cache_shardings"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -179,3 +181,135 @@ def param_shardings(logical_tree, mesh: Optional[Mesh] = None,
         is_leaf=lambda t: isinstance(t, tuple) and all(
             n is None or isinstance(n, str) for n in t),
     )
+
+
+# ---------------------------------------------------------------------------
+# Serving (docs/sharded-serving.md)
+# ---------------------------------------------------------------------------
+
+
+def serve_rules_for(family: str,
+                    base: ShardingRules = DEFAULT_RULES) -> ShardingRules:
+    """Bitwise-reproducible serving rules for a model family.
+
+    Serving parity is verified token-for-token against single-device greedy
+    decode (``tests/test_sharded_serving.py``), so the rules must never let
+    GSPMD split a reduction whose partial-sum order could round differently
+    from the unsharded contraction in a way that compounds:
+
+    * **dense / moe** keep the full TP/EP table — the attention/MLP
+      row-parallel all-reduces reproduce the single-device accumulation
+      exactly on the shapes we serve, and the MoE combine sums at most
+      ``top_k`` non-zero partials (order-invariant in IEEE for two terms);
+    * **ssm / hybrid** replicate every model-axis parameter: a split
+      contraction's rounding noise feeds the *recurrent* state and
+      compounds step over step, so these families serve data-parallel
+      (slots over ``data``) with the model axis idle — the paper's lesson
+      that a mapping must be validated on the device, not on paper.
+    """
+    if family in ("ssm", "hybrid"):
+        return base.with_overrides(
+            heads=None, kv_heads=None, kv_heads_cache=None, ff=None,
+            experts=None, vocab=None, ssm_inner=None, ssm_heads=None)
+    return base
+
+
+def replicate_uneven_kv_heads(rules: ShardingRules, n_kv_heads: int,
+                              mesh: Mesh) -> ShardingRules:
+    """Replicate ``kv_heads_cache`` when its mesh axes do not divide
+    ``n_kv_heads`` (GQA kv heads smaller than the model axis).
+
+    The input-side cache shardings already drop the uneven axis
+    (:func:`_drop_indivisible` / ``steps._divisible_spec``), but an
+    in-flight ``constrain`` would still pin it against GSPMD's padded
+    choice and force full-rematerialization copies on every decode step —
+    shared by the serve engine and the training/dry-run decode rules.
+    """
+    entry = rules.lookup("kv_heads_cache")
+    if entry is None or not n_kv_heads:
+        return rules
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    axes = entry if isinstance(entry, tuple) else (entry,)
+    ways = 1
+    for a in axes:
+        ways *= sizes.get(a, 1)
+    if n_kv_heads % ways:
+        return rules.with_overrides(kv_heads_cache=None)
+    return rules
+
+
+#: serve-engine batched-cache leaves → logical axes (dense-slot layout).
+#: Leaves under a stack key ("layers" / "kv" / "ssm") get a leading None
+#: for the layer / application-point axis.
+_SERVE_CACHE_AXES = {
+    "k": ("batch", "kv_seq", "kv_heads_cache", "head_dim"),
+    "v": ("batch", "kv_seq", "kv_heads_cache", "head_dim"),
+    "k_scale": ("batch", "scale_seq", "kv_heads_cache"),
+    "v_scale": ("batch", "scale_seq", "kv_heads_cache"),
+    "h": ("batch", "ssm_heads", None, "state"),
+    "conv": ("batch", None, "ssm_inner"),
+    "pos": ("batch",),
+    "block_tables": ("batch", None),
+}
+
+#: paged-pool KV leaves: the physical block axis is shared across slots
+#: (block tables are logical, host-side), so only the head dimension
+#: shards — pages replicate over ``data`` and split over ``model``.
+_SERVE_POOL_AXES = {
+    "k": (None, None, "kv_heads_cache", "head_dim"),
+    "v": (None, None, "kv_heads_cache", "head_dim"),
+    "k_scale": (None, None, "kv_heads_cache"),
+    "v_scale": (None, None, "kv_heads_cache"),
+}
+
+_STACK_KEYS = ("layers", "kv", "ssm")
+_POOL_LEAVES = ("k", "v", "k_scale", "v_scale")
+
+
+def _drop_indivisible(shape, spec: P, mesh: Mesh) -> P:
+    """Replicate any dim its mesh axes do not evenly divide (GQA kv heads
+    smaller than the model axis, odd slot counts, ...)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    entries = tuple(spec) + (None,) * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, entries):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        ways = 1
+        for a in axes:
+            ways *= sizes[a]
+        out.append(entry if dim % ways == 0 else None)
+    return P(*out)
+
+
+def serve_cache_shardings(cache, mesh: Mesh,
+                          rules: ShardingRules = DEFAULT_RULES, *,
+                          paged: bool = False):
+    """NamedShardings for a serve-engine batched cache.
+
+    ``cache`` is the engine's device state (or its ``eval_shape``): KV
+    leaves stacked ``(stack, n_slots, max_len, Hk, D)`` in dense-slot mode
+    or pooled ``(stack, n_phys_blocks, block_size, Hk, D)`` in paged mode,
+    plus per-slot ``pos`` / ``block_tables`` / SSM state. Slots shard over
+    the data axis, KV head dims over the model axis (per ``rules``);
+    indivisible dims replicate instead of erroring.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    out = []
+    for path, leaf in flat:
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        name = keys[-1]
+        pooled = paged and name in _POOL_LEAVES \
+            and not any(k == "ssm" for k in keys)
+        axes = _SERVE_POOL_AXES[name] if pooled \
+            else _SERVE_CACHE_AXES.get(name, ())
+        if any(k in _STACK_KEYS for k in keys):
+            axes = (None,) + tuple(axes)
+        axes = tuple(axes)[: leaf.ndim]
+        axes = axes + (None,) * (leaf.ndim - len(axes))
+        spec = _dedupe(logical_to_spec(axes, rules, mesh))
+        spec = _drop_indivisible(leaf.shape, spec, mesh)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)

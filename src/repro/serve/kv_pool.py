@@ -35,8 +35,15 @@ Invariants (property-tested in ``tests/test_scheduler_properties.py``):
 P1. free / allocated / evictable partition ``1..n_blocks``.
 P2. refcounts are >= 1 for allocated blocks and never go negative:
     freeing a non-allocated block raises (no double-free).
-P3. every trie entry points at an allocated or evictable block, and each
-    block has at most one trie entry.
+P3. every trie entry points at an allocated or evictable block, each
+    block has at most one trie entry, and the trie is **prefix-closed**:
+    every block-aligned proper prefix of a registered chain is itself
+    registered. Closure is what makes registered content *reachable* —
+    ``plan`` matches full blocks front-to-back and a partial tail only
+    behind a fully matched prefix — so LRU eviction must cascade: when a
+    block is reclaimed, the chain suffix rooted below it is unregistered
+    too (evictable descendants return to the free list; they could never
+    be matched again and would otherwise squat in LRU as dead cache).
 P4. ``alloc`` never returns a block that is still referenced.
 P5. an admission plan's ``new_needed`` never exceeds ``available`` at the
     time ``can_admit`` approved it (the memory-aware admission rule).
@@ -130,13 +137,46 @@ class BlockPool:
             bid = self._free.pop()
         elif self._evictable:
             bid, _ = self._evictable.popitem(last=False)   # LRU eviction
-            self._drop_registration(bid)
+            self._evict_registration(bid)
             self.evictions += 1
         else:
             raise RuntimeError("block pool exhausted — admission gate "
                                "should have prevented this allocation")
         self._ref[bid] = 1
         return bid
+
+    def _evict_registration(self, bid: int) -> None:
+        """Unregister an evicted block *and* the chain suffix rooted below
+        it (invariant P3's prefix closure).
+
+        Dropping only the evicted block's own entry would strand every
+        descendant chain: ``plan`` matches front-to-back, so a chain whose
+        parent is gone can never be served again, yet its block would keep
+        its trie entry and sit in the LRU queue as unreclaimable-by-match
+        dead cache. Cascading keeps the trie prefix-closed; evictable
+        descendants go straight back to the free list (their content is
+        unreachable garbage now), while still-referenced descendants merely
+        lose their registration and free normally when released.
+        """
+        root = self._block_key.get(bid)
+        self._drop_registration(bid)
+        if root is None:
+            return
+        bs = self.block_size
+        if len(root) % bs:
+            return      # partial-tail chains never have descendants
+        dropped = {root}
+        # length order visits parents before children, so one pass over a
+        # snapshot unregisters the whole subtree under ``root``
+        for chain in sorted(self._trie, key=len):
+            aligned = (len(chain) - 1) // bs * bs
+            if aligned and chain[:aligned] in dropped:
+                dropped.add(chain)
+                child = self._trie[chain]
+                self._drop_registration(child)
+                if child in self._evictable:
+                    del self._evictable[child]
+                    self._free.append(child)
 
     def alloc(self, n: int) -> List[int]:
         """Allocate ``n`` fresh blocks (refcount 1 each)."""
@@ -258,3 +298,8 @@ class BlockPool:
             "trie and reverse map disagree"
         for bid, key in self._block_key.items():
             assert self._trie.get(key) == bid, "trie reverse-map mismatch"
+        bs = self.block_size
+        for chain in self._trie:
+            aligned = (len(chain) - 1) // bs * bs
+            assert aligned == 0 or chain[:aligned] in self._trie, \
+                "trie lost prefix closure (orphaned chain suffix)"

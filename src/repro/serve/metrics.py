@@ -86,13 +86,17 @@ def _dist(values: List[float]) -> Dict[str, float]:
 
 
 def aggregate(results, *, n_slots: int, decode_steps: int,
-              occupancy_sum: float, wall_s: float) -> dict:
+              occupancy_sum: float, wall_s: float,
+              compile_s: float = 0.0) -> dict:
     """Fleet-level summary over completed requests.
 
     ``occupancy_sum`` is the sum over decode steps of
     ``active_slots / n_slots``; divided by ``decode_steps`` it gives mean
     slot occupancy in [0, 1]. ``wall_s`` is total engine run time in
-    seconds.
+    seconds. ``compile_s`` is the time the engine's warmup tick spent
+    compiling *before* the clock started (``ServeEngine.run(warmup=True)``)
+    — reported separately exactly so it can never fold into ``wall_s`` and
+    skew ``tok_per_s`` / TTFT.
     """
     total_new = sum(r.metrics.new_tokens for r in results)
     return {
@@ -100,6 +104,7 @@ def aggregate(results, *, n_slots: int, decode_steps: int,
         "n_slots": n_slots,
         "decode_steps": decode_steps,
         "wall_s": wall_s,
+        "compile_s": compile_s,
         "total_new_tokens": total_new,
         "tok_per_s": total_new / max(wall_s, 1e-9),
         "ttft_ms": _dist([1e3 * r.metrics.ttft_s for r in results]),

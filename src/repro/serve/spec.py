@@ -206,33 +206,49 @@ class DraftModelDrafter(Drafter):
         self.params = params
 
     def bind(self, engine) -> None:
-        from repro.serve.engine import _write_slot  # cycle-free at runtime
+        # cycle-free at runtime; the compile cache is shared with the
+        # engine so repeated drafters on one model (the benchmark's oracle
+        # accept-rate sweep) never recompile
+        from repro.serve.engine import _cached_jit, _write_slot
 
         model = self.model
-        self.n_slots, self.max_len = engine.n_slots, engine.max_len
+        max_len = self.max_len = engine.max_len
+        self.n_slots = engine.n_slots
         self._bucket_for = engine.scheduler.bucket_for
         cache = model.init_cache(self.n_slots, self.max_len)
         cache["pos"] = jnp.zeros((self.n_slots,), jnp.int32)
         self.cache = cache
+        key = (model.cfg, "drafter")
         if model.supports_padded_prefill:
-            self._prefill = jax.jit(
-                lambda p, b, pl: model.prefill(p, b, max_len=self.max_len,
-                                               prompt_len=pl))
+            self._prefill = _cached_jit(
+                key + ("prefill", max_len),
+                lambda: jax.jit(lambda p, b, pl: model.prefill(
+                    p, b, max_len=max_len, prompt_len=pl)))
         else:
-            self._prefill = jax.jit(
-                lambda p, b: model.prefill(p, b, max_len=self.max_len))
-        self._write = jax.jit(_write_slot, donate_argnums=(0,))
+            self._prefill = _cached_jit(
+                key + ("prefill", max_len),
+                lambda: jax.jit(lambda p, b: model.prefill(
+                    p, b, max_len=max_len)))
+        self._write = _cached_jit(
+            key + ("write",),
+            lambda: jax.jit(_write_slot, donate_argnums=(0,)))
         # teacher-force sync: verify + commit (no donation on verify — the
         # rollout snapshot must survive)
-        self._tf = jax.jit(model.verify_step)
-        self._commit = jax.jit(model.commit_verified, donate_argnums=(0,))
-        self._step = jax.jit(self._step_impl, donate_argnums=(0,))
-        self._consumed: Dict[int, int] = {}
+        self._tf = _cached_jit(key + ("tf",),
+                               lambda: jax.jit(model.verify_step))
+        self._commit = _cached_jit(
+            key + ("commit",),
+            lambda: jax.jit(model.commit_verified, donate_argnums=(0,)))
 
-    def _step_impl(self, cache, tokens):
-        """One greedy draft decode step."""
-        logits, cache = self.model.decode_step(self.params, cache, tokens)
-        return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), cache
+        def step(params, cache, tokens):
+            """One greedy draft decode step."""
+            logits, cache = model.decode_step(params, cache, tokens)
+            return (jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32),
+                    cache)
+
+        self._step = _cached_jit(
+            key + ("step",), lambda: jax.jit(step, donate_argnums=(1,)))
+        self._consumed: Dict[int, int] = {}
 
     def admit(self, slot, prompt):
         p = len(prompt)
@@ -284,7 +300,8 @@ class DraftModelDrafter(Drafter):
             self.cache = jax.tree.map(jnp.copy, synced)
             cur = jnp.asarray(drafts[:, 0])
             for j in range(1, k):
-                cur, self.cache = self._step(self.cache, cur[:, None])
+                cur, self.cache = self._step(self.params, self.cache,
+                                             cur[:, None])
                 drafts[:, j] = np.asarray(cur)
                 self.draft_steps += 1
             self.cache = synced

@@ -122,6 +122,34 @@ class TestBlockPool:
         assert len(got) == 3
         pool.check()
 
+    def test_eviction_cascades_chain_suffix(self):
+        """Regression (the LRU bug): evicting a chain's root block used to
+        leave the deeper chain registered — unreachable by ``plan`` (which
+        matches front-to-back) yet squatting in the trie and LRU queue.
+        Eviction must cascade: the suffix chains rooted below the
+        reclaimed block are unregistered and their evictable blocks go
+        back to the free list (P3 prefix closure)."""
+        pool = BlockPool(3, block_size=2)
+        prompt = (7, 8, 9, 10)
+        got = pool.alloc(3)                # 2 prompt blocks + 1 gen block
+        pool.register(got[0], prompt[:2])
+        pool.register(got[1], prompt)
+        for b in got:
+            pool.free(b)                   # both prompt chains evictable
+        assert pool.match(prompt[:2]) is not None
+        assert pool.match(prompt) is not None
+        # exhaust the free list, then one more — LRU-evicts the chain root
+        taken = pool.alloc(2)
+        assert pool.evictions == 1
+        # the deeper chain must be gone too, its block back on the free
+        # list — not a dead trie entry
+        assert pool.match(prompt) is None
+        assert pool.match(prompt[:2]) is None
+        pool.check()
+        # and the cascaded block is immediately reusable
+        rest = pool.alloc(1)
+        assert len(set(taken + rest)) == 3
+
     def test_plan_prefix_walk_and_admission_math(self):
         pool = BlockPool(8, block_size=4)
         prompt = (1, 2, 3, 4, 5, 6, 7, 8, 9, 10)     # 2 full blocks + tail

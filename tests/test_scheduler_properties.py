@@ -126,6 +126,49 @@ _POOL_OPS = st.lists(
     min_size=1, max_size=80)
 
 
+def _admit(pool: BlockPool, prompt, max_new: int):
+    """Engine-shaped admission against a bare pool: gate, plan, share
+    matched pages, allocate the rest (+ CoW spare on a matched tail),
+    register the privately written prompt blocks. Returns every block
+    the admission holds a reference to, or None when the gate refuses."""
+    if not pool.can_admit(prompt, max_new):
+        return None
+    plan = pool.plan(prompt, max_new)
+    for b in plan.full_matched:
+        pool.share(b)
+    if plan.tail_matched is not None:
+        pool.share(plan.tail_matched)
+    fresh = iter(pool.alloc(plan.new_needed))
+    n_full = len(plan.full_matched)
+    blocks = list(plan.full_matched)
+    tail_idx = n_full if plan.tail_matched is not None else None
+    for i in range(n_full, plan.n_logical):
+        blocks.append(plan.tail_matched if i == tail_idx else next(fresh))
+    held = list(blocks)
+    if plan.tail_matched is not None:
+        held.append(next(fresh))                   # the CoW spare
+    bs, p = pool.block_size, len(prompt)
+    for i in range(n_full, p // bs):
+        pool.register(blocks[i], prompt[: (i + 1) * bs])
+    if p % bs and plan.tail_matched is None and p // bs < plan.n_logical:
+        pool.register(blocks[p // bs], prompt)
+    return held
+
+
+# op stream mirroring an engine's lifetime: admissions (which share/alloc/
+# register), releases, and forced eviction storms (alloc everything
+# available, then free it — every evictable cached block gets reclaimed)
+_EVICT_OPS = st.lists(
+    st.one_of(
+        st.tuples(st.just("admit"),
+                  st.lists(st.integers(0, 1), min_size=1, max_size=12),
+                  st.integers(1, 6)),
+        st.tuples(st.just("release"), st.integers(0, 30)),
+        st.tuples(st.just("storm"), st.integers(1, 8)),
+    ),
+    min_size=1, max_size=60)
+
+
 class TestBlockPoolProperties:
     @given(ops=_POOL_OPS, n_blocks=st.integers(2, 12))
     @settings(max_examples=60, deadline=None)
@@ -178,3 +221,39 @@ class TestBlockPoolProperties:
             # refcounts match our model
             for b, refs in live:
                 assert pool.refcount(b) == refs
+
+    @given(ops=_EVICT_OPS, n_blocks=st.integers(2, 10))
+    @settings(max_examples=60, deadline=None)
+    def test_eviction_storm_keeps_invariants(self, ops, n_blocks):
+        """Interleaved admissions, releases, and forced eviction storms:
+        P1-P5 (including P3's prefix closure — eviction must cascade to
+        the chain suffix rooted below the reclaimed block) hold after
+        every op. Prompts come from a 2-token alphabet so prefixes collide
+        constantly and the trie grows real chains."""
+        pool = BlockPool(n_blocks, block_size=4)
+        live = []                          # per-admission held block lists
+        for op in ops:
+            if op[0] == "admit":
+                prompt, max_new = tuple(op[1]), op[2]
+                plan = pool.plan(prompt, max_new)
+                admissible = pool.can_admit(prompt, max_new)
+                # P5: the gate's verdict matches the plan's need (matched
+                # evictable pages count as revived, not allocatable)
+                held = _admit(pool, prompt, max_new)
+                assert (held is not None) == admissible
+                if held is not None:
+                    assert plan.new_needed <= n_blocks
+                    live.append(held)
+            elif op[0] == "release" and live:
+                for b in live.pop(op[1] % len(live)):
+                    pool.free(b)
+            elif op[0] == "storm":
+                n = min(op[1], pool.available)
+                if n:
+                    got = pool.alloc(n)
+                    # P4: a storm never hands out a block a live
+                    # admission still references
+                    assert not (set(got) & {b for bl in live for b in bl})
+                    for b in got:
+                        pool.free(b)
+            pool.check()                   # P1-P3 incl. prefix closure

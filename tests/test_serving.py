@@ -282,3 +282,86 @@ def test_request_decode_cost_prices_strategy():
     assert exact > 0
     assert loa > exact
     assert request_decode_cost(cfg, prompt_tokens=8, new_tokens=1) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# compilation cache + warmup (engine-level, docs/serving.md)
+# ---------------------------------------------------------------------------
+
+
+def test_compile_cache_shared_across_engines(rng):
+    """Two engines on the same (model, layout) share every jitted callable
+    — the second engine triggers no recompilation (regression: the
+    per-instance ``jax.jit`` in ``__init__`` made benchmarks that build
+    dense + paged + spec engines pay triple compile)."""
+    from repro.serve.engine import _cache_size, _clear_compile_cache
+
+    cfg, model, params = _built("llama3-8b", rng)
+    toks = np.asarray(jax.random.randint(rng, (2, 6), 0, cfg.vocab),
+                      np.int32)
+    _clear_compile_cache()     # self-contained regardless of test order
+    e1 = ServeEngine(model, params, n_slots=2, max_len=32,
+                     clock=lambda: 0.0)
+    r1, _ = e1.run(_requests_from(toks, [4, 4]))
+    size_after_first = _cache_size()
+    assert size_after_first > 0
+    e2 = ServeEngine(model, params, n_slots=2, max_len=32,
+                     clock=lambda: 0.0)
+    r2, _ = e2.run(_requests_from(toks, [4, 4]))
+    assert _cache_size() == size_after_first, \
+        "second engine on the same layout must reuse the jit cache"
+    for a, b in zip(r1, r2):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+    # a different cache layout is a different key set (no false sharing)
+    e3 = ServeEngine(model, params, n_slots=2, max_len=32, paged=True,
+                     block_size=8, clock=lambda: 0.0)
+    assert _cache_size() > size_after_first
+    r3, _ = e3.run(_requests_from(toks, [4, 4]))
+    for a, b in zip(r1, r3):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+@pytest.mark.parametrize("arch,paged,spec",
+                         [("llama3-8b", False, False),
+                          ("llama3-8b", True, False),
+                          ("llama3-8b", False, True),
+                          ("zamba2-1.2b", False, True)])
+def test_warmup_tick_is_invisible_to_results(rng, arch, paged, spec):
+    """``run(warmup=True)`` must produce bit-identical results to a cold
+    run: the throwaway tick's writes land on trash pages / overwritten
+    slot rows, and a spec warmup's keep=0 commit restores recurrent state
+    from the pre-verify snapshot."""
+    from repro.serve import OracleDrafter
+
+    cfg, model, params = _built(arch, rng)
+    toks = np.asarray(jax.random.randint(rng, (2, 6), 0, cfg.vocab),
+                      np.int32)
+    runs = []
+    for warmup in (False, True):
+        kw = dict(n_slots=2, max_len=32, clock=lambda: 0.0)
+        if paged:
+            kw.update(paged=True, block_size=8)
+        drafter = OracleDrafter(2) if spec else None
+        engine = ServeEngine(model, params, drafter=drafter, **kw)
+        results, report = engine.run(_requests_from(toks, [5, 5]),
+                                     warmup=warmup)
+        assert report["compile_s"] >= 0.0
+        runs.append(results)
+    for a, b in zip(*runs):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+def test_warmup_reports_compile_time(rng):
+    """With a cold jit cache the warmup tick's compile time lands in
+    ``compile_s``, not ``wall_s`` (the serving-v1/v2/v3 skew bugfix)."""
+    from repro.serve.engine import _clear_compile_cache
+
+    cfg, model, params = _built("llama3-8b", rng)
+    _clear_compile_cache()                 # force fresh jit objects
+    toks = np.asarray(jax.random.randint(rng, (2, 6), 0, cfg.vocab),
+                      np.int32)
+    engine = ServeEngine(model, params, n_slots=2, max_len=32)
+    _, report = engine.run(_requests_from(toks, [4, 4]), warmup=True)
+    assert report["compile_s"] > 0.0
+    # the decode tick itself is milliseconds; compilation is not
+    assert report["compile_s"] > report["wall_s"] / 10
