@@ -1,0 +1,105 @@
+#!/usr/bin/env python3
+"""Static serve-path audit: jaxpr invariants + repo lint, one CI gate.
+
+Traces every serve-path callable (families × dense/paged × mesh/no-mesh)
+without executing it and checks the lowered jaxprs against the repo
+invariants, then lints the source tree. Prints each violation with its
+source site and exits 1 if any are found. See docs/static-analysis.md
+for the rule catalog.
+
+  PYTHONPATH=src python scripts/audit_serve_path.py
+  PYTHONPATH=src python scripts/audit_serve_path.py --json report.json
+  PYTHONPATH=src python scripts/audit_serve_path.py --families ssm,hybrid
+
+``--json`` writes a schema-tagged ``analysis-v1`` record and
+self-validates it against the registry in ``check_bench_schema.py``
+before exiting, so a malformed report can never slip through CI as a
+pass.
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib.util
+import json
+import os
+import sys
+import time
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _load_schema_registry():
+    """scripts/ is not a package; load the validator by file path."""
+    path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "check_bench_schema.py")
+    spec = importlib.util.spec_from_file_location("check_bench_schema", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def main(argv=None) -> int:
+    from repro.analysis import (SERVE_FAMILIES, audit_targets, build_report,
+                                enumerate_targets, run_lint, summarize)
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--families", default=",".join(SERVE_FAMILIES),
+                    help="comma-separated families to audit")
+    ap.add_argument("--mesh-modes", default="none,mesh",
+                    help="comma-separated subset of: none, mesh")
+    ap.add_argument("--skip-lint", action="store_true",
+                    help="jaxpr audit only")
+    ap.add_argument("--skip-jaxpr", action="store_true",
+                    help="lint only")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write a schema-validated analysis-v1 report")
+    args = ap.parse_args(argv)
+
+    families = tuple(f for f in args.families.split(",") if f)
+    mesh_modes = tuple(m for m in args.mesh_modes.split(",") if m)
+    unknown = set(families) - set(SERVE_FAMILIES)
+    if unknown:
+        ap.error(f"unknown families: {sorted(unknown)}")
+
+    t0 = time.time()
+    violations, targets = [], []
+    if not args.skip_jaxpr:
+        targets = enumerate_targets(families=families, mesh_modes=mesh_modes)
+        print(f"auditing {len(targets)} serve-path targets "
+              f"({len(families)} families x {mesh_modes})...")
+        violations.extend(audit_targets(targets))
+
+    files_linted = 0
+    if not args.skip_lint:
+        lint_violations, files_linted = run_lint(REPO_ROOT)
+        print(f"linted {files_linted} source files")
+        violations.extend(lint_violations)
+
+    for v in violations:
+        print(v.format())
+    print(f"{summarize(violations)} [{time.time() - t0:.1f}s]")
+
+    if args.json:
+        report = build_report(
+            violations, targets_audited=len(targets),
+            files_linted=files_linted,
+            config={"families": list(families),
+                    "mesh_modes": list(mesh_modes),
+                    "skip_lint": args.skip_lint,
+                    "skip_jaxpr": args.skip_jaxpr})
+        errors = _load_schema_registry().validate(report)
+        if errors:
+            for e in errors:
+                print(f"INTERNAL: report fails its own schema: {e}",
+                      file=sys.stderr)
+            return 2
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"wrote {args.json} ({report['schema']})")
+
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,13 +1,18 @@
 #!/usr/bin/env python3
-"""Validate serving benchmark JSON records (``serving-v1`` / ``serving-v2``
-/ ``serving-v3`` / ``serving-v4``).
+"""Validate repo JSON records against the schema registry.
+
+Every machine-readable artifact the repo emits carries a ``schema`` tag —
+serving benchmark records (``serving-v1`` .. ``serving-v4``) and the
+static-analysis report (``analysis-v1``). Each schema registers a
+validator in :data:`SCHEMAS` via :func:`register`; adding a new record
+format means adding one decorated function here.
 
 Stdlib-only (runs in CI without extra deps). Checks required keys and
 value types — extra keys are allowed (schemas grow forward-compatibly),
 missing or mistyped ones fail with a per-field report. Exit 1 on any
 violation.
 
-  python scripts/check_bench_schema.py out.json [more.json ...]
+  python scripts/check_bench_schema.py RECORD.json [more.json ...]
 """
 
 from __future__ import annotations
@@ -15,6 +20,7 @@ from __future__ import annotations
 import json
 import numbers
 import sys
+from typing import Callable, Dict, List
 
 NUM = numbers.Real      # int or float (bool excluded below)
 STR = str
@@ -87,6 +93,16 @@ _V4_COMPARISON = {
     "compile_s_single": NUM, "compile_s_sharded": NUM,
 }
 
+_ANALYSIS_SUMMARY = {
+    "targets_audited": int, "files_linted": int, "violations": int,
+    "rules_checked": list,
+}
+
+_ANALYSIS_VIOLATION = {
+    "rule": STR, "severity": STR, "target": STR, "file": STR, "line": int,
+    "message": STR, "provenance": STR,
+}
+
 
 def _check(record, schema, path, errors):
     """Recursively check required keys + types (dict schemas nest)."""
@@ -124,59 +140,116 @@ def _check_run(run, path, errors):
         _check(r, _REQUEST, f"{path}.requests[{i}]", errors)
 
 
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+#: schema tag → validator(record, errors)
+SCHEMAS: Dict[str, Callable[[dict, List[str]], None]] = {}
+
+
+def register(name: str):
+    """Register a validator for one ``schema`` tag."""
+
+    def deco(fn):
+        SCHEMAS[name] = fn
+        return fn
+
+    return deco
+
+
+@register("serving-v1")
+def _serving_v1(record, errors):
+    _check(record, {"config": _CONFIG_V1}, "$", errors)
+    _check_run(record, "$", errors)
+
+
+@register("serving-v2")
+def _serving_v2(record, errors):
+    _check(record, {"config": _CONFIG_V2, "comparison": _COMPARISON},
+           "$", errors)
+    for mode in ("dense", "paged"):
+        _check_run(record.get(mode, {}), f"$.{mode}", errors)
+    paged_agg = record.get("paged", {}).get("aggregate", {})
+    _check(paged_agg.get("paged", {}), _PAGED_AGGREGATE,
+           "$.paged.aggregate.paged", errors)
+
+
+@register("serving-v3")
+def _serving_v3(record, errors):
+    _check(record, {"config": _CONFIG_V3,
+                    "comparison": _SPEC_COMPARISON}, "$", errors)
+    _check_run(record.get("plain", {}), "$.plain", errors)
+    runs = record.get("spec_runs")
+    if not isinstance(runs, list) or not runs:
+        errors.append("$.spec_runs: expected non-empty list")
+    else:
+        for i, sr in enumerate(runs):
+            path = f"$.spec_runs[{i}]"
+            _check(sr, {"accept_prob": NUM}, path, errors)
+            _check_run(sr, path, errors)
+            _check(sr.get("aggregate", {}).get("spec", {}),
+                   _SPEC_AGGREGATE, f"{path}.aggregate.spec", errors)
+    curve = record.get("comparison", {}).get("curve")
+    if not isinstance(curve, list) or not curve:
+        errors.append("$.comparison.curve: expected non-empty list")
+    else:
+        for i, pt in enumerate(curve):
+            _check(pt, _SPEC_POINT, f"$.comparison.curve[{i}]", errors)
+
+
+@register("serving-v4")
+def _serving_v4(record, errors):
+    _check(record, {"config": _CONFIG_V4,
+                    "comparison": _V4_COMPARISON}, "$", errors)
+    for mode in ("single", "sharded"):
+        _check_run(record.get(mode, {}), f"$.{mode}", errors)
+    mesh = record.get("config", {}).get("mesh", {})
+    if isinstance(mesh, dict):
+        shape, n = mesh.get("shape"), mesh.get("n_devices")
+        if isinstance(shape, list) and isinstance(n, int):
+            prod = 1
+            for s in shape:
+                prod *= s if isinstance(s, int) else 0
+            if prod != n:
+                errors.append("$.config.mesh: shape does not multiply "
+                              f"to n_devices ({shape} vs {n})")
+
+
+@register("analysis-v1")
+def _analysis_v1(record, errors):
+    """Static-analysis report (scripts/audit_serve_path.py)."""
+    _check(record, {"config": dict, "summary": _ANALYSIS_SUMMARY},
+           "$", errors)
+    violations = record.get("violations")
+    if not isinstance(violations, list):
+        errors.append("$.violations: expected list")
+        return
+    for i, v in enumerate(violations):
+        _check(v, _ANALYSIS_VIOLATION, f"$.violations[{i}]", errors)
+        if isinstance(v, dict) and v.get("severity") not in ("error",
+                                                            "warning"):
+            errors.append(f"$.violations[{i}].severity: expected "
+                          f"'error' or 'warning', got {v.get('severity')!r}")
+    summary = record.get("summary", {})
+    if isinstance(summary, dict) and \
+            summary.get("violations") != len(violations):
+        errors.append("$.summary.violations: count does not match "
+                      f"len(violations) ({summary.get('violations')} vs "
+                      f"{len(violations)})")
+
+
 def validate(record: dict) -> list:
     """Return a list of violations (empty = valid)."""
     errors: list = []
     schema = record.get("schema")
-    if schema == "serving-v1":
-        _check(record, {"config": _CONFIG_V1}, "$", errors)
-        _check_run(record, "$", errors)
-    elif schema == "serving-v2":
-        _check(record, {"config": _CONFIG_V2, "comparison": _COMPARISON},
-               "$", errors)
-        for mode in ("dense", "paged"):
-            _check_run(record.get(mode, {}), f"$.{mode}", errors)
-        paged_agg = record.get("paged", {}).get("aggregate", {})
-        _check(paged_agg.get("paged", {}), _PAGED_AGGREGATE,
-               "$.paged.aggregate.paged", errors)
-    elif schema == "serving-v3":
-        _check(record, {"config": _CONFIG_V3,
-                        "comparison": _SPEC_COMPARISON}, "$", errors)
-        _check_run(record.get("plain", {}), "$.plain", errors)
-        runs = record.get("spec_runs")
-        if not isinstance(runs, list) or not runs:
-            errors.append("$.spec_runs: expected non-empty list")
-        else:
-            for i, sr in enumerate(runs):
-                path = f"$.spec_runs[{i}]"
-                _check(sr, {"accept_prob": NUM}, path, errors)
-                _check_run(sr, path, errors)
-                _check(sr.get("aggregate", {}).get("spec", {}),
-                       _SPEC_AGGREGATE, f"{path}.aggregate.spec", errors)
-        curve = record.get("comparison", {}).get("curve")
-        if not isinstance(curve, list) or not curve:
-            errors.append("$.comparison.curve: expected non-empty list")
-        else:
-            for i, pt in enumerate(curve):
-                _check(pt, _SPEC_POINT, f"$.comparison.curve[{i}]", errors)
-    elif schema == "serving-v4":
-        _check(record, {"config": _CONFIG_V4,
-                        "comparison": _V4_COMPARISON}, "$", errors)
-        for mode in ("single", "sharded"):
-            _check_run(record.get(mode, {}), f"$.{mode}", errors)
-        mesh = record.get("config", {}).get("mesh", {})
-        if isinstance(mesh, dict):
-            shape, n = mesh.get("shape"), mesh.get("n_devices")
-            if isinstance(shape, list) and isinstance(n, int):
-                prod = 1
-                for s in shape:
-                    prod *= s if isinstance(s, int) else 0
-                if prod != n:
-                    errors.append("$.config.mesh: shape does not multiply "
-                                  f"to n_devices ({shape} vs {n})")
+    checker = SCHEMAS.get(schema)
+    if checker is None:
+        known = ", ".join(sorted(SCHEMAS))
+        errors.append(f"$.schema: unknown schema {schema!r} "
+                      f"(expected one of: {known})")
     else:
-        errors.append(f"$.schema: unknown schema {schema!r} (expected "
-                      "serving-v1, serving-v2, serving-v3 or serving-v4)")
+        checker(record, errors)
     return errors
 
 

@@ -1,0 +1,33 @@
+"""Static analysis for the serve path: jaxpr auditing + repo lint.
+
+Two passes, both run by ``scripts/audit_serve_path.py`` and gated in CI:
+
+* :mod:`repro.analysis.jaxpr_audit` traces every serve-path callable
+  (families × dense/paged × mesh/no-mesh, enumerated by
+  :mod:`repro.analysis.targets`) without executing it and checks the
+  lowered jaxpr against the repo invariants (host transfers, donation,
+  f32-upcast allowlist, KV sharding-constraint coverage, determinism);
+* :mod:`repro.analysis.lint` checks the source tree itself for the
+  regression patterns learned in PRs 1–5 (per-instance ``jax.jit``,
+  blocking tick loops, per-token ``jnp`` calls, the deprecated
+  ``repro.core.moa`` shim) plus a dead-module census.
+
+See docs/static-analysis.md for the rule catalog and how to allowlist a
+site or add a rule.
+"""
+
+from repro.analysis.jaxpr_audit import (AuditTarget, audit_target,
+                                        audit_targets)
+from repro.analysis.lint import run_lint
+from repro.analysis.report import (ANALYSIS_SCHEMA, RULES, Violation,
+                                   build_report, summarize)
+from repro.analysis.targets import (SERVE_FAMILIES, SMOKE_BY_FAMILY,
+                                    build_family_targets, enumerate_targets,
+                                    make_audit_mesh)
+
+__all__ = [
+    "ANALYSIS_SCHEMA", "RULES", "Violation", "build_report", "summarize",
+    "AuditTarget", "audit_target", "audit_targets", "run_lint",
+    "SERVE_FAMILIES", "SMOKE_BY_FAMILY", "build_family_targets",
+    "enumerate_targets", "make_audit_mesh",
+]

@@ -1,0 +1,210 @@
+"""Intentionally-broken audit targets: every rule's proof of life.
+
+A static gate that never fires is indistinguishable from one that is
+wired up wrong, so each auditor rule has a minimal fixture here that MUST
+produce exactly that violation (enforced by ``tests/test_analysis.py``).
+Keep these in sync with :data:`repro.analysis.report.RULES`.
+
+The jaxpr fixtures live in this file on purpose: their tracebacks resolve
+to ``src/repro/analysis/fixtures.py``, which is *not* on the f32-upcast
+allowlist, so the upcast fixture exercises the real site-attribution
+path.
+"""
+
+from __future__ import annotations
+
+import textwrap
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis.jaxpr_audit import AuditTarget
+
+__all__ = ["JAXPR_FIXTURES", "LINT_FIXTURES", "CLEAN_LINT_FIXTURES"]
+
+_BF16_44 = jax.ShapeDtypeStruct((4, 4), jnp.bfloat16)
+_KV_SHAPE = (2, 32, 2, 16)
+_KV_SDS = jax.ShapeDtypeStruct(_KV_SHAPE, jnp.bfloat16)
+_KV_EXPECTED = ("data", None, "model", None)
+
+
+def bad_host_transfer() -> AuditTarget:
+    """device_put inside a jitted path → no-host-transfer."""
+
+    def fn(x):
+        return jax.device_put(x) + 1
+
+    return AuditTarget(name="fixture/host-transfer", family="dense",
+                       fn=fn, args=(_BF16_44,))
+
+
+def bad_donation() -> AuditTarget:
+    """Donated bf16 input, f32 output: aval mismatch drops the alias →
+    donation-honored."""
+
+    def fn(x):
+        return x.astype(jnp.float32) * 2
+
+    return AuditTarget(name="fixture/donation", family="dense",
+                       fn=fn, args=(_BF16_44,), donate=(0,))
+
+
+def bad_upcast() -> AuditTarget:
+    """bf16 → f32 upcast originating here (not an allowlisted file) →
+    f32-upcast-allowlist."""
+
+    def fn(x):
+        return jnp.sum(x.astype(jnp.float32))
+
+    return AuditTarget(name="fixture/upcast", family="dense",
+                       fn=fn, args=(_BF16_44,))
+
+
+def bad_prng() -> AuditTarget:
+    """In-graph PRNG on a deterministic target → determinism."""
+
+    def fn(x):
+        return x + jax.random.uniform(jax.random.PRNGKey(0), x.shape,
+                                      jnp.bfloat16)
+
+    return AuditTarget(name="fixture/prng", family="dense",
+                       fn=fn, args=(_BF16_44,), deterministic=True)
+
+
+def bad_missing_constraint(mesh) -> AuditTarget:
+    """KV-shaped value flows through unconstrained on a mesh →
+    kv-constraint-coverage (missing)."""
+
+    def fn(kv):
+        return kv * 2
+
+    return AuditTarget(name="fixture/missing-constraint", family="dense",
+                       fn=fn, args=(_KV_SDS,), mesh=mesh,
+                       kv_specs=((_KV_SHAPE, _KV_EXPECTED),))
+
+
+def bad_mismatched_constraint(mesh) -> AuditTarget:
+    """Constraint present but with the wrong spec →
+    kv-constraint-coverage (mismatch)."""
+
+    def fn(kv):
+        kv = jax.lax.with_sharding_constraint(
+            kv, NamedSharding(mesh, P(None, "model", None, None)))
+        return kv * 2
+
+    return AuditTarget(name="fixture/mismatched-constraint", family="dense",
+                       fn=fn, args=(_KV_SDS,), mesh=mesh,
+                       kv_specs=((_KV_SHAPE, _KV_EXPECTED),))
+
+
+def bad_model_constraint(mesh) -> AuditTarget:
+    """Model-axis sharding on a bitwise-reproducible (ssm) family →
+    determinism."""
+
+    def fn(x):
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(None, "model"))) * 2
+
+    return AuditTarget(name="fixture/model-constraint", family="ssm",
+                       fn=fn, args=(_BF16_44,), mesh=mesh)
+
+
+def bad_model_collective(mesh) -> AuditTarget:
+    """Model-axis psum on a bitwise-reproducible (ssm) family →
+    determinism."""
+    from jax.experimental.shard_map import shard_map
+
+    def fn(x):
+        inner = shard_map(lambda y: jax.lax.psum(y, "model"), mesh=mesh,
+                          in_specs=P(), out_specs=P())
+        return inner(x)
+
+    return AuditTarget(name="fixture/model-collective", family="ssm",
+                       fn=fn, args=(_BF16_44,), mesh=mesh)
+
+
+#: rule id → fixture builder; builders taking a mesh are marked True
+JAXPR_FIXTURES: Dict[str, Tuple[Callable, bool]] = {
+    "no-host-transfer": (bad_host_transfer, False),
+    "donation-honored": (bad_donation, False),
+    "f32-upcast-allowlist": (bad_upcast, False),
+    "determinism": (bad_prng, False),
+    "determinism/model-constraint": (bad_model_constraint, True),
+    "determinism/model-collective": (bad_model_collective, True),
+    "kv-constraint-coverage": (bad_missing_constraint, True),
+    "kv-constraint-coverage/mismatch": (bad_mismatched_constraint, True),
+}
+
+
+def _src(text: str) -> str:
+    return textwrap.dedent(text).lstrip()
+
+
+#: lint rule id → (pretend repo-relative path, source) that must trip it
+LINT_FIXTURES: Dict[str, Tuple[str, str]] = {
+    "lint-jit-in-init": ("src/repro/serve/_fixture.py", _src("""
+        import jax
+
+        class Engine:
+            def __init__(self, fn):
+                self.step = jax.jit(fn)
+    """)),
+    "lint-block-in-loop": ("src/repro/serve/_fixture.py", _src("""
+        def tick_loop(engine, requests):
+            for r in requests:
+                out = engine.step(r)
+                out.block_until_ready()
+            return out
+    """)),
+    "lint-jnp-in-loop": ("src/repro/serve/_fixture.py", _src("""
+        import jax.numpy as jnp
+
+        def detok(logits_list):
+            toks = []
+            for logits in logits_list:
+                toks.append(int(jnp.argmax(logits)))
+            return toks
+    """)),
+    "lint-moa-shim": ("src/repro/core/_fixture.py", _src("""
+        from repro.core.moa import popcount_adder
+    """)),
+}
+
+#: near-misses that must stay clean (scoping and suppression are part of
+#: each rule's contract)
+CLEAN_LINT_FIXTURES: Dict[str, Tuple[str, str]] = {
+    "jit-outside-init": ("src/repro/serve/_fixture.py", _src("""
+        import jax
+
+        def build(fn):
+            return jax.jit(fn)
+    """)),
+    "jit-in-init-allowed": ("src/repro/launch/_fixture.py", _src("""
+        import jax
+
+        class Trainer:
+            def __init__(self, fn):
+                # audit: allow(lint-jit-in-init)
+                self.step = jax.jit(fn)
+    """)),
+    "block-outside-loop": ("src/repro/serve/_fixture.py", _src("""
+        def warmup(engine, r):
+            out = engine.step(r)
+            out.block_until_ready()
+            return out
+    """)),
+    "jnp-loop-outside-serve": ("src/repro/layers/_fixture.py", _src("""
+        import jax.numpy as jnp
+
+        def stack_all(xs):
+            out = []
+            for x in xs:
+                out.append(jnp.asarray(x))
+            return out
+    """)),
+    "moa-shim-in-tests": ("tests/test_fixture.py", _src("""
+        from repro.core.moa import popcount_adder
+    """)),
+}

@@ -1,0 +1,282 @@
+"""AST lint: repo-specific rules learned from PRs 1–5, plus a dead-module
+census.
+
+Rules (ids match :data:`repro.analysis.report.RULES`):
+
+* ``lint-jit-in-init`` — a ``jax.jit`` call lexically inside an
+  ``__init__`` body builds a fresh executable per instance; PR 5 shipped
+  exactly this regression. Engines must route through the module compile
+  cache (``serve.engine._cached_jit``). Scope: all of ``src/repro``.
+* ``lint-block-in-loop`` — ``block_until_ready`` inside a Python
+  ``for``/``while`` serializes the engine tick loop on device completion
+  (the compile-time-in-latency bug). One straight-line warm-up sync is
+  fine; a loop-carried one is not. Scope: ``src/repro/serve``.
+* ``lint-jnp-in-loop`` — ``jnp.*`` calls inside a Python loop dispatch
+  one kernel per token; serve code batches device work into one jitted
+  call per tick. Scope: ``src/repro/serve``.
+* ``lint-moa-shim`` — the deprecated ``repro.core.moa`` shim must not
+  gain new importers (tests pin the legacy surface deliberately and are
+  exempt). Scope: ``src``, ``scripts``, ``benchmarks``, ``examples``.
+* ``lint-dead-module`` — every ``src/repro`` module must be imported
+  somewhere (src, tests, scripts, benchmarks, examples); package
+  ``__init__``s and ``__main__``-guarded entry points are exempt.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.report import Violation
+
+__all__ = ["lint_source", "lint_tree", "dead_module_census", "run_lint"]
+
+_LINT_TARGET = "lint"
+
+#: directories (relative to repo root) whose modules count as importers
+_IMPORTER_DIRS = ("src", "tests", "scripts", "benchmarks", "examples")
+
+#: the deprecated shim and the module allowed to mention it (itself)
+_MOA_SHIM = "repro.core.moa"
+_MOA_SHIM_FILE = "src/repro/core/moa.py"
+
+#: inline suppression: ``# audit: allow(<rule-id>)`` on the flagged line
+#: or the line directly above it (a rationale comment is expected there)
+_ALLOW_RE = re.compile(r"#\s*audit:\s*allow\(([\w-]+)\)")
+
+
+class _Linter(ast.NodeVisitor):
+    """Single-pass walker tracking the enclosing function/loop stacks."""
+
+    def __init__(self, rel_path: str, in_serve: bool):
+        self.rel = rel_path
+        self.in_serve = in_serve
+        self.fn_stack: List[str] = []
+        self.loop_depth = 0
+        self.out: List[Violation] = []
+
+    # ---- scope tracking ----------------------------------------------------
+    def _visit_fn(self, node):
+        self.fn_stack.append(node.name)
+        outer_loops = self.loop_depth
+        self.loop_depth = 0          # a nested def resets the loop context
+        self.generic_visit(node)
+        self.loop_depth = outer_loops
+        self.fn_stack.pop()
+
+    visit_FunctionDef = _visit_fn
+    visit_AsyncFunctionDef = _visit_fn
+
+    def _visit_loop(self, node):
+        self.loop_depth += 1
+        self.generic_visit(node)
+        self.loop_depth -= 1
+
+    visit_For = _visit_loop
+    visit_While = _visit_loop
+    visit_AsyncFor = _visit_loop
+
+    # ---- rules -------------------------------------------------------------
+    def visit_Call(self, node: ast.Call):
+        func = node.func
+        if isinstance(func, ast.Attribute):
+            # jax.jit(...) lexically under an __init__
+            if (func.attr == "jit" and isinstance(func.value, ast.Name)
+                    and func.value.id == "jax"
+                    and "__init__" in self.fn_stack):
+                self.out.append(Violation(
+                    rule="lint-jit-in-init", target=_LINT_TARGET,
+                    file=self.rel, line=node.lineno,
+                    message=("jax.jit inside __init__ builds a per-instance "
+                             "executable — route through the module compile "
+                             "cache (_cached_jit)")))
+            if self.in_serve and self.loop_depth > 0:
+                if func.attr == "block_until_ready":
+                    self.out.append(Violation(
+                        rule="lint-block-in-loop", target=_LINT_TARGET,
+                        file=self.rel, line=node.lineno,
+                        message=("block_until_ready inside a serve loop "
+                                 "serializes ticks on device completion")))
+                root = func
+                while isinstance(root, ast.Attribute):
+                    root = root.value
+                if isinstance(root, ast.Name) and root.id == "jnp":
+                    self.out.append(Violation(
+                        rule="lint-jnp-in-loop", target=_LINT_TARGET,
+                        file=self.rel, line=node.lineno,
+                        message=("jnp call inside a per-token Python loop — "
+                                 "batch device work into one jitted call "
+                                 "per tick")))
+        self.generic_visit(node)
+
+    # ---- shim imports ------------------------------------------------------
+    def _check_shim(self, modname: Optional[str], lineno: int):
+        if modname and (modname == _MOA_SHIM
+                        or modname.startswith(_MOA_SHIM + ".")):
+            if self.rel != _MOA_SHIM_FILE:
+                self.out.append(Violation(
+                    rule="lint-moa-shim", target=_LINT_TARGET,
+                    file=self.rel, line=lineno,
+                    message=("import of the deprecated repro.core.moa shim "
+                             "— use repro.moa")))
+
+    def visit_Import(self, node: ast.Import):
+        for alias in node.names:
+            self._check_shim(alias.name, node.lineno)
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom):
+        if node.level == 0:
+            self._check_shim(node.module, node.lineno)
+            if node.module == "repro.core":
+                for alias in node.names:
+                    if alias.name == "moa":
+                        self._check_shim(_MOA_SHIM, node.lineno)
+        self.generic_visit(node)
+
+
+def lint_source(rel_path: str, source: str) -> List[Violation]:
+    """Lint one module given its repo-relative path and source text."""
+    rel = rel_path.replace(os.sep, "/")
+    in_serve = rel.startswith("src/repro/serve/")
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [Violation(
+            rule="lint-parse-error", target=_LINT_TARGET, file=rel,
+            line=e.lineno or 0, message=f"unparseable module: {e.msg}")]
+    shim_scope = rel.split("/", 1)[0] in ("src", "scripts", "benchmarks",
+                                          "examples")
+    linter = _Linter(rel, in_serve)
+    linter.visit(tree)
+    if not shim_scope:
+        linter.out = [v for v in linter.out if v.rule != "lint-moa-shim"]
+    lines = source.splitlines()
+
+    def allowed(v: Violation) -> bool:
+        for ln in (v.line, v.line - 1):
+            if 1 <= ln <= len(lines) and v.rule in _ALLOW_RE.findall(
+                    lines[ln - 1]):
+                return True
+        return False
+
+    return [v for v in linter.out if not allowed(v)]
+
+
+def _py_files(root: str, sub: str) -> Iterable[str]:
+    base = os.path.join(root, sub)
+    for dirpath, dirnames, filenames in os.walk(base):
+        dirnames[:] = [d for d in dirnames
+                       if d not in ("__pycache__", ".git")]
+        for fn in sorted(filenames):
+            if fn.endswith(".py"):
+                yield os.path.relpath(os.path.join(dirpath, fn), root)
+
+
+def lint_tree(repo_root: str) -> Tuple[List[Violation], int]:
+    """Lint every Python module in the importer directories; returns
+    (violations, files linted)."""
+    out: List[Violation] = []
+    n = 0
+    for sub in _IMPORTER_DIRS:
+        if not os.path.isdir(os.path.join(repo_root, sub)):
+            continue
+        for rel in _py_files(repo_root, sub):
+            with open(os.path.join(repo_root, rel), encoding="utf-8") as f:
+                src = f.read()
+            out.extend(lint_source(rel, src))
+            n += 1
+    return out, n
+
+
+# ---------------------------------------------------------------------------
+# dead-module census
+# ---------------------------------------------------------------------------
+
+
+def _module_name(rel: str) -> Optional[str]:
+    """src/repro/a/b.py → repro.a.b (None for non-src files)."""
+    rel = rel.replace(os.sep, "/")
+    if not rel.startswith("src/") or not rel.endswith(".py"):
+        return None
+    mod = rel[len("src/"):-len(".py")]
+    if mod.endswith("/__init__"):
+        mod = mod[: -len("/__init__")]
+    return mod.replace("/", ".")
+
+
+def _imported_modules(tree: ast.AST, known: Set[str]) -> Set[str]:
+    """Module names this AST imports, resolved against the known set
+    (``from repro.a import b`` marks ``repro.a.b`` when it is a module)."""
+    out: Set[str] = set()
+
+    def mark(name: str):
+        if name in known:
+            out.add(name)
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                mark(alias.name)
+        elif isinstance(node, ast.ImportFrom) and node.level == 0 \
+                and node.module:
+            mark(node.module)
+            for alias in node.names:
+                mark(f"{node.module}.{alias.name}")
+    return out
+
+
+def dead_module_census(repo_root: str) -> List[Violation]:
+    """Flag every ``src/repro`` module imported by nothing.
+
+    Exemptions: package ``__init__`` modules (plumbing) and modules with a
+    ``__main__`` guard (CLI entry points run via ``python -m``).
+    """
+    sources: Dict[str, Tuple[str, ast.AST]] = {}
+    for sub in _IMPORTER_DIRS:
+        if not os.path.isdir(os.path.join(repo_root, sub)):
+            continue
+        for rel in _py_files(repo_root, sub):
+            with open(os.path.join(repo_root, rel), encoding="utf-8") as f:
+                try:
+                    tree = ast.parse(f.read())
+                except SyntaxError:
+                    continue
+            sources[rel] = (_module_name(rel), tree)
+
+    known = {mod for mod, _ in sources.values() if mod}
+    imported: Set[str] = set()
+    for rel, (mod, tree) in sources.items():
+        for name in _imported_modules(tree, known):
+            if name != mod:          # self-imports don't keep a module alive
+                imported.add(name)
+
+    out: List[Violation] = []
+    for rel in sorted(sources):
+        mod, tree = sources[rel]
+        if not mod or not mod.startswith("repro"):
+            continue
+        if rel.endswith("__init__.py"):
+            continue
+        if mod in imported:
+            continue
+        if any(isinstance(n, ast.If) and isinstance(n.test, ast.Compare)
+               and isinstance(n.test.left, ast.Name)
+               and n.test.left.id == "__name__"
+               for n in ast.walk(tree)):
+            continue                 # __main__-guarded entry point
+        out.append(Violation(
+            rule="lint-dead-module", target=_LINT_TARGET, file=rel, line=1,
+            message=(f"module {mod} is imported by nothing under "
+                     f"{'/'.join(_IMPORTER_DIRS)} — wire it up or remove "
+                     "it")))
+    return out
+
+
+def run_lint(repo_root: str) -> Tuple[List[Violation], int]:
+    """Both lint passes; returns (violations, files linted)."""
+    violations, n_files = lint_tree(repo_root)
+    violations.extend(dead_module_census(repo_root))
+    return violations, n_files

@@ -1,0 +1,110 @@
+"""Violation records and the ``analysis-v1`` report schema.
+
+The static auditor's output mirrors the serving benchmark records
+(``serving-v1..v4``): a JSON document with a ``schema`` tag, validated by
+the registry in ``scripts/check_bench_schema.py`` and uploaded as a CI
+artifact. Keeping the report schema-checked means the CI gate can never
+silently pass on a malformed (e.g. empty-by-accident) report.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+__all__ = ["ANALYSIS_SCHEMA", "RULES", "Violation", "build_report"]
+
+ANALYSIS_SCHEMA = "analysis-v1"
+
+#: rule id → one-line description (the catalog in docs/static-analysis.md)
+RULES: Dict[str, str] = {
+    "no-host-transfer": (
+        "no device_put / host-callback primitives inside jitted serve-path "
+        "callables"),
+    "donation-honored": (
+        "every donated argument's leaves appear in the lowering's "
+        "input-output aliasing table"),
+    "f32-upcast-allowlist": (
+        "bf16/f16 -> f32 upcasts only at the named accumulation sites in "
+        "layers/numerics.py and layers/attention.py"),
+    "kv-constraint-coverage": (
+        "KV-cache writes and gathers carry a sharding_constraint matching "
+        "the serve_rules_for(family) table"),
+    "determinism": (
+        "bitwise-reproducible families: no PRNG primitives on deterministic "
+        "paths, no model-axis collectives or constraints on ssm/hybrid"),
+    "lint-jit-in-init": (
+        "no per-instance jax.jit in __init__ — route through the module "
+        "compile cache (_cached_jit)"),
+    "lint-block-in-loop": (
+        "no block_until_ready inside serve/ Python loops (engine ticks must "
+        "stay async)"),
+    "lint-jnp-in-loop": (
+        "no jnp.* calls inside per-token Python loops in serve/ (one fused "
+        "call per tick)"),
+    "lint-moa-shim": (
+        "no new imports of the deprecated repro.core.moa shim"),
+    "lint-dead-module": (
+        "every src/repro module is imported by something (dead-code census)"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One broken invariant, with source provenance.
+
+    ``file``/``line`` point at the offending source site (for jaxpr rules,
+    the innermost repro frame of the primitive's traceback); ``provenance``
+    carries the jaxpr-side context (primitive name and nesting path) or the
+    lint rule's AST context.
+    """
+
+    rule: str
+    target: str
+    file: str
+    line: int
+    message: str
+    provenance: str = ""
+    severity: str = "error"
+
+    def format(self) -> str:
+        loc = f"{self.file}:{self.line}" if self.file else "<unknown>"
+        tail = f" [{self.provenance}]" if self.provenance else ""
+        return f"{loc}: {self.rule} ({self.target}): {self.message}{tail}"
+
+
+def build_report(violations: Sequence[Violation], *, targets_audited: int,
+                 files_linted: int, config: Dict) -> Dict:
+    """Assemble the ``analysis-v1`` record (see scripts/check_bench_schema)."""
+    return {
+        "schema": ANALYSIS_SCHEMA,
+        "config": dict(config),
+        "summary": {
+            "targets_audited": int(targets_audited),
+            "files_linted": int(files_linted),
+            "violations": len(violations),
+            "rules_checked": sorted(RULES),
+        },
+        "violations": [
+            {
+                "rule": v.rule,
+                "severity": v.severity,
+                "target": v.target,
+                "file": v.file,
+                "line": int(v.line),
+                "message": v.message,
+                "provenance": v.provenance,
+            }
+            for v in violations
+        ],
+    }
+
+
+def summarize(violations: List[Violation]) -> str:
+    if not violations:
+        return "analysis: clean (0 violations)"
+    by_rule: Dict[str, int] = {}
+    for v in violations:
+        by_rule[v.rule] = by_rule.get(v.rule, 0) + 1
+    parts = ", ".join(f"{r}={n}" for r, n in sorted(by_rule.items()))
+    return f"analysis: {len(violations)} violation(s) ({parts})"

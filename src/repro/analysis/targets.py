@@ -1,0 +1,280 @@
+"""Enumerate serve-path audit targets: families × dense/paged × mesh modes.
+
+Each family module registers its serve surface in a ``SERVE_AUDIT`` dict
+(phases, KV stack key, paged/suffix capability); this module turns that
+table into :class:`~repro.analysis.jaxpr_audit.AuditTarget` records with
+abstract (``ShapeDtypeStruct``) arguments — exactly the callables the
+:class:`~repro.serve.engine.ServeEngine` jits, with the same donation and
+in/out sharding wiring, so the auditor inspects what the engine actually
+compiles.
+
+Mesh targets trace on a (data=1, model=1) mesh: ``sharding_constraint``
+equations carry their full logical specs regardless of axis sizes (and
+nothing is dropped for indivisibility on size-1 axes), so the audit runs
+on a single CPU device.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.analysis.jaxpr_audit import AuditTarget, _norm_spec
+from repro.configs.registry import get_config, smoke_config
+from repro.models.api import build_model
+from repro.parallel.sharding import (constraint_spec,
+                                     replicate_uneven_kv_heads,
+                                     serve_cache_shardings, serve_rules_for)
+from repro.serve.engine import (_clear_slot, _cow_copy, _gather_prefix,
+                                _paged_write, _write_slot)
+from repro.serve.sampling import sample_batch
+from repro.serve.spec import verify_accept
+
+__all__ = ["SMOKE_BY_FAMILY", "SERVE_FAMILIES", "make_audit_mesh",
+           "build_family_targets", "enumerate_targets"]
+
+#: family → smallest real config of that family (smoke-shrunk for tracing)
+SMOKE_BY_FAMILY = {
+    "dense": "llama3-8b",
+    "moe": "moonshot-v1-16b-a3b",
+    "ssm": "mamba2-370m",
+    "hybrid": "zamba2-1.2b",
+}
+SERVE_FAMILIES = tuple(SMOKE_BY_FAMILY)
+
+_CACHE_AXES = ("batch", "kv_seq", "kv_heads_cache", "head_dim")
+_POOL_AXES = (None, None, "kv_heads_cache", "head_dim")
+
+_i32, _bf16, _f32 = jnp.int32, jnp.bfloat16, jnp.float32
+
+
+def make_audit_mesh() -> Mesh:
+    """A (data=1, model=1) logical mesh on the first local device."""
+    return Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _expected_specs(cache: Dict, kv_key: Optional[str], rules, mesh, *,
+                    paged: bool, max_len: int, slots: int):
+    """KV operand shape → expected normalized constraint spec.
+
+    Covers the per-stack cache/pool slices the model constrains in-flight
+    (``_constrain_cache`` / ``_constrain_pool``) and, for the paged layout,
+    the gathered logical view (``gather_paged_kv``) which must carry the
+    dense-slot layout.
+    """
+    if kv_key is None or mesh is None:
+        return ()
+    out: Dict[Tuple[int, ...], Tuple[Any, ...]] = {}
+    axes = _POOL_AXES if paged else _CACHE_AXES
+    for name in ("k", "v"):
+        leaf = cache[kv_key][name]            # (stack, ...) per-stack slice
+        shape = tuple(leaf.shape[1:])
+        out[shape] = _norm_spec(constraint_spec(axes, rules, mesh),
+                                len(shape))
+        if paged:
+            # gathered logical view: (slots, max_len, Hk, D), dense layout
+            gathered = (slots, max_len) + shape[2:]
+            out[gathered] = _norm_spec(
+                constraint_spec(_CACHE_AXES, rules, mesh), len(gathered))
+    return tuple(out.items())
+
+
+def build_family_targets(family: str, *, mesh: Optional[Mesh] = None,
+                         slots: int = 2, max_len: int = 32, window: int = 4,
+                         block_size: int = 8,
+                         prefill_len: int = 16) -> List[AuditTarget]:
+    """All serve-path targets for one family on one mesh mode."""
+    cfg = smoke_config(get_config(SMOKE_BY_FAMILY[family]))
+    model = build_model(cfg)
+    hooks = model._mod.SERVE_AUDIT
+    kv_key = hooks["kv_key"]
+    params = model.abstract_params()
+    tag = "@mesh" if mesh is not None else ""
+
+    rules = param_sh = cache_sh = rep = None
+    if mesh is not None:
+        from repro.launch.steps import build_shardings, infer_param_axes
+        rules = replicate_uneven_kv_heads(
+            serve_rules_for(family), cfg.n_kv_heads, mesh)
+        param_sh = build_shardings(params, infer_param_axes(params), mesh,
+                                   rules)
+        rep = NamedSharding(mesh, P())
+
+    # engine-shaped dense cache: batched slots, per-slot position vector
+    cache = dict(jax.eval_shape(lambda: model.init_cache(slots, max_len)))
+    cache["pos"] = _sds((slots,), _i32)
+    if mesh is not None:
+        cache_sh = serve_cache_shardings(cache, mesh, rules, paged=False)
+    kv_dense = _expected_specs(cache, kv_key, rules, mesh, paged=False,
+                               max_len=max_len, slots=slots)
+
+    def mk(phase, fn, args, *, donate=(), det=True, ins=None, outs=None,
+           kv=()):
+        return AuditTarget(
+            name=f"{family}/{phase}{tag}", family=family, fn=fn,
+            args=tuple(args), donate=tuple(donate), deterministic=det,
+            mesh=mesh, rules=rules,
+            in_shardings=ins if mesh is not None else None,
+            out_shardings=outs if mesh is not None else None,
+            kv_specs=kv)
+
+    targets: List[AuditTarget] = []
+    phases = hooks["phases"]
+
+    if "prefill" in phases:
+        if model.supports_padded_prefill:
+            fn = lambda p, t, pl: model.prefill(  # noqa: E731
+                p, {"tokens": t}, max_len=max_len, prompt_len=pl)
+            targets.append(mk(
+                "prefill", fn,
+                (params, _sds((slots, prefill_len), _i32), _sds((), _i32)),
+                ins=(param_sh, rep, rep), outs=rep, kv=kv_dense))
+        else:
+            fn = lambda p, t: model.prefill(  # noqa: E731
+                p, {"tokens": t}, max_len=max_len)
+            targets.append(mk(
+                "prefill", fn, (params, _sds((slots, prefill_len), _i32)),
+                ins=(param_sh, rep), outs=rep, kv=kv_dense))
+
+    tokens1 = _sds((slots, 1), _i32)
+    if "decode" in phases:
+        targets.append(mk(
+            "decode", model.decode_step, (params, cache, tokens1),
+            donate=(1,), ins=(param_sh, cache_sh, rep),
+            outs=(rep, cache_sh), kv=kv_dense))
+
+    aux = None
+    if "verify" in phases and model.supports_spec_decode:
+        tokens_v = _sds((slots, window), _i32)
+        targets.append(mk(
+            "verify", model.verify_step, (params, cache, tokens_v),
+            donate=(1,), ins=(param_sh, cache_sh, rep),
+            outs=(rep, cache_sh, rep), kv=kv_dense))
+        aux = jax.eval_shape(model.verify_step, params, cache, tokens_v)[2]
+
+    if "commit" in phases and model.supports_spec_decode:
+        fn = lambda c, k, a: model.commit_verified(c, k, a)  # noqa: E731
+        targets.append(mk(
+            "commit", fn, (cache, _sds((slots,), _i32), aux),
+            donate=(0,), ins=(cache_sh, rep, rep), outs=cache_sh))
+
+    # engine slot-install: batch=1 prefill scattered into the batched cache
+    pre_tokens = _sds((1, prefill_len), _i32)
+    pre_cache = jax.eval_shape(
+        lambda p, t: model.prefill(p, {"tokens": t}, max_len=max_len),
+        params, pre_tokens)[1]
+    targets.append(mk(
+        "write_slot", _write_slot, (cache, pre_cache, _sds((), _i32)),
+        donate=(0,), ins=(cache_sh, rep, rep), outs=cache_sh))
+
+    if family == "dense":
+        # engine-level samplers are family-independent; audit them once
+        rng = _sds((2,), jnp.uint32)
+        temps, greedy = _sds((slots,), _f32), _sds((slots,), jnp.bool_)
+        targets.append(mk(
+            "sample", sample_batch,
+            (_sds((slots, cfg.vocab), _bf16), temps, greedy, rng),
+            det=False))
+        targets.append(mk(
+            "accept", verify_accept,
+            (_sds((slots, window, cfg.vocab), _bf16),
+             _sds((slots, window - 1), _i32), temps, greedy, rng),
+            det=False))
+
+    if not hooks["paged"]:
+        return targets
+
+    # ---- paged layout ------------------------------------------------------
+    max_blocks = max_len // block_size
+    n_blocks = slots * max_blocks
+    cache_p = jax.eval_shape(lambda: model.init_paged_cache(
+        slots, n_blocks + 1, block_size, max_blocks))
+    cache_p_sh = None
+    if mesh is not None:
+        cache_p_sh = serve_cache_shardings(cache_p, mesh, rules, paged=True)
+    kv_paged = _expected_specs(cache_p, kv_key, rules, mesh, paged=True,
+                               max_len=max_len, slots=slots)
+
+    def mkp(phase, fn, args, *, donate=(), ins=None, outs=None, kv=()):
+        return mk(f"paged_{phase}", fn, args, donate=donate, ins=ins,
+                  outs=outs, kv=kv)
+
+    targets.append(mkp(
+        "decode", model.paged_decode_step, (params, cache_p, tokens1),
+        donate=(1,), ins=(param_sh, cache_p_sh, rep),
+        outs=(rep, cache_p_sh), kv=kv_paged))
+
+    if model.supports_spec_decode:
+        targets.append(mkp(
+            "verify", model.paged_verify_step,
+            (params, cache_p, _sds((slots, window), _i32)),
+            donate=(1,), ins=(param_sh, cache_p_sh, rep),
+            outs=(rep, cache_p_sh, rep), kv=kv_paged))
+
+    pool_sh = cache_p_sh[kv_key] if cache_p_sh is not None else None
+    targets.append(mkp(
+        "gather_prefix",
+        functools.partial(_gather_prefix, cdtype=cfg.cdtype),
+        (cache_p[kv_key], _sds((2,), _i32)),
+        ins=(pool_sh, rep), outs=rep))
+
+    # prefill scatter: nb written blocks of the batch=1 prefill
+    nb = 2
+    pre_kv, pre_state_full = model.split_prefill_cache(pre_cache)
+    pre_kv = jax.tree.map(
+        lambda l: _sds((l.shape[0], 1, nb * block_size) + l.shape[3:],
+                       l.dtype), pre_kv)
+    pre_state = None
+    if pre_state_full is not None:
+        pre_state = jax.tree.map(
+            lambda l: _sds((l.shape[0], 1) + l.shape[2:], l.dtype),
+            pre_state_full)
+    targets.append(mkp(
+        "write",
+        functools.partial(_paged_write, kv_key=kv_key),
+        (cache_p, pre_kv, pre_state, _sds((nb,), _i32),
+         _sds((max_blocks,), _i32), _sds((), _i32), _sds((), _i32)),
+        donate=(0,), ins=(cache_p_sh,) + (rep,) * 6, outs=cache_p_sh))
+
+    scalar = _sds((), _i32)
+    targets.append(mkp(
+        "cow_copy", functools.partial(_cow_copy, kv_key=kv_key),
+        (cache_p, scalar, scalar, scalar, scalar),
+        donate=(0,), ins=(cache_p_sh,) + (rep,) * 4, outs=cache_p_sh))
+    targets.append(mkp(
+        "clear_slot", _clear_slot, (cache_p, scalar),
+        donate=(0,), ins=(cache_p_sh, rep), outs=cache_p_sh))
+
+    if hooks["suffix_prefill"]:
+        prefix = jax.eval_shape(
+            functools.partial(_gather_prefix, cdtype=cfg.cdtype),
+            cache_p[kv_key], _sds((nb,), _i32))
+        fn = lambda p, t, pre, pl: model.prefill_suffix(  # noqa: E731
+            p, {"tokens": t}, prefix=pre, prompt_len=pl)
+        targets.append(mkp(
+            "suffix_prefill", fn,
+            (params, pre_tokens, prefix, scalar),
+            ins=(param_sh, rep, rep, rep), outs=rep))
+
+    return targets
+
+
+def enumerate_targets(families: Sequence[str] = SERVE_FAMILIES,
+                      mesh_modes: Sequence[str] = ("none", "mesh"),
+                      **kwargs) -> List[AuditTarget]:
+    """The full audit matrix: families × dense/paged × mesh/no-mesh."""
+    out: List[AuditTarget] = []
+    for mode in mesh_modes:
+        mesh = make_audit_mesh() if mode == "mesh" else None
+        for family in families:
+            out.extend(build_family_targets(family, mesh=mesh, **kwargs))
+    return out

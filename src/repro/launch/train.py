@@ -73,6 +73,9 @@ class TrainLoop:
 
         shape = ShapeSpec("train", seq_len, global_batch, "train")
         with activate(self.mesh, self.rules):
+            # one Trainer per process (not per request, unlike serve
+            # engines), so a per-instance jit is deliberate here
+            # audit: allow(lint-jit-in-init)
             self._step_fn = jax.jit(
                 steps_lib.build_train_step(self.model, hyper=self.hyper),
                 donate_argnums=(0,))

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.layers.common import Params, dense_init
+from repro.layers.numerics import NEG_INF, kv_scale_zeros, online_softmax_init
 from repro.layers.rope import apply_rope
 from repro.parallel import constrain
 
@@ -33,7 +34,7 @@ __all__ = [
     "gather_paged_kv",
 ]
 
-_NEG_INF = -1e30  # finite sentinel: keeps exp() well-defined on all-masked rows
+_NEG_INF = NEG_INF  # canonical sentinel lives in layers/numerics.py
 
 
 def init_attention(rng, *, d_model: int, n_heads: int, n_kv_heads: int,
@@ -145,10 +146,8 @@ def flash_attention(q, k, v, *, causal: bool = True, q_chunk: int = 256,
                 "bhgqk,bkhd->bhgqd", p, v_blk.astype(jnp.float32))
             return (m_new, l_new, acc_new), None
 
-        m0 = jnp.full((B, Hk, G, q_chunk), _NEG_INF, jnp.float32)
-        l0 = jnp.zeros((B, Hk, G, q_chunk), jnp.float32)
-        a0 = jnp.zeros((B, Hk, G, q_chunk, D), jnp.float32)
-        (m, l, acc), _ = lax.scan(inner, (m0, l0, a0),
+        (m, l, acc), _ = lax.scan(inner,
+                                  online_softmax_init((B, Hk, G, q_chunk), D),
                                   (jnp.arange(nk), kb, vb))
         o_blk = acc / jnp.maximum(l, 1e-30)[..., None]   # (B,Hk,G,qc,D)
         return None, jnp.moveaxis(o_blk, 3, 1)           # (B,qc,Hk,G,D)
@@ -269,10 +268,8 @@ def init_kv_cache(batch: int, max_len: int, n_kv_heads: int, head_dim: int,
         "v": jnp.zeros((batch, max_len, n_kv_heads, head_dim), dtype),
     }
     if dtype == jnp.int8:
-        cache["k_scale"] = jnp.zeros((batch, max_len, n_kv_heads),
-                                     jnp.float32)
-        cache["v_scale"] = jnp.zeros((batch, max_len, n_kv_heads),
-                                     jnp.float32)
+        cache["k_scale"] = kv_scale_zeros((batch, max_len, n_kv_heads))
+        cache["v_scale"] = kv_scale_zeros((batch, max_len, n_kv_heads))
     return _constrain_cache(cache)
 
 
@@ -292,10 +289,10 @@ def init_kv_pool(n_phys_blocks: int, block_size: int, n_kv_heads: int,
                        dtype),
     }
     if dtype == jnp.int8:
-        pool["k_scale"] = jnp.zeros((n_phys_blocks, block_size, n_kv_heads),
-                                    jnp.float32)
-        pool["v_scale"] = jnp.zeros((n_phys_blocks, block_size, n_kv_heads),
-                                    jnp.float32)
+        pool["k_scale"] = kv_scale_zeros((n_phys_blocks, block_size,
+                                          n_kv_heads))
+        pool["v_scale"] = kv_scale_zeros((n_phys_blocks, block_size,
+                                          n_kv_heads))
     return _constrain_pool(pool)
 
 

@@ -13,6 +13,8 @@ from typing import Any, Dict
 import jax
 import jax.numpy as jnp
 
+from repro.layers.numerics import f32_upcast
+
 Params = Dict[str, Any]
 
 __all__ = ["Params", "DTypePolicy", "rms_norm", "layer_norm", "init_rms_norm",
@@ -58,10 +60,10 @@ def init_rms_norm(d: int, dtype=jnp.float32) -> Params:
 def rms_norm(params: Params, x, *, eps: float = 1e-6):
     """RMSNorm in f32 (mixed_precision_sensitive: the 1/sqrt(mean(x²))
     reduction is itself a multi-operand adder — always exact f32)."""
-    xf = x.astype(jnp.float32)
+    xf = f32_upcast(x)
     var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
     y = xf * jax.lax.rsqrt(var + eps)
-    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+    return (y * f32_upcast(params["scale"])).astype(x.dtype)
 
 
 def init_layer_norm(d: int, dtype=jnp.float32) -> Params:

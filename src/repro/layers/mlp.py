@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.layers.common import Params, dense_init
 from repro.layers.linear import project
+from repro.layers.numerics import silu_f32
 
 __all__ = ["init_swiglu", "swiglu", "init_gelu_mlp", "gelu_mlp"]
 
@@ -33,7 +34,7 @@ def swiglu(params: Params, x, *, strategy=None,
                 compute_dtype=compute_dtype)
     u = project({"w": params["w_up"]}, x, strategy=strategy,
                 compute_dtype=compute_dtype)
-    h = jax.nn.silu(g.astype(jnp.float32)).astype(compute_dtype) * u
+    h = silu_f32(g, out_dtype=compute_dtype) * u
     return project({"w": params["w_down"]}, h, strategy=strategy,
                    compute_dtype=compute_dtype)
 

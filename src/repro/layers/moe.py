@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.layers.common import Params, dense_init
-from repro.layers.numerics import einsum_f32
+from repro.layers.numerics import einsum_f32, silu_f32
 from repro.moa import active_strategy
 
 __all__ = ["init_moe", "moe_forward"]
@@ -117,7 +117,7 @@ def moe_forward(params: Params, x, *, n_experts: int, top_k: int,
     # --- expert compute ----------------------------------------------------------
     gates = expert_dot("gecd,edf->gecf", buf, params["w_gate"])
     ups = expert_dot("gecd,edf->gecf", buf, params["w_up"])
-    h = jax.nn.silu(gates.astype(jnp.float32)).astype(compute_dtype) * ups
+    h = silu_f32(gates, out_dtype=compute_dtype) * ups
     out_buf = expert_dot("gecf,efd->gecd", h, params["w_down"])
 
     # --- combine (token-side MOA over k expert outputs) -------------------------

@@ -1,10 +1,16 @@
-"""Backend-aware numerics helpers.
+"""Backend-aware numerics helpers — the repo's f32-accumulation anchors.
 
 ``einsum_f32``: contraction with f32 accumulation. On TPU this is the
 MXU-native ``preferred_element_type=f32`` on bf16 operands; the CPU
 runtime's DotThunk does not implement batched BF16×BF16→F32, so on CPU the
 operands are explicitly up-cast (same math, slower — correctness path
 only).
+
+The remaining helpers are the *named* upcast sites the static auditor
+(:mod:`repro.analysis.jaxpr_audit`) allowlists: any bf16/f16 → f32
+``convert_element_type`` on a serve path must originate here or in
+``layers/attention.py``. Routing an accumulation through one of these
+helpers is how a new site gets allowlisted (docs/static-analysis.md).
 """
 
 from __future__ import annotations
@@ -12,7 +18,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["einsum_f32"]
+__all__ = [
+    "NEG_INF", "einsum_f32", "f32_upcast", "accum_upcast", "silu_f32",
+    "softplus_f32", "sum_f32", "online_softmax_init", "kv_scale_zeros",
+]
+
+#: finite masking sentinel: keeps exp() well-defined on all-masked rows
+NEG_INF = -1e30
 
 
 def einsum_f32(spec: str, a, b, *, out_dtype=None):
@@ -22,3 +34,56 @@ def einsum_f32(spec: str, a, b, *, out_dtype=None):
     else:
         y = jnp.einsum(spec, a.astype(jnp.float32), b.astype(jnp.float32))
     return y.astype(out_dtype)
+
+
+def f32_upcast(x):
+    """Upcast to f32 ahead of an accumulation / normalization / softmax."""
+    return x.astype(jnp.float32)
+
+
+def accum_upcast(x, accum_dtype):
+    """Upcast an MOA operand to its accumulator dtype (usually f32)."""
+    return x.astype(accum_dtype)
+
+
+def silu_f32(x, *, out_dtype=None):
+    """SiLU evaluated in f32 (exp underflows in bf16 for moderate |x|)."""
+    y = jax.nn.silu(x.astype(jnp.float32))
+    return y if out_dtype is None else y.astype(out_dtype)
+
+
+def softplus_f32(x, *, bias=None):
+    """Softplus evaluated in f32 (the SSM dt parameterization); ``bias``
+    (e.g. ``dt_bias``) is added after the upcast so the promotion happens
+    here, not at the call site."""
+    xf = x.astype(jnp.float32)
+    if bias is not None:
+        xf = xf + bias.astype(jnp.float32)
+    return jax.nn.softplus(xf)
+
+
+def sum_f32(x, *, axis=None, out_dtype=None):
+    """Sum-reduce with an explicit f32 accumulator, storing back narrow.
+
+    ``jnp.sum`` already accumulates half floats in f32 internally; naming
+    the site moves the upcast here so the auditor sees it as budgeted.
+    """
+    out_dtype = x.dtype if out_dtype is None else out_dtype
+    return jnp.sum(x.astype(jnp.float32), axis=axis).astype(out_dtype)
+
+
+def online_softmax_init(stat_shape, head_dim: int):
+    """The flash-attention running triple ``(max, denom, accum)`` in f32.
+
+    ``stat_shape`` is the per-query statistics shape (e.g.
+    ``(B, Hk, G, q_chunk)``); the accumulator appends ``head_dim``.
+    """
+    m0 = jnp.full(stat_shape, NEG_INF, jnp.float32)
+    l0 = jnp.zeros(stat_shape, jnp.float32)
+    a0 = jnp.zeros(tuple(stat_shape) + (head_dim,), jnp.float32)
+    return m0, l0, a0
+
+
+def kv_scale_zeros(shape):
+    """Zero-initialized per-(pos, head) f32 scales for an int8 KV cache."""
+    return jnp.zeros(shape, jnp.float32)

@@ -4,6 +4,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.layers.numerics import f32_upcast
+
 __all__ = ["rope_frequencies", "apply_rope"]
 
 
@@ -24,6 +26,6 @@ def apply_rope(x, positions, *, theta: float = 10000.0):
     angles = positions[..., :, None].astype(jnp.float32) * inv_freq  # (..., S, D/2)
     sin = jnp.sin(angles)[..., :, None, :]  # broadcast over heads
     cos = jnp.cos(angles)[..., :, None, :]
-    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    x1, x2 = jnp.split(f32_upcast(x), 2, axis=-1)
     rotated = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
     return rotated.astype(x.dtype)

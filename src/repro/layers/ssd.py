@@ -21,6 +21,9 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.layers.numerics import (f32_upcast, silu_f32, softplus_f32,
+                                   sum_f32)
+
 from repro.layers.common import Params, dense_init, init_rms_norm, rms_norm
 
 __all__ = [
@@ -73,20 +76,20 @@ def ssd_chunked(x, a, b, c, *, chunk: int, h0=None):
     def to_chunks(t):
         return t.reshape((B, n_chunks, chunk) + t.shape[2:])
 
-    xc, ac, bc, cc = map(to_chunks, (x, a.astype(jnp.float32), b, c))
+    xc, ac, bc, cc = map(to_chunks, (x, f32_upcast(a), b, c))
     a_cs = jnp.cumsum(ac, axis=2)                      # (B, C, L, H)
 
     # 1. intra-chunk (spatial tree / MXU quadratic term)
     Lmat = jnp.exp(_segsum(jnp.moveaxis(ac, -1, 2)))   # (B, C, H, L, L)
     y_diag = jnp.einsum("bclhn,bcshn,bchls,bcshp->bclhp",
-                        cc.astype(jnp.float32), bc.astype(jnp.float32),
-                        Lmat, xc.astype(jnp.float32))
+                        f32_upcast(cc), f32_upcast(bc),
+                        Lmat, f32_upcast(xc))
 
     # 2. per-chunk end states
     decay_to_end = jnp.exp(a_cs[:, :, -1:, :] - a_cs)  # (B, C, L, H)
     states = jnp.einsum("bclhn,bclh,bclhp->bchpn",
-                        bc.astype(jnp.float32), decay_to_end,
-                        xc.astype(jnp.float32))        # (B, C, H, P, N)
+                        f32_upcast(bc), decay_to_end,
+                        f32_upcast(xc))                # (B, C, H, P, N)
 
     # 3. inter-chunk recurrence — the serial accumulator (§3.1)
     chunk_decay = jnp.exp(a_cs[:, :, -1, :])           # (B, C, H)
@@ -99,13 +102,13 @@ def ssd_chunked(x, a, b, c, *, chunk: int, h0=None):
         return h_next, h_prev
 
     (h_last, h_prevs) = lax.scan(
-        step, h0.astype(jnp.float32),
+        step, f32_upcast(h0),
         (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
     h_prevs = jnp.moveaxis(h_prevs, 0, 1)              # (B, C, H, P, N)
 
     # 4. state → output within each chunk
     y_off = jnp.einsum("bclhn,bchpn,bclh->bclhp",
-                       cc.astype(jnp.float32), h_prevs, jnp.exp(a_cs))
+                       f32_upcast(cc), h_prevs, jnp.exp(a_cs))
     y = (y_diag + y_off).reshape(B, Sp, H, P)[:, :S]
     return y.astype(x.dtype), h_last
 
@@ -175,11 +178,11 @@ def mamba2_forward(params: Params, x, *, d_state: int, headdim: int,
     conv_out = _causal_depthwise_conv(
         conv_in, params["conv_w"].astype(compute_dtype),
         params["conv_b"].astype(compute_dtype))
-    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(compute_dtype)
+    conv_out = silu_f32(conv_out, out_dtype=compute_dtype)
     xp, b, c = jnp.split(conv_out, [d_inner, d_inner + n_groups * d_state],
                          axis=-1)
 
-    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    dt = softplus_f32(dt, bias=params["dt_bias"])                     # (B,S,H)
     A = -jnp.exp(params["a_log"])                                     # (H,)
     a = dt * A                                                        # (B,S,H)
 
@@ -194,8 +197,8 @@ def mamba2_forward(params: Params, x, *, d_state: int, headdim: int,
 
     y = y.reshape(B, S, d_inner)
     y = rms_norm(params["gate_norm"],
-                 (y.astype(jnp.float32)
-                  * jax.nn.silu(z.astype(jnp.float32))).astype(compute_dtype))
+                 (f32_upcast(y)
+                  * silu_f32(z)).astype(compute_dtype))
     return y @ params["out_proj"].astype(compute_dtype), h_last
 
 
@@ -231,22 +234,23 @@ def mamba2_decode(params: Params, x, state, *, d_state: int, headdim: int,
     conv_hist = jnp.concatenate(
         [state["conv"].astype(compute_dtype), conv_in[:, None]], axis=1)
     w = params["conv_w"].astype(compute_dtype)          # (K, C)
-    conv_out = jnp.sum(conv_hist * w[None], axis=1) + params["conv_b"] \
+    conv_out = sum_f32(conv_hist * w[None], axis=1,
+                       out_dtype=compute_dtype) + params["conv_b"] \
         .astype(compute_dtype)
-    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(compute_dtype)
+    conv_out = silu_f32(conv_out, out_dtype=compute_dtype)
     xp, b, c = jnp.split(conv_out, [d_inner, d_inner + n_groups * d_state],
                          axis=-1)
 
-    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    dt = softplus_f32(dt, bias=params["dt_bias"])                     # (B,H)
     A = -jnp.exp(params["a_log"])
     dA = jnp.exp(dt * A)                                              # (B,H)
 
-    xh = xp.reshape(B, n_heads, headdim).astype(jnp.float32)
+    xh = f32_upcast(xp.reshape(B, n_heads, headdim))
     heads_per_group = n_heads // n_groups
-    bh = jnp.repeat(b.reshape(B, n_groups, d_state), heads_per_group, axis=1) \
-        .astype(jnp.float32)
-    ch = jnp.repeat(c.reshape(B, n_groups, d_state), heads_per_group, axis=1) \
-        .astype(jnp.float32)
+    bh = f32_upcast(
+        jnp.repeat(b.reshape(B, n_groups, d_state), heads_per_group, axis=1))
+    ch = f32_upcast(
+        jnp.repeat(c.reshape(B, n_groups, d_state), heads_per_group, axis=1))
 
     h = state["h"] * dA[..., None, None] + jnp.einsum(
         "bh,bhp,bhn->bhpn", dt, xh, bh)
@@ -254,7 +258,7 @@ def mamba2_decode(params: Params, x, state, *, d_state: int, headdim: int,
 
     y = y.reshape(B, d_inner)
     y = rms_norm(params["gate_norm"],
-                 (y * jax.nn.silu(z.astype(jnp.float32))).astype(compute_dtype))
+                 (y * silu_f32(z)).astype(compute_dtype))
     out = y @ params["out_proj"].astype(compute_dtype)
     new_state = {"h": h, "conv": conv_hist[:, 1:].astype(state["conv"].dtype)}
     return out[:, None], new_state

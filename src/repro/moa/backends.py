@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.kernels import ops
+from repro.layers.numerics import accum_upcast
 
 __all__ = ["tree_sum", "serial_sum", "chunked_matmul",
            "pallas_sum", "pallas_dot"]
@@ -67,7 +68,7 @@ def serial_sum(x: jax.Array, chunk: int, accum_dtype) -> jax.Array:
     pad = n_chunks * chunk - n
     if pad:
         x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
-    x = x.reshape((n_chunks, chunk) + x.shape[1:]).astype(accum_dtype)
+    x = accum_upcast(x.reshape((n_chunks, chunk) + x.shape[1:]), accum_dtype)
 
     def body(acc, block):
         # In-cluster reduction is a tree (the paper's serializer feeds the

@@ -24,6 +24,19 @@ __all__ = ["init_params", "forward", "init_cache", "prefill", "decode_step",
            "verify_step", "commit_verified"]
 
 
+#: Static-auditor registration (:mod:`repro.analysis.targets`): the serve
+#: callables this family module exposes, its KV stack key (None = no KV),
+#: and whether the paged layout / suffix prefill apply. The auditor
+#: enumerates targets from this table, so a family module that grows a new
+#: serve entry point must declare it here to be covered by CI.
+SERVE_AUDIT = {
+    "phases": ("prefill", "decode", "verify", "commit"),
+    "paged": False,
+    "kv_key": None,
+    "suffix_prefill": False,
+}
+
+
 def _init_layer(rng, cfg: ModelConfig) -> Params:
     return {
         "norm": init_rms_norm(cfg.d_model, cfg.pdtype),

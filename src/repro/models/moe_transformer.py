@@ -26,6 +26,19 @@ __all__ = ["init_params", "forward", "init_cache", "init_paged_cache",
            "paged_verify_step", "commit_verified"]
 
 
+#: Static-auditor registration (:mod:`repro.analysis.targets`): the serve
+#: callables this family module exposes, its KV stack key (None = no KV),
+#: and whether the paged layout / suffix prefill apply. The auditor
+#: enumerates targets from this table, so a family module that grows a new
+#: serve entry point must declare it here to be covered by CI.
+SERVE_AUDIT = {
+    "phases": ("prefill", "decode", "verify", "commit"),
+    "paged": True,
+    "kv_key": "layers",
+    "suffix_prefill": False,
+}
+
+
 def _init_layer(rng, cfg: ModelConfig) -> Params:
     ka, km = jax.random.split(rng)
     return {
@@ -134,8 +147,9 @@ def prefill(params: Params, batch: dict, cfg: ModelConfig, *, max_len: int,
                            strategy=cfg.moa_for("moe"))
         h2 = h2 + m
         pad = max_len - k.shape[1]
-        kv = {"k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
-              "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))}
+        kv = attn_lib._constrain_cache(
+            {"k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+             "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))})
         return h2, kv
 
     h, kv_layers = lax.scan(dense._remat(body, cfg), h, params["layers"])

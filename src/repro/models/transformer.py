@@ -29,6 +29,19 @@ __all__ = [
 ]
 
 
+#: Static-auditor registration (:mod:`repro.analysis.targets`): the serve
+#: callables this family module exposes, its KV stack key (None = no KV),
+#: and whether the paged layout / suffix prefill apply. The auditor
+#: enumerates targets from this table, so a family module that grows a new
+#: serve entry point must declare it here to be covered by CI.
+SERVE_AUDIT = {
+    "phases": ("prefill", "decode", "verify", "commit"),
+    "paged": True,
+    "kv_key": "layers",
+    "suffix_prefill": True,
+}
+
+
 # ---------------------------------------------------------------------------
 # Layer
 # ---------------------------------------------------------------------------
@@ -215,9 +228,10 @@ def _layer_prefill(layer: Params, h, *, cfg: ModelConfig, positions, max_len):
     if cfg.kv_cache_dtype == "int8":
         kq, ks = attn_lib.quantize_kv(k)
         vq, vs = attn_lib.quantize_kv(v)
-        return h, {"k": pad_seq(kq), "v": pad_seq(vq),
-                   "k_scale": pad_seq(ks), "v_scale": pad_seq(vs)}
-    return h, {"k": pad_seq(k), "v": pad_seq(v)}
+        return h, attn_lib._constrain_cache(
+            {"k": pad_seq(kq), "v": pad_seq(vq),
+             "k_scale": pad_seq(ks), "v_scale": pad_seq(vs)})
+    return h, attn_lib._constrain_cache({"k": pad_seq(k), "v": pad_seq(v)})
 
 
 def _last_real_slice(h, prompt_len):

@@ -38,6 +38,19 @@ __all__ = ["init_params", "forward", "init_cache", "init_paged_cache",
            "paged_verify_step", "commit_verified", "n_applications"]
 
 
+#: Static-auditor registration (:mod:`repro.analysis.targets`): the serve
+#: callables this family module exposes, its KV stack key (None = no KV),
+#: and whether the paged layout / suffix prefill apply. The auditor
+#: enumerates targets from this table, so a family module that grows a new
+#: serve entry point must declare it here to be covered by CI.
+SERVE_AUDIT = {
+    "phases": ("prefill", "decode", "verify", "commit"),
+    "paged": True,
+    "kv_key": "kv",
+    "suffix_prefill": False,
+}
+
+
 def n_applications(cfg: ModelConfig) -> int:
     return cfg.n_layers // cfg.attn_every
 
@@ -218,8 +231,9 @@ def prefill(params: Params, batch: dict, cfg: ModelConfig, *, max_len: int):
                            strategy=cfg.moa_for("mlp"),
                            compute_dtype=cfg.cdtype)
         pad = max_len - S
-        kv = {"k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
-              "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))}
+        kv = attn_lib._constrain_cache(
+            {"k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+             "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))})
         return out, (ssm_states, kv)
 
     h, (ssm_head, kv_layers) = lax.scan(group_body, h,

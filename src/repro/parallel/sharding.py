@@ -33,8 +33,8 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["ShardingRules", "DEFAULT_RULES", "activate", "active_context",
-           "constrain", "logical_to_spec", "param_shardings",
-           "replicate_uneven_kv_heads", "serve_rules_for",
+           "constrain", "constraint_spec", "logical_to_spec",
+           "param_shardings", "replicate_uneven_kv_heads", "serve_rules_for",
            "serve_cache_shardings"]
 
 
@@ -156,6 +156,14 @@ def _dedupe(spec: P) -> P:
         seen.update(axes)
         out.append(entry)
     return P(*out)
+
+
+def constraint_spec(names, rules: Optional[ShardingRules] = None,
+                    mesh: Optional[Mesh] = None) -> P:
+    """The exact PartitionSpec :func:`constrain` would pin for ``names``:
+    logical lookup + one-dim-per-mesh-axis dedupe. Public so tools (e.g.
+    the static auditor) can predict constraints without applying them."""
+    return _dedupe(logical_to_spec(names, rules, mesh))
 
 
 def constrain(x, *names):

@@ -824,7 +824,7 @@ class ServeEngine:
             for bucket in self.scheduler.buckets:
                 toks = np.zeros((1, bucket), np.int32)
                 _, pre = self._prefill(self.params, {"tokens": toks},
-                                       jnp.asarray(bucket, jnp.int32))
+                                       np.asarray(bucket, np.int32))
         if self.paged and pre is not None:
             kv, state = self.model.split_prefill_cache(pre)
             n_written = kv["k"].shape[2] // self.block_size

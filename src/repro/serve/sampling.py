@@ -12,6 +12,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.layers.numerics import f32_upcast
+
 __all__ = ["Sampler", "GREEDY", "sample_batch"]
 
 
@@ -35,7 +37,7 @@ class Sampler:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
         if rng is None:
             raise ValueError("non-greedy Sampler needs an rng key")
-        scaled = logits.astype(jnp.float32) / self.temperature
+        scaled = f32_upcast(logits) / self.temperature
         return jax.random.categorical(rng, scaled, axis=-1).astype(jnp.int32)
 
 
@@ -54,5 +56,5 @@ def sample_batch(logits, temperature, greedy_mask, rng):
     greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     temp = jnp.maximum(temperature, 1e-6)[:, None]
     sampled = jax.random.categorical(
-        rng, logits.astype(jnp.float32) / temp, axis=-1).astype(jnp.int32)
+        rng, f32_upcast(logits) / temp, axis=-1).astype(jnp.int32)
     return jnp.where(greedy_mask, greedy_tok, sampled)

@@ -48,6 +48,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.layers.numerics import f32_upcast
+
 __all__ = ["Drafter", "NgramDrafter", "DraftModelDrafter", "OracleDrafter",
            "verify_accept", "resolve_drafter"]
 
@@ -79,7 +81,7 @@ def verify_accept(logits, draft, temps, greedy, rng):
     """
     B, T, V = logits.shape
     g = jnp.argmax(logits, axis=-1).astype(jnp.int32)            # (B, T)
-    lp = logits.astype(jnp.float32) \
+    lp = f32_upcast(logits) \
         / jnp.maximum(temps, 1e-6)[:, None, None]
     p = jax.nn.softmax(lp, axis=-1)
     ku, kr, kb = jax.random.split(rng, 3)

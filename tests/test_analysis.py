@@ -1,0 +1,183 @@
+"""Static-analysis gate: the real serve path audits clean, and every rule
+is proven live by a fixture that trips it."""
+
+import importlib.util
+import json
+import pathlib
+
+import pytest
+
+from repro.analysis.fixtures import (CLEAN_LINT_FIXTURES, JAXPR_FIXTURES,
+                                     LINT_FIXTURES)
+from repro.analysis.jaxpr_audit import audit_target, audit_targets
+from repro.analysis.lint import dead_module_census, lint_source, run_lint
+from repro.analysis.report import ANALYSIS_SCHEMA, RULES, build_report
+from repro.analysis.targets import (SERVE_FAMILIES, build_family_targets,
+                                    make_audit_mesh)
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _schema_registry():
+    path = REPO_ROOT / "scripts" / "check_bench_schema.py"
+    spec = importlib.util.spec_from_file_location("check_bench_schema", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+# ---------------------------------------------------------------------------
+# the real serve path is clean
+# ---------------------------------------------------------------------------
+
+
+class TestServePathClean:
+    @pytest.mark.parametrize("family", SERVE_FAMILIES)
+    @pytest.mark.parametrize("mesh_mode", ["none", "mesh"])
+    def test_family_audits_clean(self, family, mesh_mode):
+        mesh = make_audit_mesh() if mesh_mode == "mesh" else None
+        targets = build_family_targets(family, mesh=mesh)
+        assert targets, family
+        violations = audit_targets(targets)
+        assert not violations, "\n".join(v.format() for v in violations)
+
+    def test_repo_lints_clean(self):
+        violations, n_files = run_lint(str(REPO_ROOT))
+        assert n_files > 50
+        assert not violations, "\n".join(v.format() for v in violations)
+
+
+# ---------------------------------------------------------------------------
+# every rule fires on its fixture
+# ---------------------------------------------------------------------------
+
+
+class TestRulesAreLive:
+    @pytest.mark.parametrize("key", sorted(JAXPR_FIXTURES))
+    def test_jaxpr_fixture_fires(self, key):
+        builder, needs_mesh = JAXPR_FIXTURES[key]
+        target = builder(make_audit_mesh()) if needs_mesh else builder()
+        rule = key.split("/")[0]
+        violations = audit_target(target)
+        assert any(v.rule == rule for v in violations), \
+            (key, [v.rule for v in violations])
+
+    @pytest.mark.parametrize("rule", sorted(LINT_FIXTURES))
+    def test_lint_fixture_fires(self, rule):
+        path, source = LINT_FIXTURES[rule]
+        violations = lint_source(path, source)
+        assert any(v.rule == rule for v in violations), \
+            (rule, [v.rule for v in violations])
+
+    @pytest.mark.parametrize("name", sorted(CLEAN_LINT_FIXTURES))
+    def test_near_miss_stays_clean(self, name):
+        path, source = CLEAN_LINT_FIXTURES[name]
+        violations = lint_source(path, source)
+        assert not violations, [v.format() for v in violations]
+
+    def test_every_rule_has_a_fixture(self):
+        """RULES without a proving fixture are dead weight (lint-dead-module
+        is proven by the census test below)."""
+        proven = {k.split("/")[0] for k in JAXPR_FIXTURES}
+        proven |= set(LINT_FIXTURES) | {"lint-dead-module"}
+        assert proven == set(RULES)
+
+    def test_upcast_fixture_site_attribution(self):
+        """The upcast violation points at the fixture's own source line."""
+        builder, _ = JAXPR_FIXTURES["f32-upcast-allowlist"]
+        (v,) = audit_target(builder())
+        assert v.file == "src/repro/analysis/fixtures.py"
+        assert v.line > 0
+
+
+# ---------------------------------------------------------------------------
+# dead-module census
+# ---------------------------------------------------------------------------
+
+
+class TestCensus:
+    def _tree(self, tmp_path, files):
+        for rel, src in files.items():
+            p = tmp_path / rel
+            p.parent.mkdir(parents=True, exist_ok=True)
+            p.write_text(src)
+        return str(tmp_path)
+
+    def test_flags_only_orphans(self, tmp_path):
+        root = self._tree(tmp_path, {
+            "src/repro/__init__.py": "",
+            "src/repro/used.py": "X = 1\n",
+            "src/repro/dead.py": "Y = 2\n",
+            "tests/test_used.py": "from repro.used import X\n",
+        })
+        flagged = {v.file for v in dead_module_census(root)}
+        assert flagged == {"src/repro/dead.py"}
+
+    def test_entry_points_exempt(self, tmp_path):
+        root = self._tree(tmp_path, {
+            "src/repro/__init__.py": "",
+            "src/repro/cli.py": ("def main():\n    pass\n\n"
+                                 "if __name__ == '__main__':\n    main()\n"),
+        })
+        assert dead_module_census(root) == []
+
+    def test_from_import_of_module_counts(self, tmp_path):
+        root = self._tree(tmp_path, {
+            "src/repro/__init__.py": "",
+            "src/repro/pkg/__init__.py": "",
+            "src/repro/pkg/mod.py": "Z = 3\n",
+            "scripts/run.py": "from repro.pkg import mod\n",
+        })
+        assert dead_module_census(root) == []
+
+
+# ---------------------------------------------------------------------------
+# analysis-v1 report schema
+# ---------------------------------------------------------------------------
+
+
+class TestReportSchema:
+    def _report(self):
+        builder, _ = JAXPR_FIXTURES["no-host-transfer"]
+        violations = audit_target(builder())
+        assert violations
+        return build_report(
+            violations, targets_audited=1, files_linted=0,
+            config={"families": ["dense"], "mesh_modes": ["none"]})
+
+    def test_round_trip_validates(self, tmp_path):
+        registry = _schema_registry()
+        report = self._report()
+        assert report["schema"] == ANALYSIS_SCHEMA
+        p = tmp_path / "report.json"
+        p.write_text(json.dumps(report))
+        assert registry.validate(json.loads(p.read_text())) == []
+
+    def test_corrupted_summary_fails(self):
+        registry = _schema_registry()
+        report = self._report()
+        report["summary"]["violations"] += 1
+        assert any("does not match" in e for e in registry.validate(report))
+
+    def test_mistyped_violation_fails(self):
+        registry = _schema_registry()
+        report = self._report()
+        report["violations"][0]["line"] = "twelve"
+        assert any("line" in e for e in registry.validate(report))
+
+    def test_bad_severity_fails(self):
+        registry = _schema_registry()
+        report = self._report()
+        report["violations"][0]["severity"] = "meh"
+        assert any("severity" in e for e in registry.validate(report))
+
+    def test_unknown_schema_fails(self):
+        registry = _schema_registry()
+        errors = registry.validate({"schema": "analysis-v99"})
+        assert errors and "unknown schema" in errors[0]
+        assert "analysis-v1" in errors[0]     # registry lists what it knows
+
+    def test_serving_schemas_still_registered(self):
+        registry = _schema_registry()
+        assert {"serving-v1", "serving-v2", "serving-v3", "serving-v4",
+                "analysis-v1"} <= set(registry.SCHEMAS)

@@ -194,6 +194,18 @@ def test_param_counts_in_expected_range():
 
 
 class TestCNN:
+    def test_config_modules(self):
+        """The per-arch conv config modules agree with the model layouts."""
+        from repro.configs import alexnet, lenet5
+
+        assert lenet5.NAME == "lenet5"
+        assert lenet5.INPUT_SHAPE == (32, 32, 1)
+        assert lenet5.LENET5_LAYOUT is cnn.LENET5_LAYOUT
+        assert alexnet.NAME == "alexnet"
+        assert alexnet.INPUT_SHAPE == (227, 227, 3)
+        assert alexnet.ALEXNET_LAYOUT is cnn.ALEXNET_LAYOUT
+        assert len(alexnet.ALEXNET_CONV_SPECS) == 5
+
     def test_lenet5_forward(self, key):
         params = cnn.init_lenet5(key)
         x = jax.random.normal(key, (2, 32, 32, 1))

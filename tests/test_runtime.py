@@ -1,0 +1,86 @@
+"""Unit tests for the runtime fault-tolerance helpers."""
+
+import pytest
+
+from repro.runtime.failures import FailureInjector, SimulatedFailure
+from repro.runtime.heartbeat import HeartbeatMonitor, StragglerReport
+
+
+class TestHeartbeatMonitor:
+    def test_uniform_durations_never_flag(self):
+        mon = HeartbeatMonitor(n_workers=4)
+        for step in range(20):
+            for w in range(4):
+                assert mon.beat(w, step, 1.0) is None
+        assert mon.reports == []
+
+    def test_warmup_never_flags(self):
+        """Below max(8, n_workers) samples there is no baseline to flag
+        against — even a wild outlier passes."""
+        mon = HeartbeatMonitor(n_workers=4)
+        for w in range(4):
+            assert mon.beat(w, 0, 100.0 if w == 3 else 1.0) is None
+
+    def test_straggler_flagged(self):
+        mon = HeartbeatMonitor(n_workers=4)
+        for step in range(4):
+            for w in range(4):
+                mon.beat(w, step, 1.0 + 0.01 * w)
+        report = mon.beat(3, 4, 10.0)
+        assert isinstance(report, StragglerReport)
+        assert report.worker == 3 and report.step == 4
+        assert report.duration == 10.0
+        assert report.duration > report.threshold >= 2.0 * report.median
+        assert mon.reports == [report]
+
+    def test_threshold_scales_with_jitter(self):
+        """A duration outside factor×median still passes when the MAD term
+        dominates (noisy-but-healthy fleet)."""
+        mon = HeartbeatMonitor(n_workers=2, factor=2.0, z=6.0)
+        durations = [1.0, 3.0] * 8            # huge spread → huge MAD
+        for step, d in enumerate(durations):
+            mon.beat(step % 2, step // 2, d)
+        assert mon.beat(0, 9, 5.0) is None    # < median + 6×1.4826×MAD
+
+    def test_dead_workers(self):
+        mon = HeartbeatMonitor(n_workers=3, miss_limit=3)
+        for step in range(6):
+            mon.beat(0, step, 1.0)
+            mon.beat(1, step, 1.0)
+            if step < 2:
+                mon.beat(2, step, 1.0)
+        assert mon.dead_workers(current_step=5) == [2]
+        assert mon.dead_workers(current_step=2) == []
+
+    def test_window_bounds_history(self):
+        mon = HeartbeatMonitor(n_workers=1, window=8)
+        for step in range(100):
+            mon.beat(0, step, 1.0)
+        assert len(mon._history[0]) == 8
+
+
+class TestFailureInjector:
+    def test_fires_once_per_scheduled_step(self):
+        inj = FailureInjector(fail_at_steps=[2, 5], kind="preemption")
+        survived = []
+        step = 0
+        while step < 8:
+            try:
+                inj.maybe_fail(step)
+            except SimulatedFailure as e:
+                assert "preemption" in str(e) and f"step {step}" in str(e)
+                continue                      # restart re-runs the step
+            survived.append(step)
+            step += 1
+        assert survived == list(range(8))
+        assert inj.fired == [2, 5]
+
+    def test_unscheduled_steps_pass(self):
+        inj = FailureInjector()
+        for step in range(10):
+            inj.maybe_fail(step)
+        assert inj.fired == []
+
+    def test_is_runtime_error(self):
+        with pytest.raises(RuntimeError):
+            FailureInjector([0]).maybe_fail(0)
