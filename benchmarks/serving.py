@@ -26,6 +26,14 @@ Record schemas (all validated by ``scripts/check_bench_schema.py``):
   on the actual device topology, the paper's core lesson). On CPU the
   mesh runs on XLA host-platform devices.
 
+* ``serving-v5`` (``--slo``): the same **bursty, deadline-carrying**
+  workload through a FIFO engine and an SLO engine (deadline-aware
+  admission + preemptive spill/revive + chunked prefill,
+  ``docs/slo-scheduling.md``), both on a deterministic
+  :class:`~repro.serve.clock.StepClock` — p99 TTFT of the deadline
+  cohort, attainment and goodput-under-SLO side by side, plus a greedy
+  token-parity bit (preemption must not change any request's tokens).
+
   PYTHONPATH=src python -m benchmarks.serving --smoke --json out.json
   PYTHONPATH=src python -m benchmarks.serving --smoke --paged \
       --shared-prefix --block-size 8 --json paged.json
@@ -33,6 +41,8 @@ Record schemas (all validated by ``scripts/check_bench_schema.py``):
       --spec-k 3 --json spec.json
   PYTHONPATH=src python -m benchmarks.serving --smoke --mesh 2x4 \
       --json sharded.json
+  PYTHONPATH=src python -m benchmarks.serving --smoke --slo \
+      --json slo.json
 """
 
 from __future__ import annotations
@@ -49,7 +59,8 @@ from repro.launch.costing import spec_decode_cost
 from repro.launch.mesh import ensure_host_devices, make_mesh, parse_mesh
 from repro.models.api import build_model
 from repro.serve import (GREEDY, OracleDrafter, Sampler, ServeEngine,
-                         poisson_workload, shared_prefix_workload)
+                         StepClock, bursty_workload, poisson_workload,
+                         shared_prefix_workload)
 
 
 def _build(arch: str, smoke: bool):
@@ -363,6 +374,91 @@ def run_sharded(*, arch: str = "llama3-8b", smoke: bool = True,
     }
 
 
+def run_slo(*, arch: str = "llama3-8b", smoke: bool = True,
+            slots: int = 2, max_len: int = 96, n_long: int = 0,
+            n_burst: int = 8, long_prompt_len: int = 24,
+            long_gen_len: int = 40, burst_prompt_len: int = 8,
+            burst_gen_len: int = 4, burst_at_s: float = 0.004,
+            burst_deadline_s: float = 0.035, prefill_chunk: int = 16,
+            clock_dt: float = 1e-3, seed: int = 0) -> dict:
+    """FIFO-vs-SLO comparison on one bursty workload; ``serving-v5``.
+
+    Long generations grab every slot, then a burst of short requests with
+    tight TTFT deadlines lands behind them. Both engines run on a
+    deterministic :class:`StepClock` (virtual time advances per engine
+    clock read, so XLA compile time cannot skew any latency — no warmup
+    replay needed and the record is exactly reproducible). FIFO queues
+    the burst until a long decode finishes and blows the deadline cohort's
+    p99 TTFT; the SLO engine preempts the longs (their first token is
+    already banked), serves the burst, and revives them — same tokens for
+    every request, very different tail latency. The SLO engine also
+    prefills in ``prefill_chunk``-token chunks so a long admission never
+    blocks a tick for more than one chunk.
+    """
+    cfg, model = _build(arch, smoke)
+    rng = jax.random.PRNGKey(seed)
+    params = model.init(rng)
+    n_long = n_long or slots
+    make_workload = lambda: bursty_workload(  # noqa: E731
+        vocab=cfg.vocab, n_long=n_long, n_burst=n_burst,
+        long_prompt_len=long_prompt_len, long_gen_len=long_gen_len,
+        burst_prompt_len=burst_prompt_len, burst_gen_len=burst_gen_len,
+        burst_at_s=burst_at_s, burst_deadline_s=burst_deadline_s,
+        seed=seed)
+    runs = {}
+    for policy in ("fifo", "slo"):
+        engine = ServeEngine(
+            model, params, n_slots=slots, max_len=max_len, rng=rng,
+            clock=StepClock(dt=clock_dt), scheduling=policy,
+            prefill_chunk_tokens=(prefill_chunk or None)
+            if policy == "slo" else None)
+        results, report = engine.run(make_workload())
+        runs[policy] = {"results": results,
+                        "requests": [r.to_json() for r in results],
+                        "aggregate": report}
+    tokens_match = all(
+        np.array_equal(a.tokens, b.tokens)
+        for a, b in zip(runs["fifo"]["results"], runs["slo"]["results"]))
+    for policy in runs:
+        del runs[policy]["results"]
+    f, s = (runs[p]["aggregate"]["slo"] for p in ("fifo", "slo"))
+    comparison = {
+        "greedy_tokens_match": bool(tokens_match),
+        "attainment_fifo": f["attainment"],
+        "attainment_slo": s["attainment"],
+        "deadline_ttft_p99_ms_fifo": f["deadline_ttft_ms"]["p99"],
+        "deadline_ttft_p99_ms_slo": s["deadline_ttft_ms"]["p99"],
+        "goodput_tok_per_s_fifo": f["goodput_tok_per_s"],
+        "goodput_tok_per_s_slo": s["goodput_tok_per_s"],
+        "preemptions": s["preemptions"],
+        "spills": s["spills"],
+        "revivals": s["revivals"],
+        "prefill_chunk_count": s["prefill_chunk_count"],
+        "slo_wins_p99": bool(s["deadline_ttft_ms"]["p99"]
+                             < f["deadline_ttft_ms"]["p99"]),
+        "slo_wins_goodput": bool(s["goodput_tok_per_s"]
+                                 > f["goodput_tok_per_s"]),
+    }
+    return {
+        "schema": "serving-v5",
+        "config": {
+            "arch": cfg.name, "family": cfg.family, "smoke": smoke,
+            "moa": cfg.moa_strategy.spec, "n_slots": slots,
+            "max_len": max_len, "n_long": n_long, "n_burst": n_burst,
+            "long_prompt_len": long_prompt_len,
+            "long_gen_len": long_gen_len,
+            "burst_prompt_len": burst_prompt_len,
+            "burst_gen_len": burst_gen_len, "burst_at_s": burst_at_s,
+            "burst_deadline_s": burst_deadline_s,
+            "prefill_chunk_tokens": prefill_chunk, "clock_dt": clock_dt,
+            "seed": seed,
+        },
+        "fifo": runs["fifo"],
+        "slo": runs["slo"],
+        "comparison": comparison,
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(
         description="Continuous-batching serving benchmark (JSON output)")
@@ -383,6 +479,19 @@ def main(argv=None):
     ap.add_argument("--spec-decode", action="store_true",
                     help="run the plain-vs-speculative accept-rate sweep "
                          "(serving-v3; see docs/spec-decode.md)")
+    ap.add_argument("--slo", action="store_true",
+                    help="run the FIFO-vs-SLO bursty-deadline comparison "
+                         "on a deterministic virtual clock (serving-v5; "
+                         "see docs/slo-scheduling.md)")
+    ap.add_argument("--burst", type=int, default=8,
+                    help="[--slo] short tight-deadline requests in the "
+                         "burst")
+    ap.add_argument("--deadline", type=float, default=0.035,
+                    help="[--slo] burst TTFT deadline, virtual seconds "
+                         "after arrival")
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="[--slo] SLO engine's prefill chunk tokens "
+                         "(0 = one-shot)")
     ap.add_argument("--spec-k", type=int, default=3,
                     help="[--spec-decode] draft tokens per verify window")
     ap.add_argument("--accept-probs", default="1.0,0.75,0.5,0.0",
@@ -405,18 +514,30 @@ def main(argv=None):
                     help="write the JSON record here (default: stdout)")
     args = ap.parse_args(argv)
 
-    if sum(map(bool, (args.paged, args.spec_decode, args.mesh))) > 1:
-        raise SystemExit("--paged, --spec-decode and --mesh are separate "
-                         "comparisons; run them as separate records")
+    if sum(map(bool, (args.paged, args.spec_decode, args.mesh,
+                      args.slo))) > 1:
+        raise SystemExit("--paged, --spec-decode, --mesh and --slo are "
+                         "separate comparisons; run them as separate "
+                         "records")
     if (args.spec_decode or args.mesh) and args.shared_prefix:
         raise SystemExit("--spec-decode and --mesh use the plain Poisson "
                          "workload; --shared-prefix belongs to the --paged "
+                         "comparison")
+    if args.slo and args.shared_prefix:
+        raise SystemExit("--slo uses the bursty deadline workload; "
+                         "--shared-prefix belongs to the --paged "
                          "comparison")
     common = dict(arch=args.arch, smoke=args.smoke, requests=args.requests,
                   rate_rps=args.rate, slots=args.slots, max_len=args.max_len,
                   temperature=args.temperature, seed=args.seed,
                   warmup=not args.no_warmup)
-    if args.mesh:
+    if args.slo:
+        record = run_slo(arch=args.arch, smoke=args.smoke,
+                         slots=args.slots, max_len=args.max_len,
+                         n_burst=args.burst,
+                         burst_deadline_s=args.deadline,
+                         prefill_chunk=args.prefill_chunk, seed=args.seed)
+    elif args.mesh:
         # must run before jax initializes its backends: XLA locks the
         # host-platform device count at first init
         shape = parse_mesh(args.mesh)
@@ -441,7 +562,18 @@ def main(argv=None):
     if args.json:
         with open(args.json, "w") as f:
             f.write(text + "\n")
-        if record["schema"] == "serving-v4":
+        if record["schema"] == "serving-v5":
+            c = record["comparison"]
+            print(f"[bench] wrote {args.json}: serving-v5, deadline ttft "
+                  f"p99 fifo={c['deadline_ttft_p99_ms_fifo']:.0f}ms "
+                  f"slo={c['deadline_ttft_p99_ms_slo']:.0f}ms, attainment "
+                  f"{c['attainment_fifo']:.2f}->{c['attainment_slo']:.2f}, "
+                  f"goodput {c['goodput_tok_per_s_fifo']:.0f}->"
+                  f"{c['goodput_tok_per_s_slo']:.0f} tok/s, "
+                  f"preemptions={c['preemptions']}, greedy tokens "
+                  f"{'MATCH' if c['greedy_tokens_match'] else 'DIVERGE'}",
+                  file=sys.stderr)
+        elif record["schema"] == "serving-v4":
             c = record["comparison"]
             m = record["config"]["mesh"]
             axes = "x".join(str(s) for s in m["shape"])

@@ -2,7 +2,7 @@
 """Validate repo JSON records against the schema registry.
 
 Every machine-readable artifact the repo emits carries a ``schema`` tag —
-serving benchmark records (``serving-v1`` .. ``serving-v4``) and the
+serving benchmark records (``serving-v1`` .. ``serving-v5``) and the
 static-analysis report (``analysis-v1``). Each schema registers a
 validator in :data:`SCHEMAS` via :func:`register`; adding a new record
 format means adding one decorated function here.
@@ -25,7 +25,7 @@ from typing import Callable, Dict, List
 NUM = numbers.Real      # int or float (bool excluded below)
 STR = str
 
-_DIST = {"mean": NUM, "p50": NUM, "p95": NUM}
+_DIST = {"mean": NUM, "p50": NUM, "p95": NUM, "p99": NUM}
 
 _REQUEST = {
     "uid": int, "prompt_tokens": int, "new_tokens": int, "slot": int,
@@ -91,6 +91,31 @@ _V4_COMPARISON = {
     "tok_per_s_sharded": NUM, "sharded_speedup": NUM,
     "ttft_p50_ms_single": NUM, "ttft_p50_ms_sharded": NUM,
     "compile_s_single": NUM, "compile_s_sharded": NUM,
+}
+
+_CONFIG_V5 = {
+    "arch": STR, "family": STR, "smoke": bool, "moa": STR, "n_slots": int,
+    "max_len": int, "n_long": int, "n_burst": int, "long_prompt_len": int,
+    "long_gen_len": int, "burst_prompt_len": int, "burst_gen_len": int,
+    "burst_at_s": NUM, "burst_deadline_s": NUM,
+    "prefill_chunk_tokens": int, "clock_dt": NUM, "seed": int,
+}
+
+_SLO_AGGREGATE = {
+    "deadline_requests": int, "deadline_met": int, "attainment": NUM,
+    "goodput_tok_per_s": NUM, "deadline_ttft_ms": _DIST,
+    "preemptions": int, "spills": int, "revivals": int,
+    "preempted_requests": int, "prefill_chunk_tokens": int,
+    "prefill_chunk_count": int,
+}
+
+_SLO_COMPARISON = {
+    "greedy_tokens_match": bool, "attainment_fifo": NUM,
+    "attainment_slo": NUM, "deadline_ttft_p99_ms_fifo": NUM,
+    "deadline_ttft_p99_ms_slo": NUM, "goodput_tok_per_s_fifo": NUM,
+    "goodput_tok_per_s_slo": NUM, "preemptions": int, "spills": int,
+    "revivals": int, "prefill_chunk_count": int, "slo_wins_p99": bool,
+    "slo_wins_goodput": bool,
 }
 
 _ANALYSIS_SUMMARY = {
@@ -214,6 +239,25 @@ def _serving_v4(record, errors):
             if prod != n:
                 errors.append("$.config.mesh: shape does not multiply "
                               f"to n_devices ({shape} vs {n})")
+
+
+@register("serving-v5")
+def _serving_v5(record, errors):
+    _check(record, {"config": _CONFIG_V5,
+                    "comparison": _SLO_COMPARISON}, "$", errors)
+    for policy in ("fifo", "slo"):
+        _check_run(record.get(policy, {}), f"$.{policy}", errors)
+        _check(record.get(policy, {}).get("aggregate", {}).get("slo", {}),
+               _SLO_AGGREGATE, f"$.{policy}.aggregate.slo", errors)
+    slo_agg = record.get("slo", {}).get("aggregate", {}).get("slo", {})
+    comp = record.get("comparison", {})
+    if isinstance(slo_agg, dict) and isinstance(comp, dict):
+        spills = slo_agg.get("spills")
+        preemptions = slo_agg.get("preemptions")
+        if isinstance(spills, int) and isinstance(preemptions, int) \
+                and spills > preemptions:
+            errors.append("$.slo.aggregate.slo: spills exceed preemptions "
+                          f"({spills} > {preemptions})")
 
 
 @register("analysis-v1")

@@ -31,7 +31,8 @@ from repro.parallel.sharding import (constraint_spec,
                                      replicate_uneven_kv_heads,
                                      serve_cache_shardings, serve_rules_for)
 from repro.serve.engine import (_clear_slot, _cow_copy, _gather_prefix,
-                                _paged_write, _write_slot)
+                                _paged_write, _read_paged_slot, _read_slot,
+                                _restore_paged_slot, _write_slot)
 from repro.serve.sampling import sample_batch
 from repro.serve.spec import verify_accept
 
@@ -175,6 +176,37 @@ def build_family_targets(family: str, *, mesh: Optional[Mesh] = None,
     targets.append(mk(
         "write_slot", _write_slot, (cache, pre_cache, _sds((), _i32)),
         donate=(0,), ins=(cache_sh, rep, rep), outs=cache_sh))
+    # preemption spill: the exact inverse gather (no donation — pure read)
+    targets.append(mk(
+        "read_slot", _read_slot, (cache, _sds((), _i32)),
+        ins=(cache_sh, rep), outs=rep))
+
+    if hooks.get("prefill_chunk"):
+        # recurrent chunked prefill: carried state in, advanced state out
+        cache1 = jax.eval_shape(lambda: model.init_cache(1, max_len))
+        state_key = "layers" if family == "ssm" else "ssm"
+        state = {state_key: cache1[state_key], "pos": _sds((), _i32)}
+        if family == "ssm":
+            fn = lambda p, t, st: model.prefill_chunk(  # noqa: E731
+                p, {"tokens": t}, state=st)
+            targets.append(mk(
+                "prefill_chunk", fn, (params, pre_tokens, state),
+                ins=(param_sh, rep, rep), outs=rep, kv=kv_dense))
+        else:
+            kv = cache[kv_key]
+            chunk_prefix = {
+                name: _sds((kv[name].shape[0], 1, prefill_len)
+                           + kv[name].shape[3:], cfg.cdtype)
+                for name in ("k", "v")}
+            fn = lambda p, t, st, pre: model.prefill_chunk(  # noqa: E731
+                p, {"tokens": t}, state=st, prefix_kv=pre)
+            # batch=1 chunk: no cache-shaped value in flight (the engine
+            # scatters the returned suffix KV separately), so no kv specs —
+            # same regime as the suffix_prefill target
+            targets.append(mk(
+                "prefill_chunk", fn,
+                (params, pre_tokens, state, chunk_prefix),
+                ins=(param_sh, rep, rep, rep), outs=rep))
 
     if family == "dense":
         # engine-level samplers are family-independent; audit them once
@@ -253,6 +285,21 @@ def build_family_targets(family: str, *, mesh: Optional[Mesh] = None,
     targets.append(mkp(
         "clear_slot", _clear_slot, (cache_p, scalar),
         donate=(0,), ins=(cache_p_sh, rep), outs=cache_p_sh))
+
+    # preemption spill/revive on the paged layout: snapshot only the
+    # slot-indexed leaves (pool pages stay pinned), then reinstall the
+    # table row + cursor (+ recurrent state) on revival
+    has_ssm = family == "hybrid"
+    read_paged = functools.partial(_read_paged_slot, has_ssm=has_ssm)
+    targets.append(mkp(
+        "read_slot", read_paged, (cache_p, scalar),
+        ins=(cache_p_sh, rep), outs=rep))
+    snap = jax.eval_shape(read_paged, cache_p, scalar)
+    targets.append(mkp(
+        "restore_slot",
+        functools.partial(_restore_paged_slot, has_ssm=has_ssm),
+        (cache_p, snap, _sds((max_blocks,), _i32), scalar),
+        donate=(0,), ins=(cache_p_sh,) + (rep,) * 3, outs=cache_p_sh))
 
     if hooks["suffix_prefill"]:
         prefix = jax.eval_shape(

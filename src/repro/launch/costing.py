@@ -28,14 +28,16 @@ surfaced as a per-component FLOPs increase.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, Optional
 
 from repro.configs.base import ModelConfig, ShapeSpec
 
 __all__ = ["CellCost", "estimate_cell", "request_decode_cost",
            "kv_bytes_per_token", "kv_resident_bytes",
-           "expected_accepted_len", "spec_decode_cost",
-           "spec_request_decode_cost", "spec_break_even_accept"]
+           "expected_accepted_len", "prefill_chunk_guidance",
+           "spec_decode_cost", "spec_request_decode_cost",
+           "spec_break_even_accept"]
 
 BF16 = 2
 F32 = 4
@@ -292,6 +294,61 @@ def spec_request_decode_cost(cfg: ModelConfig, *, k: int,
         total += sum(forward_flops(cfg, tokens=float(k + 1), s_attn=s_attn,
                                    decode=True).values())
     return total
+
+
+def prefill_chunk_guidance(cfg: ModelConfig, *, n_slots: int,
+                           max_len: int, mean_context: float,
+                           stall_budget_ticks: float = 4.0,
+                           block_size: int = 0) -> dict:
+    """Size ``ServeEngine(prefill_chunk_tokens=...)`` from the cost model.
+
+    Chunked prefill bounds head-of-line blocking: every prefill tick of a
+    long prompt steals one engine tick from the decoding slots, so the
+    right chunk is the *largest* one whose prefill FLOPs stay within
+    ``stall_budget_ticks`` batched decode ticks — big enough to amortize
+    per-chunk overhead (and, for recurrent families, to cover whole
+    ``ssd_chunk`` blocks), small enough that a decode token is never
+    delayed by more than the budget. Candidates are multiples of the
+    family's chunk alignment (``cfg.ssd_chunk`` for ssm/hybrid) and, when
+    ``block_size`` is given (paged engine), of the page size; the floor is
+    one alignment unit even when it busts the budget (chunks cannot be
+    split below it). ``mean_context`` is the expected attended context of
+    a decode tick (tokens); units throughout: tokens and FLOPs.
+
+    Returns a dict: ``prefill_chunk_tokens`` (the suggestion),
+    ``decode_tick_flops``, ``chunk_prefill_flops``, ``stall_ticks`` (the
+    achieved ratio), and ``alignment``.
+    """
+    if n_slots < 1 or max_len < 1:
+        raise ValueError("n_slots and max_len must be >= 1")
+    if stall_budget_ticks <= 0:
+        raise ValueError("stall_budget_ticks must be > 0")
+    align = cfg.ssd_chunk if cfg.family in ("ssm", "hybrid") else 1
+    if block_size:
+        align = align * block_size // math.gcd(align, block_size)
+    tick_flops = _decode_step_flops(cfg, tokens=float(n_slots),
+                                    s_attn=mean_context)
+
+    def chunk_flops(c: float) -> float:
+        # a mid-prompt chunk of c tokens attends on average ~max_len/2
+        # prior positions (worst-case-ish context for the suffix chunks)
+        return sum(forward_flops(cfg, tokens=c, s_attn=max_len / 2.0,
+                                 decode=False).values())
+
+    best = align
+    c = align
+    while c + align <= max_len \
+            and chunk_flops(float(c + align)) \
+            <= stall_budget_ticks * tick_flops:
+        c += align
+        best = c
+    return {
+        "prefill_chunk_tokens": best,
+        "alignment": align,
+        "decode_tick_flops": tick_flops,
+        "chunk_prefill_flops": chunk_flops(float(best)),
+        "stall_ticks": chunk_flops(float(best)) / max(tick_flops, 1e-9),
+    }
 
 
 def _train_multiplier(cfg: ModelConfig) -> float:

@@ -26,8 +26,8 @@ from repro.configs.base import ShapeSpec
 from repro.configs.registry import get_config, smoke_config
 from repro.launch.mesh import ensure_host_devices, make_mesh, parse_mesh
 from repro.models.api import build_model
-from repro.serve import (GREEDY, Sampler, ServeEngine, poisson_workload,
-                         resolve_drafter)
+from repro.serve import (GREEDY, Sampler, ServeEngine, bursty_workload,
+                         poisson_workload, resolve_drafter)
 
 __all__ = ["serve_batch", "main"]
 
@@ -124,15 +124,31 @@ def _run_engine(args):
     drafter = resolve_drafter(args.drafter, args.spec_k) \
         if args.spec_decode else None
     mesh = make_mesh(parse_mesh(args.mesh)) if args.mesh else None
+    chunk = args.prefill_chunk or None
+    if chunk is not None and args.paged and chunk % args.block_size:
+        raise SystemExit(f"--prefill-chunk {chunk} must be a multiple of "
+                         f"--block-size {args.block_size}")
     engine = ServeEngine(model, params, n_slots=args.slots, max_len=max_len,
                          paged=args.paged, block_size=args.block_size,
                          n_blocks=args.blocks or None, rng=rng,
-                         drafter=drafter, mesh=mesh)
-    requests = poisson_workload(
-        n_requests=args.requests, vocab=cfg.vocab, rate_rps=args.rate,
-        prompt_len_range=(min(4, args.prompt_len), args.prompt_len),
-        gen_len_range=(min(2, args.gen_len), args.gen_len),
-        sampler=_sampler(args), seed=args.seed)
+                         drafter=drafter, mesh=mesh,
+                         prefill_chunk_tokens=chunk,
+                         scheduling=args.scheduling)
+    if args.scheduling == "slo":
+        requests = bursty_workload(
+            vocab=cfg.vocab, n_long=args.slots,
+            n_burst=max(args.requests - args.slots, 1),
+            long_prompt_len=args.prompt_len, long_gen_len=args.gen_len,
+            burst_prompt_len=max(args.prompt_len // 4, 1),
+            burst_gen_len=max(args.gen_len // 4, 1),
+            burst_deadline_s=args.deadline, sampler=_sampler(args),
+            seed=args.seed)
+    else:
+        requests = poisson_workload(
+            n_requests=args.requests, vocab=cfg.vocab, rate_rps=args.rate,
+            prompt_len_range=(min(4, args.prompt_len), args.prompt_len),
+            gen_len_range=(min(2, args.gen_len), args.gen_len),
+            sampler=_sampler(args), seed=args.seed)
     results, report = engine.run(requests, warmup=not args.no_warmup)
     print(f"[serve] arch={cfg.name} slots={args.slots} max_len={max_len} "
           f"requests={args.requests} rate={args.rate}/s")
@@ -168,6 +184,16 @@ def _run_engine(args):
               f"cow={pg['cow_count']}, "
               f"resident={pg['resident_kv_bytes']:,}B "
               f"(dense equiv {pg['dense_equiv_kv_bytes']:,}B)")
+    if "slo" in report:
+        sl = report["slo"]
+        print(f"[serve] slo ({report['scheduling']}): attainment "
+              f"{sl['deadline_met']}/{sl['deadline_requests']} "
+              f"({sl['attainment']:.2f}), goodput "
+              f"{sl['goodput_tok_per_s']:.1f} tok/s, deadline ttft "
+              f"p99={sl['deadline_ttft_ms']['p99']:.0f}ms, "
+              f"preemptions={sl['preemptions']} "
+              f"(spills={sl['spills']}, revivals={sl['revivals']}), "
+              f"chunked ticks={sl['prefill_chunk_count']}")
 
 
 def main():
@@ -218,6 +244,19 @@ def main():
                          "2x4): params tensor-parallel, KV cache sharded "
                          "over slots/heads (docs/sharded-serving.md). On "
                          "CPU the devices are XLA host-platform devices")
+    ap.add_argument("--scheduling", choices=["fifo", "slo"], default="fifo",
+                    help="[engine] admission policy: fifo (arrival order) "
+                         "or slo (priority + earliest TTFT deadline, with "
+                         "preemption; docs/slo-scheduling.md). slo swaps "
+                         "the workload for a deadline-carrying bursty one")
+    ap.add_argument("--deadline", type=float, default=0.25,
+                    help="[engine --scheduling slo] burst requests' TTFT "
+                         "deadline, seconds after arrival")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="[engine] split prompts longer than this into "
+                         "fixed-budget prefill chunks interleaved with "
+                         "decode ticks (0 = one-shot; see "
+                         "repro.launch.costing.prefill_chunk_guidance)")
     ap.add_argument("--no-warmup", action="store_true",
                     help="[engine] skip the unmeasured warmup tick "
                          "(first-call XLA compile time then lands in "

@@ -151,10 +151,20 @@ def _split_in_proj(z_xbc_dt, *, d_inner, n_groups, d_state, n_heads):
     return z, xp, b, c, dt
 
 
-def _causal_depthwise_conv(x, w, b):
-    """x (B, S, C), w (K, C): depthwise causal conv (pad left K-1)."""
+def _causal_depthwise_conv(x, w, b, hist=None):
+    """x (B, S, C), w (K, C): depthwise causal conv (pad left K-1).
+
+    ``hist`` (B, K-1, C), when given, replaces the zero left-pad with the
+    last K-1 conv inputs of an earlier segment — the chunked-prefill
+    continuation. The summation order is identical either way (a fixed
+    K-term sum per position), so a history-padded chunk is bit-identical
+    to the same positions inside one long conv.
+    """
     K = w.shape[0]
-    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    if hist is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([hist.astype(x.dtype), x], axis=1)
     # sum_k w[k] * x[t - (K-1) + k] — small K, unrolled (K=4)
     y = sum(xp[:, k:k + x.shape[1], :] * w[k] for k in range(K))
     return y + b
@@ -164,10 +174,22 @@ def mamba2_forward(params: Params, x, *, d_state: int, headdim: int,
                    n_groups: int = 1, expand: int = 2, ssd_chunk: int = 256,
                    compute_dtype=jnp.bfloat16,
                    initial_state=None) -> Tuple[jax.Array, jax.Array]:
-    """Mamba-2 mixer over ``x: (B, S, d_model)`` → ``(y, last_state)``."""
+    """Mamba-2 mixer over ``x: (B, S, d_model)`` → ``(y, last_state)``.
+
+    ``initial_state`` is either the legacy SSM state array ``(B, H, P, N)``
+    or a dict ``{"h", "conv"}`` (the per-layer slice of
+    :func:`init_ssm_state`) — the dict form also seeds the depthwise conv
+    with the previous segment's last ``d_conv - 1`` inputs, which is what
+    makes chunked prefill a bit-identical continuation.
+    """
     B, S, d_model = x.shape
     d_inner = expand * d_model
     n_heads = d_inner // headdim
+
+    conv_hist = None
+    if isinstance(initial_state, dict):
+        conv_hist = initial_state["conv"]
+        initial_state = initial_state["h"]
 
     proj = x.astype(compute_dtype) @ params["in_proj"].astype(compute_dtype)
     z, xp, b, c, dt = _split_in_proj(
@@ -177,7 +199,7 @@ def mamba2_forward(params: Params, x, *, d_state: int, headdim: int,
     conv_in = jnp.concatenate([xp, b, c], axis=-1)
     conv_out = _causal_depthwise_conv(
         conv_in, params["conv_w"].astype(compute_dtype),
-        params["conv_b"].astype(compute_dtype))
+        params["conv_b"].astype(compute_dtype), hist=conv_hist)
     conv_out = silu_f32(conv_out, out_dtype=compute_dtype)
     xp, b, c = jnp.split(conv_out, [d_inner, d_inner + n_groups * d_state],
                          axis=-1)

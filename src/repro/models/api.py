@@ -178,16 +178,67 @@ class Model:
         return self._mod.paged_decode_step(params, cache, tokens, self.cfg)
 
     def prefill_suffix(self, params, batch, *, prefix, prompt_len):
-        """Suffix-only prefill against cached prefix K/V (dense family
-        only: MoE expert-capacity coupling and SSM/hybrid recurrence make
-        skipping prefix compute inexact there — those families share paged
-        *storage* but recompute prefill; see docs/paged-kv.md)."""
-        if self.cfg.family != "dense":
+        """Suffix-only prefill against cached prefix K/V.
+
+        Dense always; MoE only in the dropless regime — below it, expert
+        capacity couples the suffix tokens to the prefix tokens they no
+        longer see (the padded-prefill condition again). SSM/hybrid
+        recurrence has no position-addressed prefix to resume from — those
+        families share paged *storage* but continue chunked prefill through
+        :meth:`prefill_chunk` instead; see docs/paged-kv.md."""
+        cfg = self.cfg
+        ok = cfg.family == "dense" or \
+            (cfg.family == "moe" and self.supports_padded_prefill)
+        if not ok:
             raise ValueError(
-                f"family {self.cfg.family!r} cannot skip prefix prefill "
+                f"family {cfg.family!r} cannot skip prefix prefill "
                 "compute (expert-capacity or recurrent-state coupling)")
         return self._mod.prefill_suffix(params, batch, self.cfg,
                                         prefix=prefix, prompt_len=prompt_len)
+
+    # ---- chunked prefill (docs/slo-scheduling.md) --------------------------
+    @property
+    def supports_chunked_prefill(self) -> bool:
+        """Whether a prompt can be prefilled in fixed-budget chunks
+        interleaved with decode ticks, bit-identical to one-shot prefill.
+
+        Attention families chunk via :meth:`prefill_suffix` (dense always,
+        MoE dropless-only); SSM/hybrid chunk via :meth:`prefill_chunk`
+        (carried recurrent state). Encoder has no decode; VLM is not
+        served."""
+        cfg = self.cfg
+        if cfg.family == "moe":
+            return self.supports_padded_prefill
+        return cfg.family in ("dense", "ssm", "hybrid")
+
+    @property
+    def prefill_chunk_alignment(self) -> int:
+        """Chunk boundaries must land on multiples of this many tokens for
+        chunked prefill to be bit-identical to one-shot: recurrent families
+        need SSD-chunk alignment (the chunked scan's intra-chunk grouping
+        must match the one-shot scan's), attention families have no
+        constraint (the engine still aligns to ``block_size`` when
+        paged)."""
+        if self.cfg.family in ("ssm", "hybrid"):
+            return self.cfg.ssd_chunk
+        return 1
+
+    def prefill_chunk(self, params, batch, *, state, prefix_kv=None):
+        """Continue a recurrent family's chunked prefill from carried
+        state: ``state`` is what the chunk-0 :meth:`prefill` (or a previous
+        ``prefill_chunk``) returned; the hybrid additionally takes
+        ``prefix_kv`` — the shared block's cached prefix K/V
+        ``(n_apps, 1, P, Hk, D)``. Attention families raise: they chunk
+        through :meth:`prefill_suffix` (no carried state)."""
+        if self.cfg.family == "ssm":
+            return self._mod.prefill_chunk(params, batch, self.cfg,
+                                           state=state)
+        if self.cfg.family == "hybrid":
+            return self._mod.prefill_chunk(params, batch, self.cfg,
+                                           state=state, prefix_kv=prefix_kv)
+        raise ValueError(
+            f"family {self.cfg.family!r} has no carried-state prefill "
+            "chunk — attention families chunk via prefill_suffix")
 
     def split_prefill_cache(self, pre):
         """Split a prefill cache into (kv leaves laid out

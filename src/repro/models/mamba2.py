@@ -20,8 +20,8 @@ from repro.models import transformer as dense
 from repro.models import verify_common
 from repro.parallel import constrain
 
-__all__ = ["init_params", "forward", "init_cache", "prefill", "decode_step",
-           "verify_step", "commit_verified"]
+__all__ = ["init_params", "forward", "init_cache", "prefill",
+           "prefill_chunk", "decode_step", "verify_step", "commit_verified"]
 
 
 #: Static-auditor registration (:mod:`repro.analysis.targets`): the serve
@@ -34,6 +34,7 @@ SERVE_AUDIT = {
     "paged": False,
     "kv_key": None,
     "suffix_prefill": False,
+    "prefill_chunk": True,
 }
 
 
@@ -121,6 +122,49 @@ def prefill(params: Params, batch: dict, cfg: ModelConfig, *, max_len: int):
     logits = unembed(params["embed"], h[:, -1:], compute_dtype=cfg.cdtype)
     return (constrain(logits, "batch", None, "vocab"),
             {"layers": states, "pos": jnp.asarray(S, jnp.int32)})
+
+
+def prefill_chunk(params: Params, batch: dict, cfg: ModelConfig, *,
+                  state: Params):
+    """Continue a chunked prefill from a cache-shaped ``state``.
+
+    ``state`` is exactly what :func:`prefill` (or a previous
+    ``prefill_chunk``) returned — per-layer ``{"h", "conv"}`` plus the
+    token cursor — so the final chunk's state *is* the prefill cache. The
+    per-layer dict seeds both the SSD recurrence (``h``) and the depthwise
+    conv history (``conv``), making the chunked scan bit-identical to one
+    long scan when the engine aligns chunk boundaries to ``cfg.ssd_chunk``
+    (see ``docs/slo-scheduling.md``).
+    """
+    h = embed(params["embed"], batch["tokens"], compute_dtype=cfg.cdtype)
+    h = constrain(h, "batch", "seq", "embed")
+    S = h.shape[1]
+
+    def body(carry, xs):
+        layer, st = xs
+        out, h_last = _layer_fwd(layer, carry, cfg=cfg, initial_state=st)
+        # conv state: last (d_conv - 1) conv inputs *overall* — recompute
+        # this chunk's tail and splice it behind the carried history so
+        # chunks shorter than d_conv - 1 stay exact.
+        hn = rms_norm(layer["norm"], carry)[:, -(cfg.d_conv - 1):]
+        proj = hn.astype(cfg.cdtype) @ layer["mixer"]["in_proj"] \
+            .astype(cfg.cdtype)
+        d_inner = cfg.d_inner
+        bs = cfg.n_groups * cfg.d_state
+        xp = proj[..., d_inner:2 * d_inner]
+        bc = proj[..., 2 * d_inner:2 * d_inner + 2 * bs]
+        tail = jnp.concatenate([xp, bc], axis=-1).astype(st["conv"].dtype)
+        conv_state = jnp.concatenate([st["conv"], tail],
+                                     axis=1)[:, -(cfg.d_conv - 1):]
+        return out, {"h": h_last, "conv": conv_state}
+
+    h, states = lax.scan(dense._remat(body, cfg), h,
+                         (params["layers"], state["layers"]))
+    h = rms_norm(params["final_norm"], h)
+    logits = unembed(params["embed"], h[:, -1:], compute_dtype=cfg.cdtype)
+    return (constrain(logits, "batch", None, "vocab"),
+            {"layers": states,
+             "pos": state["pos"] + jnp.asarray(S, jnp.int32)})
 
 
 def decode_step(params: Params, cache: Params, tokens, cfg: ModelConfig):

@@ -22,8 +22,8 @@ from repro.models import transformer as dense
 from repro.parallel import constrain
 
 __all__ = ["init_params", "forward", "init_cache", "init_paged_cache",
-           "prefill", "decode_step", "paged_decode_step", "verify_step",
-           "paged_verify_step", "commit_verified"]
+           "prefill", "prefill_suffix", "decode_step", "paged_decode_step",
+           "verify_step", "paged_verify_step", "commit_verified"]
 
 
 #: Static-auditor registration (:mod:`repro.analysis.targets`): the serve
@@ -35,7 +35,7 @@ SERVE_AUDIT = {
     "phases": ("prefill", "decode", "verify", "commit"),
     "paged": True,
     "kv_key": "layers",
-    "suffix_prefill": False,
+    "suffix_prefill": True,
 }
 
 
@@ -158,6 +158,68 @@ def prefill(params: Params, batch: dict, cfg: ModelConfig, *, max_len: int,
     logits = unembed(params["embed"], h_last, compute_dtype=cfg.cdtype)
     return (constrain(logits, "batch", None, "vocab"),
             {"layers": kv_layers, "pos": pos})
+
+
+def prefill_suffix(params: Params, batch: dict, cfg: ModelConfig, *,
+                   prefix: Params, prompt_len):
+    """Suffix-only prefill behind a cached prefix — the MoE twin of
+    :func:`repro.models.transformer.prefill_suffix`.
+
+    The attention path is identical (suffix queries attend over
+    ``concat(prefix, suffix)`` with explicit positions); only the MLP is
+    the expert layer. Exactness caveat: routing just the suffix through
+    the experts matches routing the whole prompt only in the *dropless*
+    regime — below it, expert capacity couples the suffix tokens to the
+    prefix tokens they no longer see, so
+    ``Model.prefill_suffix`` gates MoE on ``supports_padded_prefill``
+    (the same ``capacity_factor >= n_experts / top_k`` condition).
+    """
+    from repro.layers.rope import apply_rope
+
+    P = prefix["k"].shape[2]
+    h = embed(params["embed"], batch["tokens"], compute_dtype=cfg.cdtype)
+    h = constrain(h, "batch", "seq", "embed")
+    S = h.shape[1]
+    positions_q = P + jnp.arange(S)
+    positions_kv = jnp.arange(P + S)
+
+    def body(carry, xs):
+        layer, pre = xs
+        hn = rms_norm(layer["attn_norm"], carry)
+        attn_strategy = cfg.moa_for("attention")
+        q, k, v = attn_lib._project_qkv(
+            layer["attn"], hn, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+            compute_dtype=cfg.cdtype, strategy=attn_strategy)
+        q = apply_rope(q, positions_q, theta=cfg.rope_theta)
+        k = apply_rope(k, positions_q, theta=cfg.rope_theta)
+        k_full = jnp.concatenate([pre["k"].astype(cfg.cdtype), k], axis=1)
+        v_full = jnp.concatenate([pre["v"].astype(cfg.cdtype), v], axis=1)
+        o = attn_lib.full_attention(q, k_full, v_full, causal=True,
+                                    positions_q=positions_q,
+                                    positions_kv=positions_kv)
+        B = o.shape[0]
+        o = o.reshape(B, S, cfg.n_heads * cfg.head_dim)
+        o = attn_lib._moa_dot(o, layer["attn"]["wo"].astype(cfg.cdtype),
+                              strategy=attn_strategy,
+                              compute_dtype=cfg.cdtype)
+        h2 = carry + constrain(o, "batch", "seq", "embed")
+        hn = rms_norm(layer["mlp_norm"], h2)
+        m, _ = moe_forward(layer["moe"], hn, n_experts=cfg.n_experts,
+                           top_k=cfg.top_k,
+                           capacity_factor=cfg.capacity_factor,
+                           compute_dtype=cfg.cdtype,
+                           strategy=cfg.moa_for("moe"))
+        h2 = h2 + m
+        return h2, {"k": k, "v": v}
+
+    h, kv_layers = lax.scan(dense._remat(body, cfg), h,
+                            (params["layers"], prefix))
+    h = rms_norm(params["final_norm"], h)
+    h_last, pos = dense._last_real_slice(h, prompt_len - P)
+    logits = unembed(params["embed"], h_last, compute_dtype=cfg.cdtype)
+    cache = {"layers": kv_layers, "pos": jnp.asarray(prompt_len, jnp.int32)}
+    return constrain(logits, "batch", "seq", "vocab"), cache
 
 
 def decode_step(params: Params, cache: Params, tokens, cfg: ModelConfig):

@@ -34,8 +34,9 @@ from repro.models import verify_common
 from repro.parallel import constrain
 
 __all__ = ["init_params", "forward", "init_cache", "init_paged_cache",
-           "prefill", "decode_step", "paged_decode_step", "verify_step",
-           "paged_verify_step", "commit_verified", "n_applications"]
+           "prefill", "prefill_chunk", "decode_step", "paged_decode_step",
+           "verify_step", "paged_verify_step", "commit_verified",
+           "n_applications"]
 
 
 #: Static-auditor registration (:mod:`repro.analysis.targets`): the serve
@@ -48,6 +49,7 @@ SERVE_AUDIT = {
     "paged": True,
     "kv_key": "kv",
     "suffix_prefill": False,
+    "prefill_chunk": True,
 }
 
 
@@ -249,6 +251,106 @@ def prefill(params: Params, batch: dict, cfg: ModelConfig, *, max_len: int):
     logits = unembed(params["embed"], h[:, -1:], compute_dtype=cfg.cdtype)
     cache = {"ssm": ssm_states, "kv": kv_layers,
              "pos": jnp.asarray(S, jnp.int32)}
+    return constrain(logits, "batch", None, "vocab"), cache
+
+
+def prefill_chunk(params: Params, batch: dict, cfg: ModelConfig, *,
+                  state: Params, prefix_kv: Params):
+    """Continue a chunked prefill from carried SSM state + cached prefix KV.
+
+    ``state`` is the ``{"ssm", "pos"}`` portion of what :func:`prefill`
+    (or a previous ``prefill_chunk``) produced — per-layer ``{"h", "conv"}``
+    seeding both the SSD recurrence and the depthwise conv history.
+    ``prefix_kv`` holds the shared block's already-computed prefix K/V,
+    ``{"k", "v"}: (n_apps, 1, P, Hk, D)`` in compute dtype; this chunk's
+    queries attend over ``concat(prefix, chunk)`` with explicit positions,
+    exactly like :func:`repro.models.transformer.prefill_suffix`.
+
+    Returns ``(logits, {"ssm", "kv", "pos"})`` where ``kv`` is the chunk's
+    *suffix-only* K/V ``(n_apps, B, S, Hk, D)`` (unpadded — the engine
+    accumulates it or scatters it into pool pages) and ``ssm``/``pos`` are
+    the carried state advanced through this chunk. Bit-identical to the
+    same positions of a one-shot :func:`prefill` when chunk boundaries
+    align to ``cfg.ssd_chunk`` (see ``docs/slo-scheduling.md``).
+    """
+    from repro.layers.rope import apply_rope
+
+    h = embed(params["embed"], batch["tokens"], compute_dtype=cfg.cdtype)
+    h = constrain(h, "batch", "seq", "embed")
+    S = h.shape[1]
+    P = prefix_kv["k"].shape[2]
+    positions_q = P + jnp.arange(S)
+    positions_kv = jnp.arange(P + S)
+    n_apps, per_group, tail = _grouped(cfg)
+    head, tail_p = _split_layers(params, cfg)
+    head_states = jax.tree.map(
+        lambda a: a[: n_apps * per_group].reshape(
+            (n_apps, per_group) + a.shape[1:]), state["ssm"])
+    tail_states = jax.tree.map(lambda a: a[n_apps * per_group:],
+                               state["ssm"]) if tail else None
+
+    def mamba_body(carry, xs):
+        layer, st = xs
+        out, h_last = mamba_lm._layer_fwd(layer, carry, cfg=cfg,
+                                          initial_state=st)
+        # conv state: last (d_conv - 1) conv inputs overall — splice this
+        # chunk's recomputed tail behind the carried history so chunks
+        # shorter than d_conv - 1 stay exact.
+        hn = rms_norm(layer["norm"], carry)[:, -(cfg.d_conv - 1):]
+        proj = hn.astype(cfg.cdtype) @ layer["mixer"]["in_proj"] \
+            .astype(cfg.cdtype)
+        d_inner = cfg.d_inner
+        bs = cfg.n_groups * cfg.d_state
+        tail_in = jnp.concatenate(
+            [proj[..., d_inner:2 * d_inner],
+             proj[..., 2 * d_inner:2 * d_inner + 2 * bs]],
+            axis=-1).astype(st["conv"].dtype)
+        conv_state = jnp.concatenate([st["conv"], tail_in],
+                                     axis=1)[:, -(cfg.d_conv - 1):]
+        return out, {"h": h_last, "conv": conv_state}
+
+    def group_body(carry, xs):
+        group_layers, group_states, app_norm, pre = xs
+        out, ssm_states = lax.scan(dense._remat(mamba_body, cfg), carry,
+                                   (group_layers, group_states))
+        hn = rms_norm(app_norm["attn"], out)
+        attn_strategy = cfg.moa_for("attention")
+        q, k, v = attn_lib._project_qkv(
+            params["shared_attn"], hn, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+            compute_dtype=cfg.cdtype, strategy=attn_strategy)
+        q = apply_rope(q, positions_q, theta=cfg.rope_theta)
+        k = apply_rope(k, positions_q, theta=cfg.rope_theta)
+        k_full = jnp.concatenate([pre["k"].astype(cfg.cdtype), k], axis=1)
+        v_full = jnp.concatenate([pre["v"].astype(cfg.cdtype), v], axis=1)
+        o = attn_lib.full_attention(q, k_full, v_full, causal=True,
+                                    positions_q=positions_q,
+                                    positions_kv=positions_kv)
+        B = o.shape[0]
+        o = o.reshape(B, S, cfg.n_heads * cfg.head_dim)
+        out = out + attn_lib._moa_dot(
+            o, params["shared_attn"]["wo"].astype(cfg.cdtype),
+            strategy=attn_strategy, compute_dtype=cfg.cdtype)
+        hn = rms_norm(app_norm["mlp"], out)
+        out = out + swiglu(params["shared_mlp"], hn,
+                           strategy=cfg.moa_for("mlp"),
+                           compute_dtype=cfg.cdtype)
+        return out, (ssm_states, {"k": k, "v": v})
+
+    h, (ssm_head, kv_layers) = lax.scan(
+        group_body, h, (head, head_states, params["app_norms"], prefix_kv))
+    ssm_states = jax.tree.map(
+        lambda a: a.reshape((-1,) + a.shape[2:]), ssm_head)
+    if tail_p is not None:
+        h, ssm_tail = lax.scan(dense._remat(mamba_body, cfg), h,
+                               (tail_p, tail_states))
+        ssm_states = jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b], axis=0), ssm_states,
+            ssm_tail)
+    h = rms_norm(params["final_norm"], h)
+    logits = unembed(params["embed"], h[:, -1:], compute_dtype=cfg.cdtype)
+    cache = {"ssm": ssm_states, "kv": kv_layers,
+             "pos": state["pos"] + jnp.asarray(S, jnp.int32)}
     return constrain(logits, "batch", None, "vocab"), cache
 
 

@@ -11,8 +11,13 @@ for a shared paged block pool with ref-counted prefix caching and
 memory-aware admission (:mod:`repro.serve.kv_pool`);
 ``ServeEngine(drafter=...)`` switches the decode tick to speculative
 decoding — draft ``k`` tokens, verify in one pass, commit the accepted
-prefix (:mod:`repro.serve.spec`). See ``docs/serving.md``,
-``docs/paged-kv.md`` and ``docs/spec-decode.md`` for the design and
+prefix (:mod:`repro.serve.spec`);
+``ServeEngine(scheduling="slo", prefill_chunk_tokens=...)`` serves under
+TTFT deadlines — chunked prefill interleaves long prompts with decode
+ticks and deadline-aware preemption spills/revives running requests
+bit-identically (:mod:`repro.serve.clock` makes it a deterministic
+simulator). See ``docs/serving.md``, ``docs/paged-kv.md``,
+``docs/spec-decode.md`` and ``docs/slo-scheduling.md`` for the design and
 scheduler/pool invariants.
 
 Public surface::
@@ -24,21 +29,23 @@ Public surface::
         n_requests=8, rate_rps=50.0, vocab=model.cfg.vocab))
 """
 
+from repro.serve.clock import StepClock
 from repro.serve.engine import ServeEngine
 from repro.serve.kv_pool import AdmissionPlan, BlockPool, blocks_needed
-from repro.serve.metrics import RequestMetrics, aggregate
+from repro.serve.metrics import RequestMetrics, aggregate, slo_report
 from repro.serve.request import FinishReason, Request, RequestResult
 from repro.serve.sampling import GREEDY, Sampler, sample_batch
 from repro.serve.scheduler import SlotScheduler
 from repro.serve.spec import (Drafter, DraftModelDrafter, NgramDrafter,
                               OracleDrafter, resolve_drafter, verify_accept)
-from repro.serve.workload import poisson_workload, shared_prefix_workload
+from repro.serve.workload import (bursty_workload, poisson_workload,
+                                  shared_prefix_workload)
 
 __all__ = [
     "AdmissionPlan", "BlockPool", "Drafter", "DraftModelDrafter",
     "FinishReason", "GREEDY", "NgramDrafter", "OracleDrafter", "Request",
     "RequestMetrics", "RequestResult", "Sampler", "ServeEngine",
-    "SlotScheduler", "aggregate", "blocks_needed", "resolve_drafter",
-    "sample_batch", "verify_accept", "poisson_workload",
-    "shared_prefix_workload",
+    "SlotScheduler", "StepClock", "aggregate", "blocks_needed",
+    "bursty_workload", "resolve_drafter", "sample_batch", "slo_report",
+    "verify_accept", "poisson_workload", "shared_prefix_workload",
 ]

@@ -27,6 +27,18 @@ slot's accepted prefix — up to ``k + 1`` tokens per tick, rejection being
 a per-slot cursor rewind (plus a state-snapshot restore for recurrent
 families).
 
+**SLO-aware serving** (``docs/slo-scheduling.md``): with
+``prefill_chunk_tokens`` set, long prompts prefill in fixed-budget
+chunks interleaved with decode ticks, so an in-flight request's
+inter-token latency is bounded by one chunk instead of one whole prompt.
+With ``scheduling="slo"`` the scheduler admits by (priority, earliest
+deadline) and the engine may *preempt* a running request whose deadline
+is later than a waiting one's: its device state is spilled (dense slots:
+a slot-row snapshot; paged: the block table is pinned and only the
+per-slot state is snapshotted), the slot is handed over, and the victim
+is revived later with bit-identical continuation. Both features preserve
+greedy-token parity with the one-shot FIFO engine.
+
 Shape discipline (everything ``jax.jit`` sees is from a fixed set):
   * decode: always ``(n_slots, 1)`` tokens against the same cache shapes;
   * speculative verify: always ``(n_slots, k + 1)`` tokens, one shape;
@@ -55,7 +67,7 @@ from repro.parallel import (activate, replicate_uneven_kv_heads,
                             serve_cache_shardings, serve_rules_for)
 from repro.serve.kv_pool import TRASH_BLOCK, BlockPool, blocks_needed
 from repro.serve.metrics import (RequestMetrics, aggregate, paged_report,
-                                 spec_report)
+                                 slo_report, spec_report)
 from repro.serve.request import FinishReason, Request, RequestResult
 from repro.serve.sampling import sample_batch
 from repro.serve.scheduler import SlotScheduler
@@ -107,6 +119,32 @@ class _Inflight:
 
 
 @dataclasses.dataclass
+class _Prefilling:
+    """Host-side state of one request mid-chunked-prefill.
+
+    The slot is scheduler-active but not yet in ``_inflight`` — no token
+    has been emitted. Paged: the block table is planned up front but the
+    slot's installed row stays all-trash (pos 0) until the final chunk,
+    so interleaved decode ticks write only to the trash page. Dense
+    attention: per-chunk suffix KV accumulates in ``kv_parts`` and the
+    final chunk assembles + writes the whole slot row at once.
+    """
+
+    request: Request
+    slot: int
+    admitted_s: float
+    done: int                 # prompt tokens already consumed
+    chunks: int = 0
+    #: recurrent families: carried cache-shaped state between chunks
+    state: Optional[dict] = None
+    #: attention families, dense slots: accumulated per-chunk suffix KV
+    kv_parts: List = dataclasses.field(default_factory=list)
+    plan: Optional[object] = None
+    table: Optional["_SlotTable"] = None
+    cached_tokens: int = 0
+
+
+@dataclasses.dataclass
 class _SlotTable:
     """Host mirror of one slot's block table (paged mode).
 
@@ -138,6 +176,47 @@ def _write_slot(cache: dict, pre: dict, slot):
             out[key] = jax.tree.map(
                 lambda b, s: b.at[:, slot].set(s[:, 0].astype(b.dtype)),
                 big, pre[key])
+    return out
+
+
+def _read_slot(cache: dict, slot):
+    """Exact inverse of :func:`_write_slot`: snapshot row ``slot`` of the
+    batched cache as a batch=1 prefill-shaped tree (preemption spill).
+    ``_write_slot(_read_slot(cache, s), s)`` round-trips bit-identically —
+    both sides are pure gathers/scatters in the cache dtype."""
+    out = {}
+    for key, big in cache.items():
+        if key == "pos":
+            out[key] = big[slot]
+        else:
+            # gather-then-expand: plain slicing needs static bounds under
+            # jit, and ``b[:, slot]`` gathers fine with a traced index
+            out[key] = jax.tree.map(lambda b: b[:, slot][:, None], big)
+    return out
+
+
+def _read_paged_slot(cache, slot, *, has_ssm):
+    """Snapshot a paged slot's per-slot dense state (cursor + recurrent
+    state). The KV itself is NOT copied — the spilled request keeps its
+    ref-counted pool pages pinned, so only the slot-indexed leaves move."""
+    out = {"pos": cache["pos"][slot]}
+    if has_ssm:
+        out["ssm"] = jax.tree.map(lambda b: jnp.expand_dims(b[:, slot], 1),
+                                  cache["ssm"])
+    return out
+
+
+def _restore_paged_slot(cache, snap, table_row, slot, *, has_ssm):
+    """Revive a spilled paged request into ``slot``: reinstall its block
+    table row and cursor, and restore any recurrent state."""
+    out = dict(cache)
+    out["block_tables"] = cache["block_tables"].at[slot].set(table_row)
+    out["pos"] = cache["pos"].at[slot].set(
+        snap["pos"].astype(cache["pos"].dtype))
+    if has_ssm:
+        out["ssm"] = jax.tree.map(
+            lambda b, s: b.at[:, slot].set(s[:, 0].astype(b.dtype)),
+            cache["ssm"], snap["ssm"])
     return out
 
 
@@ -262,8 +341,27 @@ class ServeEngine:
         the bitwise-reproducible table).
     clock:
         Monotonic time source in seconds (injectable for deterministic
-        tests). Idle gaps before the next arrival are fast-forwarded, so a
-        frozen clock still makes progress.
+        tests — a :class:`repro.serve.clock.StepClock` turns the engine
+        into an exact discrete-event simulator). Idle gaps before the
+        next arrival are fast-forwarded, so a frozen clock still makes
+        progress.
+    prefill_chunk_tokens:
+        Split prompts longer than this into fixed-budget prefill chunks,
+        one chunk per engine tick, interleaved with decode ticks (None =
+        one-shot prefill). Must be a multiple of the model's
+        ``prefill_chunk_alignment`` (``cfg.ssd_chunk`` for recurrent
+        families) and, paged, of ``block_size``; chunked prefill is
+        greedy-token bit-identical to one-shot (``docs/slo-scheduling.md``
+        — chunk-size guidance in
+        :func:`repro.launch.costing.prefill_chunk_guidance`).
+    scheduling:
+        ``"fifo"`` (default, historical behaviour) or ``"slo"``: admit by
+        (priority, earliest deadline) and preempt a running request when
+        a waiting one has a strictly earlier deadline and no slot is
+        free. Preemption spills the victim's state (dense: slot-row
+        snapshot; paged: pinned block table + per-slot state) and revives
+        it later bit-identically. Incompatible with a ``drafter`` (the
+        verify window's tentative state cannot be spilled mid-flight).
     """
 
     def __init__(self, model, params, *, n_slots: int, max_len: int,
@@ -271,7 +369,9 @@ class ServeEngine:
                  block_size: int = 16, n_blocks: Optional[int] = None,
                  rng=None, drafter: Optional[Drafter] = None,
                  mesh=None, rules=None,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 prefill_chunk_tokens: Optional[int] = None,
+                 scheduling: str = "fifo"):
         if model.cfg.family == "encoder":
             raise ValueError("encoder-only arch has no decode step")
         if model.cfg.family == "vlm":
@@ -283,15 +383,51 @@ class ServeEngine:
                 f"family {model.cfg.family!r} (cfg {model.cfg.name!r}) has "
                 "no exact multi-token verify — speculative decoding needs "
                 "Model.supports_spec_decode")
+        if scheduling not in SlotScheduler.POLICIES:
+            raise ValueError(f"unknown scheduling {scheduling!r}; expected "
+                             f"one of {SlotScheduler.POLICIES}")
+        if scheduling == "slo" and drafter is not None:
+            raise ValueError(
+                "scheduling='slo' is incompatible with speculative "
+                "decoding: preemption would have to spill the drafter's "
+                "per-slot state and the verify window's tentative writes")
+        self._chunk = prefill_chunk_tokens
+        if self._chunk is not None:
+            if self._chunk < 1:
+                raise ValueError("prefill_chunk_tokens must be >= 1")
+            if not model.supports_chunked_prefill:
+                raise ValueError(
+                    f"family {model.cfg.family!r} (cfg {model.cfg.name!r}) "
+                    "does not support chunked prefill "
+                    "(Model.supports_chunked_prefill)")
+            align = model.prefill_chunk_alignment
+            if self._chunk % align:
+                raise ValueError(
+                    f"prefill_chunk_tokens {self._chunk} must be a multiple "
+                    f"of the model's chunk alignment {align} (ssd_chunk for "
+                    "recurrent families — misaligned chunks change the SSD "
+                    "scan's block boundaries and break bit-exactness)")
+            if paged and self._chunk % block_size:
+                raise ValueError(
+                    f"prefill_chunk_tokens {self._chunk} must be a multiple "
+                    f"of block_size {block_size} so every chunk's KV lands "
+                    "on whole pool pages")
+            if getattr(model.cfg, "kv_cache_dtype", None) == "int8":
+                raise ValueError(
+                    "chunked prefill does not support int8 KV caches: "
+                    "per-chunk suffix KV is quantized per chunk, which "
+                    "breaks bit-exactness with the one-shot prefill scales")
         self.model = model
         self.n_slots = n_slots
         self.max_len = max_len
         self.drafter = drafter
         self.spec_k = drafter.k if drafter is not None else 0
+        self.scheduling = scheduling
         self.scheduler = SlotScheduler(n_slots, max_len,
                                        [b for b in prompt_buckets
                                         if b <= max_len],
-                                       spec_margin=self.spec_k)
+                                       spec_margin=self.spec_k,
+                                       policy=scheduling, clock=clock)
         self._clock = clock
         self._rng = jax.random.PRNGKey(0) if rng is None else rng
         self._padded = model.supports_padded_prefill
@@ -336,6 +472,10 @@ class ServeEngine:
                 "write", _write_slot, donate=(0,),
                 in_specs=(self._cache_sh, self._rep, self._rep),
                 out_specs=self._cache_sh)
+            self._read = self._build(
+                "read_slot", _read_slot,
+                in_specs=(self._cache_sh, self._rep),
+                out_specs=self._rep)
 
         if self._padded:
             self._prefill = self._build(
@@ -350,6 +490,34 @@ class ServeEngine:
                 lambda p, b: model.prefill(p, b, max_len=max_len),
                 in_specs=(self._param_sh, self._rep),
                 out_specs=self._rep, key_extra=(max_len,))
+        if self._chunk is not None:
+            fam = model.cfg.family
+            self._chunk_kv_key = "kv" if fam == "hybrid" else "layers"
+            if fam == "ssm":
+                self._prefill_chunk = self._build(
+                    "prefill_chunk",
+                    lambda p, b, st: model.prefill_chunk(p, b, state=st),
+                    in_specs=(self._param_sh, self._rep, self._rep),
+                    out_specs=self._rep)
+            elif fam == "hybrid":
+                self._prefill_chunk = self._build(
+                    "prefill_chunk",
+                    lambda p, b, st, pre: model.prefill_chunk(
+                        p, b, state=st, prefix_kv=pre),
+                    in_specs=(self._param_sh, self._rep, self._rep,
+                              self._rep),
+                    out_specs=self._rep)
+            elif not hasattr(self, "_suffix_prefill"):
+                # attention families chunk via suffix prefill (chunk 0 uses
+                # a zero-length prefix); the paged dense engine already
+                # built this callable for prefix-cache hits
+                self._suffix_prefill = self._build(
+                    "suffix_prefill",
+                    lambda p, b, pre, pl: model.prefill_suffix(
+                        p, b, prefix=pre, prompt_len=pl),
+                    in_specs=(self._param_sh, self._rep, self._rep,
+                              self._rep),
+                    out_specs=self._rep)
         self._sample = self._build("sample", sample_batch)
         if drafter is not None:
             verify = model.paged_verify_step if paged else model.verify_step
@@ -364,9 +532,20 @@ class ServeEngine:
             self._accept = self._build("accept", verify_accept)
 
         self._inflight: Dict[int, _Inflight] = {}
+        #: slot -> mid-chunked-prefill request state
+        self._prefilling: Dict[int, _Prefilling] = {}
+        #: uid -> spilled (preempted) request record awaiting revival
+        self._spilled: Dict[int, dict] = {}
+        self._preemptions = 0
+        self._spills = 0
+        self._revivals = 0
+        self._chunk_ticks = 0
         self._steps = 0
         self._occupancy_sum = 0.0
         self._fast_forward_s = 0.0
+        # run() resets the clock origin; set here so preempt() works before
+        # the first run (tests drive the lifecycle methods directly)
+        self._t_start = self._clock()
         self._spec_ticks = 0
         self._spec_emitted = 0
         self._spec_slot_steps = 0.0
@@ -447,6 +626,17 @@ class ServeEngine:
         self._clear_slot = self._build(
             "clear_slot", _clear_slot, donate=(0,),
             in_specs=(self._cache_sh, self._rep),
+            out_specs=self._cache_sh)
+        has_ssm = model.cfg.family == "hybrid"
+        self._read_paged = self._build(
+            "read_paged_slot",
+            functools.partial(_read_paged_slot, has_ssm=has_ssm),
+            in_specs=(self._cache_sh, self._rep), out_specs=self._rep)
+        self._restore_paged = self._build(
+            "restore_paged_slot",
+            functools.partial(_restore_paged_slot, has_ssm=has_ssm),
+            donate=(0,),
+            in_specs=(self._cache_sh,) + (self._rep,) * 3,
             out_specs=self._cache_sh)
         self._prefix_hits = 0
         self._shared_block_hits = 0
@@ -649,9 +839,23 @@ class ServeEngine:
             self._pool.free(table.cow_spare)
         self.cache = self._clear_slot(self.cache, slot)
 
+    def _admission_gate(self, req: Request) -> bool:
+        """Paged admission gate: a spilled request already holds its
+        worst-case block reservation (revival allocates nothing), fresh
+        requests must fit the pool (invariant 6)."""
+        return req.uid in self._spilled or self._block_gate(req)
+
     def _admit(self, slot: int, req: Request, now_s: float,
                results: List[RequestResult]) -> None:
-        """Prefill ``req`` into ``slot`` and seed its first token."""
+        """Bind ``req`` to ``slot``: revive it if it was spilled by a
+        preemption, start a chunked prefill if its prompt exceeds the
+        chunk budget, else prefill in one shot and seed its first token."""
+        if req.uid in self._spilled:
+            self._revive(slot, req)
+            return
+        if self._chunk is not None and req.prompt_len > self._chunk:
+            self._begin_chunked(slot, req, now_s)
+            return
         p = req.prompt_len
         cached_tokens = 0
         if self.paged:
@@ -669,12 +873,23 @@ class ServeEngine:
             self.cache = self._write(self.cache, pre, slot)
         if self.drafter is not None:
             self.drafter.admit(slot, req.prompt)
+        self._seed(slot, req, logits, now_s, cached_tokens, 1, results)
+
+    def _seed(self, slot: int, req: Request, logits, admitted_s: float,
+              cached_tokens: int, chunks: int,
+              results: List[RequestResult]) -> None:
+        """Sample the first token from prefill logits and move the request
+        into the decode set (or finish it on the spot)."""
         first = int(np.asarray(req.sampler(
             logits[:, -1], None if req.sampler.greedy else self._next_key()))[0])
         t_first = self._now(self._t_start)
-        metrics = RequestMetrics(arrival_s=req.arrival_s, admitted_s=now_s,
-                                 first_token_s=t_first, prompt_tokens=p,
-                                 cached_prompt_tokens=cached_tokens)
+        metrics = RequestMetrics(arrival_s=req.arrival_s,
+                                 admitted_s=admitted_s,
+                                 first_token_s=t_first,
+                                 prompt_tokens=req.prompt_len,
+                                 cached_prompt_tokens=cached_tokens,
+                                 deadline_s=req.deadline_s,
+                                 prefill_chunks=chunks)
         inf = _Inflight(request=req, slot=slot, generated=[first],
                         next_token=first, metrics=metrics)
         if first == req.eos_id or req.max_new_tokens == 1:
@@ -683,6 +898,241 @@ class ServeEngine:
             if self.paged:
                 self._apply_cow(slot)
             self._inflight[slot] = inf
+
+    # ---- chunked prefill ---------------------------------------------------
+    def _begin_chunked(self, slot: int, req: Request, now_s: float) -> None:
+        """Open a chunked prefill: reserve paged blocks up front (the slot's
+        installed table row stays all-trash until the final chunk) and seed
+        the recurrent families' carried state."""
+        pf = _Prefilling(request=req, slot=slot, admitted_s=now_s, done=0)
+        if self.paged:
+            plan, table = self._plan_tables(req)
+            self._admissions += 1
+            if plan.n_shared:
+                self._prefix_hits += 1
+                self._shared_block_hits += plan.n_shared
+            pf.plan, pf.table = plan, table
+            if self._suffix_capable:
+                # prefix-cache hit: skip the matched blocks' compute and
+                # start the chunk cursor past them (same bound as the
+                # one-shot suffix path: at least one position recomputed)
+                n_pref = min(len(plan.full_matched),
+                             (req.prompt_len - 1) // self.block_size)
+                pf.done = pf.cached_tokens = n_pref * self.block_size
+        fam = self.model.cfg.family
+        if fam in ("ssm", "hybrid"):
+            cache1 = self.model.init_cache(1, self.max_len)
+            state_key = "layers" if fam == "ssm" else "ssm"
+            pf.state = {state_key: cache1[state_key],
+                        "pos": jnp.zeros((), jnp.int32)}
+        self._prefilling[slot] = pf
+
+    def _empty_prefix(self):
+        """Zero-length prefix K/V tree — chunk 0 of an attention or hybrid
+        chunked prefill is a suffix prefill with nothing in front."""
+        key = self._kv_key if self.paged else self._chunk_kv_key
+        kv = self.cache[key]
+        cd = self.model.cfg.cdtype
+        return {name: jnp.zeros(
+            (kv[name].shape[0], 1, 0) + kv[name].shape[3:], cd)
+            for name in ("k", "v")}
+
+    def _chunk_prefix_kv(self, pf: _Prefilling):
+        """Dense K/V over the first ``pf.done`` prompt tokens, feeding the
+        next chunk's suffix prefill (paged: gathered back from the pool
+        pages this prefill already wrote; dense slots: the accumulated
+        device-side parts, merged lazily)."""
+        if pf.done == 0:
+            return self._empty_prefix()
+        if self.paged:
+            ids = pf.table.blocks[: pf.done // self.block_size]
+            return self._gather_prefix(self.cache[self._kv_key],
+                                       jnp.asarray(ids, jnp.int32))
+        if len(pf.kv_parts) > 1:
+            pf.kv_parts = [jax.tree.map(
+                lambda *xs: jnp.concatenate(xs, axis=2), *pf.kv_parts)]
+        return pf.kv_parts[0]
+
+    def _store_chunk_kv(self, pf: _Prefilling, kv, final: bool, state_final,
+                        slot: int) -> None:
+        """Bank one chunk's suffix K/V. Paged: scatter onto this chunk's
+        pool pages now (shared/overhang logical blocks divert to the trash
+        page; rows are zero-padded up to whole pages) and install the real
+        table row + cursor + recurrent state only with the final chunk.
+        Dense slots: accumulate on device, then write the whole slot row
+        once. Rows past the prompt are garbage either way — masked by
+        ``pos`` until decode overwrites them."""
+        p = pf.request.prompt_len
+        if self.paged:
+            bs = self.block_size
+            pad_rows = -kv["k"].shape[2] % bs
+            if pad_rows:
+                kv = jax.tree.map(
+                    lambda x: jnp.pad(x, [(0, 0), (0, 0), (0, pad_rows)]
+                                      + [(0, 0)] * (x.ndim - 3)), kv)
+            n_written = kv["k"].shape[2] // bs
+            first_logical = pf.done // bs
+            table = pf.table
+            write_ids = []
+            for i in range(first_logical, first_logical + n_written):
+                if i >= len(table.blocks) or i in table.shared:
+                    write_ids.append(TRASH_BLOCK)
+                else:
+                    write_ids.append(table.blocks[i])
+            row = np.full((self._max_blocks,), TRASH_BLOCK, np.int32)
+            if final:
+                row[: len(table.blocks)] = table.blocks
+            pos = jnp.asarray(p if final else 0, jnp.int32)
+            self.cache = self._paged_write(
+                self.cache, kv, state_final,
+                jnp.asarray(write_ids, jnp.int32), jnp.asarray(row),
+                slot, pos)
+        else:
+            pf.kv_parts.append(kv)
+            if final:
+                merged = self._chunk_prefix_kv(pf)
+                pad_rows = self.max_len - merged["k"].shape[2]
+                if pad_rows:
+                    merged = jax.tree.map(
+                        lambda x: jnp.pad(x, [(0, 0), (0, 0), (0, pad_rows)]
+                                          + [(0, 0)] * (x.ndim - 3)), merged)
+                pre = {self._chunk_kv_key: merged,
+                       "pos": jnp.asarray(p, jnp.int32)}
+                if state_final is not None:
+                    pre["ssm"] = state_final
+                self.cache = self._write(self.cache, pre, slot)
+
+    def _prefill_tick(self, results: List[RequestResult]) -> None:
+        """Advance the lowest-numbered prefilling slot by one chunk; the
+        final chunk installs the slot's cache state and seeds the first
+        token exactly like a one-shot admission."""
+        slot = min(self._prefilling)
+        pf = self._prefilling[slot]
+        req = pf.request
+        p = req.prompt_len
+        take = min(self._chunk, p - pf.done)
+        end = pf.done + take
+        final = end >= p
+        pf.chunks += 1
+        self._chunk_ticks += 1
+        fam = self.model.cfg.family
+        if fam == "ssm":
+            toks = req.prompt_array()[:, pf.done:end]
+            logits, pf.state = self._prefill_chunk(
+                self.params, {"tokens": toks}, pf.state)
+            if final:
+                # the carried state IS the prefill cache
+                self.cache = self._write(self.cache, pf.state, slot)
+        elif fam == "hybrid":
+            toks = req.prompt_array()[:, pf.done:end]
+            prefix = self._chunk_prefix_kv(pf)
+            logits, out = self._prefill_chunk(
+                self.params, {"tokens": toks}, pf.state, prefix)
+            pf.state = {"ssm": out["ssm"], "pos": out["pos"]}
+            self._store_chunk_kv(pf, out["kv"], final,
+                                 out["ssm"] if final else None, slot)
+        else:
+            prefix = self._chunk_prefix_kv(pf)
+            toks = np.zeros((1, take), np.int32)
+            toks[0, :] = req.prompt[pf.done:end]
+            logits, pre = self._suffix_prefill(
+                self.params, {"tokens": toks}, prefix,
+                jnp.asarray(end, jnp.int32))
+            self._store_chunk_kv(pf, pre["layers"], final, None, slot)
+        pf.done = end
+        if final:
+            self._prefilling.pop(slot)
+            if self.paged:
+                self._register_prompt_blocks(req, pf.plan, pf.table)
+                self._tables[slot] = pf.table
+            if self.drafter is not None:
+                self.drafter.admit(slot, req.prompt)
+            self._seed(slot, req, logits, pf.admitted_s, pf.cached_tokens,
+                       pf.chunks, results)
+
+    # ---- preemption --------------------------------------------------------
+    def preempt(self, slot: int) -> None:
+        """Spill the request in ``slot`` and return it to the ready queue.
+
+        A decoding request's device state is snapshotted (dense slots: the
+        whole slot row; paged: only the per-slot cursor/recurrent state —
+        its pool pages stay pinned under their refcounts, which also makes
+        them immune to eviction storms) and revived bit-identically at its
+        next admission. A mid-prefill request is cheaper: progress is
+        discarded, its pages are freed, and it restarts from scratch — no
+        token was emitted yet, so nothing observable is lost.
+        """
+        now = self._now(self._t_start)
+        if slot in self._inflight:
+            inf = self._inflight.pop(slot)
+            inf.metrics.preempted += 1
+            rec = {"request": inf.request, "generated": inf.generated,
+                   "next_token": inf.next_token, "metrics": inf.metrics}
+            if self.paged:
+                rec["snap"] = self._read_paged(self.cache, slot)
+                rec["table"] = self._tables.pop(slot)
+                self.cache = self._clear_slot(self.cache, slot)
+            else:
+                rec["snap"] = self._read(self.cache, slot)
+            self._spilled[inf.request.uid] = rec
+            self._spills += 1
+        elif slot in self._prefilling:
+            pf = self._prefilling.pop(slot)
+            if self.paged:
+                for b in pf.table.blocks:
+                    self._pool.free(b)
+                if pf.table.cow_spare is not None:
+                    self._pool.free(pf.table.cow_spare)
+                self.cache = self._clear_slot(self.cache, slot)
+        else:
+            raise KeyError(f"slot {slot} has no preemptible request")
+        self.scheduler.preempt(slot, now)
+        self._preemptions += 1
+
+    def _revive(self, slot: int, req: Request) -> None:
+        """Reinstall a spilled request into ``slot`` and resume decoding
+        exactly where it left off (its TTFT was banked at first
+        admission; only queueing-for-revival time is added)."""
+        rec = self._spilled.pop(req.uid)
+        if self.paged:
+            table = rec["table"]
+            row = np.full((self._max_blocks,), TRASH_BLOCK, np.int32)
+            row[: len(table.blocks)] = table.blocks
+            self.cache = self._restore_paged(self.cache, rec["snap"],
+                                             jnp.asarray(row), slot)
+            self._tables[slot] = table
+        else:
+            self.cache = self._write(self.cache, rec["snap"], slot)
+        self._inflight[slot] = _Inflight(
+            request=req, slot=slot, generated=rec["generated"],
+            next_token=rec["next_token"], metrics=rec["metrics"])
+        self._revivals += 1
+
+    def _maybe_preempt(self, now_s: float) -> None:
+        """SLO policy: when no slot is free and the best waiting request
+        strictly outranks the worst running one, preempt the latter — at
+        most one preemption per tick; the strict-rank requirement plus
+        uid tiebreak means a preempted pair can never thrash."""
+        if self.scheduler.has_free or not self._inflight:
+            return
+        cand = self.scheduler.ready_head(now_s)
+        if cand is None:
+            return
+        if self.paged and not self._admission_gate(cand):
+            return   # freeing a slot would not make the candidate fit
+
+        def rank(r):
+            return (-r.priority,
+                    r.deadline_s if r.deadline_s is not None
+                    else float("inf"))
+
+        cand_rank = rank(cand)
+        victims = [(rank(inf.request), inf.request.uid, s)
+                   for s, inf in self._inflight.items()
+                   if rank(inf.request) > cand_rank]
+        if not victims:
+            return
+        self.preempt(max(victims)[2])
 
     def _finish(self, inf: _Inflight, now_s: float,
                 results: List[RequestResult]) -> None:
@@ -917,17 +1367,26 @@ class ServeEngine:
             self._admissions = 0
             self._block_occ_sum = 0.0
             self._peak_blocks = 0
+        self._preemptions = 0
+        self._spills = 0
+        self._revivals = 0
+        self._chunk_ticks = 0
         log_start = len(self.scheduler.admission_log)
         self._t_start = self._clock()
         limit = max_steps if max_steps is not None else 1_000_000
-        gate = self._block_gate if self.paged else None
+        gate = self._admission_gate if self.paged else None
         while not self.scheduler.done:
             now = self._now(self._t_start)
-            if not self.scheduler.active \
+            if not self.scheduler.active and not self.scheduler.has_ready \
                     and self.scheduler.next_arrival_s > now:
                 # idle: fast-forward the engine clock to the next arrival
+                # (a gate-vetoed head sits in the ready queue, so has_ready
+                # guards against fast-forwarding past work that only needs
+                # blocks, not time)
                 self._fast_forward_s += self.scheduler.next_arrival_s - now
                 now = self._now(self._t_start)
+            if self.scheduling == "slo":
+                self._maybe_preempt(now)
             while True:
                 # one at a time so each admission's block allocation is
                 # visible to the next gate evaluation
@@ -936,12 +1395,22 @@ class ServeEngine:
                 if not admitted:
                     break
                 self._admit(admitted[0][0], admitted[0][1], now, results)
+            if self.paged and not self._inflight and not self._prefilling \
+                    and self._spilled:
+                # stall escape: every runnable request is spilled but the
+                # gate vetoes the (fresh) ready head — revive a spilled one
+                # out of order; it holds its reservation, so it always fits
+                got = self.scheduler.admit_revivable(now, set(self._spilled))
+                if got is not None:
+                    self._admit(got[0], got[1], now, results)
+            if self._prefilling:
+                self._prefill_tick(results)
             if self._inflight:
                 if self.drafter is not None:
                     self._spec_tick(results)
                 else:
                     self._decode_tick(results)
-            if self._steps >= limit:
+            if self._steps + self._chunk_ticks >= limit:
                 raise RuntimeError(
                     f"serve engine exceeded {limit} decode steps with "
                     f"{len(self._inflight)} requests still in flight")
@@ -964,6 +1433,14 @@ class ServeEngine:
         report["slot_reuse"] = self.scheduler.slot_reuse_count(log_start)
         report["arch"] = self.model.cfg.name
         report["moa"] = self.model.cfg.moa_strategy.spec
+        report["scheduling"] = self.scheduling
+        if self.scheduling == "slo" or any(
+                r.metrics.deadline_s is not None for r in results):
+            report["slo"] = slo_report(
+                results, wall_s=wall, preemptions=self._preemptions,
+                spills=self._spills, revivals=self._revivals,
+                prefill_chunk_tokens=self._chunk or 0,
+                prefill_chunk_count=self._chunk_ticks)
         if self.drafter is not None:
             report["spec"] = spec_report(
                 k=self.spec_k, verify_ticks=self._spec_ticks,

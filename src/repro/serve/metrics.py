@@ -10,11 +10,12 @@ like LOA inflate this relative to the exact one-shot count).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import numpy as np
 
-__all__ = ["RequestMetrics", "aggregate", "paged_report", "spec_report"]
+__all__ = ["RequestMetrics", "aggregate", "paged_report", "slo_report",
+           "spec_report"]
 
 
 @dataclasses.dataclass
@@ -36,6 +37,14 @@ class RequestMetrics:
     #: prompt tokens whose prefill compute was skipped via a prefix-cache
     #: hit (paged engine, dense family; 0 elsewhere)
     cached_prompt_tokens: int = 0
+    #: absolute engine-clock TTFT deadline copied from the request (None =
+    #: no SLO on this request)
+    deadline_s: Optional[float] = None
+    #: times this request was preempted (slot taken away mid-generation
+    #: and later revived; 0 under the FIFO policy)
+    preempted: int = 0
+    #: prefill chunks this request's prompt was split into (1 = one-shot)
+    prefill_chunks: int = 1
 
     @property
     def ttft_s(self) -> float:
@@ -63,8 +72,17 @@ class RequestMetrics:
         lifetime = max(self.finished_s - self.arrival_s, 1e-9)
         return self.new_tokens / lifetime
 
+    @property
+    def deadline_met(self) -> Optional[bool]:
+        """True iff the first token beat the TTFT deadline (None when the
+        request carries no deadline). Both sides are absolute engine-clock
+        seconds, so queueing delay counts against the SLO."""
+        if self.deadline_s is None:
+            return None
+        return self.first_token_s <= self.deadline_s
+
     def to_json(self) -> dict:
-        return {
+        out = {
             "arrival_s": self.arrival_s,
             "admitted_s": self.admitted_s,
             "ttft_ms": 1e3 * self.ttft_s,
@@ -72,17 +90,24 @@ class RequestMetrics:
             "tok_per_s": self.tok_per_s,
             "moa_flops": self.moa_flops,
             "cached_prompt_tokens": self.cached_prompt_tokens,
+            "preempted": self.preempted,
+            "prefill_chunks": self.prefill_chunks,
         }
+        if self.deadline_s is not None:
+            out["deadline_s"] = self.deadline_s
+            out["deadline_met"] = bool(self.deadline_met)
+        return out
 
 
 def _dist(values: List[float]) -> Dict[str, float]:
-    """mean/p50/p95 summary of a latency list (empty → zeros)."""
+    """mean/p50/p95/p99 summary of a latency list (empty → zeros)."""
     if not values:
-        return {"mean": 0.0, "p50": 0.0, "p95": 0.0}
+        return {"mean": 0.0, "p50": 0.0, "p95": 0.0, "p99": 0.0}
     a = np.asarray(values, np.float64)
     return {"mean": float(a.mean()),
             "p50": float(np.percentile(a, 50)),
-            "p95": float(np.percentile(a, 95))}
+            "p95": float(np.percentile(a, 95)),
+            "p99": float(np.percentile(a, 99))}
 
 
 def aggregate(results, *, n_slots: int, decode_steps: int,
@@ -141,6 +166,42 @@ def paged_report(*, spec, n_slots: int, max_len: int, block_size: int,
         "peak_blocks_in_use": peak_blocks,
         "resident_kv_bytes": peak_blocks * spec.kv_block_bytes(block_size),
         "dense_equiv_kv_bytes": spec.dense_kv_bytes(n_slots, max_len),
+    }
+
+
+def slo_report(results, *, wall_s: float, preemptions: int, spills: int,
+               revivals: int, prefill_chunk_tokens: int = 0,
+               prefill_chunk_count: int = 0) -> dict:
+    """SLO sub-report for the engine's aggregate.
+
+    ``attainment`` is the fraction of deadline-carrying requests whose
+    first token beat their absolute TTFT deadline;
+    ``goodput_tok_per_s`` counts only tokens generated by requests that
+    *met* their deadline (tokens from missed-deadline requests are wasted
+    work under the SLO lens) — requests without a deadline always count.
+    ``preemptions`` is scheduler-level (slot taken away), ``spills`` /
+    ``revivals`` are the engine-level state round-trips backing them
+    (mid-prefill preemptions discard progress instead of spilling, so
+    ``spills <= preemptions``).
+    """
+    with_deadline = [r for r in results if r.metrics.deadline_s is not None]
+    met = [r for r in with_deadline if r.metrics.deadline_met]
+    no_deadline = [r for r in results if r.metrics.deadline_s is None]
+    good_tokens = sum(r.metrics.new_tokens for r in met + no_deadline)
+    return {
+        "deadline_requests": len(with_deadline),
+        "deadline_met": len(met),
+        "attainment": len(met) / max(len(with_deadline), 1),
+        "goodput_tok_per_s": good_tokens / max(wall_s, 1e-9),
+        "deadline_ttft_ms": _dist(
+            [1e3 * r.metrics.ttft_s for r in with_deadline]),
+        "preemptions": preemptions,
+        "spills": spills,
+        "revivals": revivals,
+        "preempted_requests": sum(
+            1 for r in results if r.metrics.preempted > 0),
+        "prefill_chunk_tokens": prefill_chunk_tokens,
+        "prefill_chunk_count": prefill_chunk_count,
     }
 
 

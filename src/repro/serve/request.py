@@ -31,6 +31,13 @@ class Request:
     start; the scheduler will not admit the request before the engine clock
     reaches it. ``max_new_tokens`` counts generated tokens including the
     one produced by the prefill logits.
+
+    ``priority`` and ``deadline_s`` only influence admission order under
+    the scheduler's ``"slo"`` policy (higher priority first, then earliest
+    deadline); FIFO ignores both. ``deadline_s`` is the **absolute** engine
+    time by which the first token should be emitted (TTFT SLO) — deadline
+    attainment in :mod:`repro.serve.metrics` compares it against
+    ``first_token_s`` on the same clock.
     """
 
     uid: int
@@ -39,6 +46,8 @@ class Request:
     arrival_s: float = 0.0
     sampler: Sampler = GREEDY
     eos_id: Optional[int] = None
+    priority: int = 0
+    deadline_s: Optional[float] = None
 
     def __post_init__(self):
         if len(self.prompt) < 1:
@@ -46,6 +55,10 @@ class Request:
         if self.max_new_tokens < 1:
             raise ValueError(f"request {self.uid}: max_new_tokens must be "
                              f">= 1, got {self.max_new_tokens}")
+        if self.deadline_s is not None and self.deadline_s <= self.arrival_s:
+            raise ValueError(
+                f"request {self.uid}: deadline_s {self.deadline_s} must be "
+                f"after arrival_s {self.arrival_s} (absolute engine time)")
 
     @property
     def prompt_len(self) -> int:

@@ -8,6 +8,13 @@ head-of-line backpressure (S6); pool states partition (P1), refcount >= 1
 with no double-free (P2), trie points at live blocks (P3), alloc never
 hands out referenced blocks (P4), admission plans fit availability (P5).
 
+The preemption lifecycle (invariant S7, docs/slo-scheduling.md) gets its
+own op streams: submit/admit/preempt/release under both policies with
+``check()`` after every op, SLO-ordered re-admission of preempted
+requests, and eviction storms interleaved with engine-style spills —
+a spilled request's pinned pages must survive any storm and stay
+revivable.
+
 Skips (like ``test_moa_properties.py``) when hypothesis is absent.
 """
 
@@ -107,6 +114,118 @@ class TestSchedulerProperties:
         for u in range(8):
             sched.submit(Request(uid=u, prompt=(1,), max_new_tokens=1))
         assert len(sched.admit_ready(0.0, limit=n)) == n
+
+
+# ---------------------------------------------------------------------------
+# preemption lifecycle (S7)
+# ---------------------------------------------------------------------------
+
+# op stream: submit carries (arrival, prompt, gen, priority, deadline
+# offset | None); preempt picks an active slot by index; admit/release as
+# before
+_PREEMPT_OPS = st.lists(
+    st.one_of(
+        st.tuples(st.just("submit"),
+                  st.floats(0.0, 10.0, allow_nan=False),
+                  st.integers(1, 16), st.integers(1, 16),
+                  st.integers(0, 2),
+                  st.one_of(st.none(),
+                            st.floats(0.01, 20.0, allow_nan=False))),
+        st.tuples(st.just("admit"), st.floats(0.0, 10.0, allow_nan=False)),
+        st.tuples(st.just("release")),
+        st.tuples(st.just("preempt"), st.integers(0, 3)),
+    ),
+    min_size=1, max_size=80)
+
+
+class TestPreemptionLifecycleProperties:
+    @given(ops=_PREEMPT_OPS, n_slots=st.integers(1, 4),
+           policy=st.sampled_from(["fifo", "slo"]))
+    @settings(max_examples=60, deadline=None)
+    def test_invariants_under_preemption(self, ops, n_slots, policy):
+        """S1-S4 + S7 hold through arbitrary submit/admit/preempt/release
+        interleavings under both policies: a preempted slot is immediately
+        free, the request is requeued exactly once (never active *and*
+        queued), every preemption is logged, and the scheduler still
+        drains to done."""
+        sched = SlotScheduler(n_slots, max_len=_MAX_LEN, policy=policy)
+        uid = 0
+        clock_high = 0.0
+        preempted_uids = []
+        for op in ops:
+            if op[0] == "submit":
+                _, arr, p, g, pri, dl = op
+                req = Request(uid=uid, prompt=(1,) * p,
+                              max_new_tokens=min(g, _MAX_LEN - p),
+                              arrival_s=arr, priority=pri,
+                              deadline_s=arr + dl if dl is not None
+                              else None)
+                if req.max_new_tokens < 1:
+                    continue
+                sched.submit(req)
+                uid += 1
+            elif op[0] == "admit":
+                clock_high = max(op[1], clock_high)
+                sched.admit_ready(clock_high)
+            elif op[0] == "release" and sched.active:
+                sched.release(min(sched.active))
+            elif op[0] == "preempt" and sched.active:
+                slot = sorted(sched.active)[op[1] % len(sched.active)]
+                victim = sched.active[slot]
+                req = sched.preempt(slot, clock_high)
+                # S7: same request handed back, slot free, re-queued
+                assert req.uid == victim.uid
+                assert slot not in sched.active
+                assert sched.has_ready or sched.has_pending
+                assert sched.preemption_log[-1][:2] == (req.uid, slot)
+                preempted_uids.append(req.uid)
+            sched.check()      # S1-S4 + S7 structural audit, every op
+        # drain: every request (preempted ones included) is re-admissible
+        n_preempted = len(sched.preemption_log)
+        assert n_preempted == len(preempted_uids)
+        while not sched.done:
+            for slot in list(sched.active):
+                sched.release(slot)
+            if sched.has_pending:
+                assert sched.admit_ready(clock_high + 1e9), \
+                    "stuck: requests queued, slots free, none admitted"
+            sched.check()
+
+    @given(subs=st.lists(
+        st.tuples(st.integers(0, 3),
+                  st.one_of(st.none(),
+                            st.floats(0.1, 50.0, allow_nan=False))),
+        min_size=1, max_size=12))
+    @settings(max_examples=60, deadline=None)
+    def test_slo_policy_orders_by_priority_then_deadline(self, subs):
+        """With everything arrived and one slot, repeated admit/preempt
+        cycles pop requests in exact (priority desc, deadline asc,
+        arrival, uid) order — including requests re-queued by preemption,
+        which keep their rank rather than jumping the line."""
+        sched = SlotScheduler(1, max_len=_MAX_LEN, policy="slo")
+        reqs = []
+        for u, (pri, dl) in enumerate(subs):
+            req = Request(uid=u, prompt=(1, 2), max_new_tokens=2,
+                          arrival_s=0.0, priority=pri,
+                          deadline_s=dl)
+            sched.submit(req)
+            reqs.append(req)
+        want = sorted(reqs, key=lambda r: (
+            -r.priority,
+            r.deadline_s if r.deadline_s is not None else float("inf"),
+            r.arrival_s, r.uid))
+        # first pop, then preempt it straight back once: the re-queued
+        # entry must re-emerge before anything ranked behind it
+        [(slot, first)] = sched.admit_ready(1.0)
+        assert first.uid == want[0].uid
+        sched.preempt(slot, 1.0)
+        sched.check()
+        got = []
+        while sched.has_ready or sched.has_pending:
+            [(slot, req)] = sched.admit_ready(1.0)
+            got.append(req.uid)
+            sched.release(slot)
+        assert got == [r.uid for r in want]
 
 
 # ---------------------------------------------------------------------------
@@ -257,3 +376,58 @@ class TestBlockPoolProperties:
                     for b in got:
                         pool.free(b)
             pool.check()                   # P1-P3 incl. prefix closure
+
+    @given(ops=st.lists(
+        st.one_of(
+            st.tuples(st.just("admit"),
+                      st.lists(st.integers(0, 1), min_size=1, max_size=12),
+                      st.integers(1, 6)),
+            st.tuples(st.just("release"), st.integers(0, 30)),
+            st.tuples(st.just("spill"), st.integers(0, 30)),
+            st.tuples(st.just("revive"), st.integers(0, 30)),
+            st.tuples(st.just("storm"), st.integers(1, 8)),
+        ),
+        min_size=1, max_size=60), n_blocks=st.integers(2, 10))
+    @settings(max_examples=60, deadline=None)
+    def test_spilled_chains_survive_eviction_storms(self, ops, n_blocks):
+        """Engine-style preemption against the pool: a *spilled* admission
+        keeps every block reference it held (the engine snapshots only the
+        slot-indexed state and leaves the pages pinned), so interleaved
+        eviction storms can never reclaim its chain and revival needs no
+        new blocks — the chain comes back exactly as spilled."""
+        pool = BlockPool(n_blocks, block_size=4)
+        live = []                          # in-slot admissions' held blocks
+        spilled = []                       # preempted admissions, pinned
+        for op in ops:
+            if op[0] == "admit":
+                held = _admit(pool, tuple(op[1]), op[2])
+                if held is not None:
+                    live.append(held)
+            elif op[0] == "release" and live:
+                for b in live.pop(op[1] % len(live)):
+                    pool.free(b)
+            elif op[0] == "spill" and live:
+                # preemption: the slot is lost, the references are not
+                spilled.append(live.pop(op[1] % len(live)))
+            elif op[0] == "revive" and spilled:
+                # revival consumes zero new blocks by construction
+                live.append(spilled.pop(op[1] % len(spilled)))
+            elif op[0] == "storm":
+                n = min(op[1], pool.available)
+                if n:
+                    got = pool.alloc(n)
+                    pinned = {b for bl in live + spilled for b in bl}
+                    assert not (set(got) & pinned), \
+                        "storm reclaimed a spilled request's pinned page"
+                    for b in got:
+                        pool.free(b)
+            pool.check()
+            # every spilled chain is still fully referenced
+            for bl in spilled:
+                for b in bl:
+                    assert pool.refcount(b) >= 1
+        # wind down: revive + free everything; the pool must audit clean
+        for bl in spilled + live:
+            for b in bl:
+                pool.free(b)
+        pool.check()

@@ -1,0 +1,91 @@
+"""Every registered benchmark schema tag has a validating fixture.
+
+``scripts/check_bench_schema.py`` is the gate CI runs over benchmark
+output, but the registry only proves itself against records the
+benchmarks happen to emit.  This suite pins the other direction: for
+each tag in ``SCHEMAS`` there is a hand-authored minimal record under
+``tests/schema_fixtures/`` that the validator accepts, and mutating a
+fixture (dropping a key, breaking a cross-field check) makes it fail.
+Mirrors ``test_every_rule_has_a_fixture`` in ``tests/test_analysis.py``,
+which plays the same role for the lint registry.
+"""
+
+import copy
+import importlib.util
+import json
+import pathlib
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+FIXTURE_DIR = REPO / "tests" / "schema_fixtures"
+
+
+def _load_schema_registry():
+    # scripts/ is not a package, so import the checker by file path
+    # (same pattern as scripts/audit_serve_path.py).
+    path = REPO / "scripts" / "check_bench_schema.py"
+    spec = importlib.util.spec_from_file_location("check_bench_schema", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.fixture(scope="module")
+def registry():
+    return _load_schema_registry()
+
+
+def _fixture_record(tag):
+    with open(FIXTURE_DIR / f"{tag}.json") as f:
+        return json.load(f)
+
+
+class TestSchemaFixtures:
+    def test_every_schema_has_a_fixture(self, registry):
+        have = {p.stem for p in FIXTURE_DIR.glob("*.json")}
+        assert have == set(registry.SCHEMAS), (
+            "fixture files must match registered schema tags exactly; "
+            f"missing={set(registry.SCHEMAS) - have} extra={have - set(registry.SCHEMAS)}")
+
+    def test_every_fixture_validates(self, registry):
+        for tag in sorted(registry.SCHEMAS):
+            errors = registry.validate(_fixture_record(tag))
+            assert not errors, f"{tag}: {errors}"
+
+    def test_fixture_tag_matches_filename(self, registry):
+        for tag in sorted(registry.SCHEMAS):
+            assert _fixture_record(tag)["schema"] == tag
+
+    def test_dropped_key_fails_validation(self, registry):
+        # Fixtures must be minimal enough that every top-level key is
+        # load-bearing — otherwise they pin nothing.
+        for tag in sorted(registry.SCHEMAS):
+            record = _fixture_record(tag)
+            for key in [k for k in record if k != "schema"]:
+                broken = copy.deepcopy(record)
+                del broken[key]
+                assert registry.validate(broken), (
+                    f"{tag}: deleting top-level {key!r} still validates")
+
+    def test_unknown_schema_tag_rejected(self, registry):
+        record = _fixture_record("serving-v1")
+        record["schema"] = "serving-v999"
+        assert registry.validate(record)
+
+    def test_cross_field_checks_fire(self, registry):
+        # serving-v5: spills may not exceed preemptions.
+        v5 = _fixture_record("serving-v5")
+        v5["slo"]["aggregate"]["slo"]["spills"] = (
+            v5["slo"]["aggregate"]["slo"]["preemptions"] + 1)
+        assert any("spills" in e for e in registry.validate(v5))
+
+        # analysis-v1: summary.violations must equal len(violations).
+        an = _fixture_record("analysis-v1")
+        an["summary"]["violations"] += 1
+        assert registry.validate(an)
+
+        # serving-v4: mesh shape product must equal n_devices.
+        v4 = _fixture_record("serving-v4")
+        v4["config"]["mesh"]["n_devices"] += 1
+        assert registry.validate(v4)

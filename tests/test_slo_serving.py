@@ -1,0 +1,443 @@
+"""SLO-aware serving: chunked prefill parity, preemption, virtual clock.
+
+Three pillars (docs/slo-scheduling.md):
+
+* **Chunked prefill is bit-exact**: splitting a prompt into
+  ``prefill_chunk_tokens``-sized chunks interleaved with decode ticks must
+  produce greedy tokens identical to the one-shot prefill, across all four
+  decode families, dense-slot and paged KV layouts, and (subprocess, 8
+  host devices) a ``(data=2, model=4)`` mesh.
+* **Preemption round-trips state**: spilling a running request (dense:
+  slot-row snapshot; paged: pinned pages + cursor/recurrent state) and
+  reviving it later must not change a single emitted token; mid-prefill
+  preemption discards progress and restarts cleanly.
+* **The StepClock makes it a simulator**: every latency/deadline metric is
+  an exact, replayable number — two identical runs agree bit-for-bit with
+  no wall-clock sleeps anywhere.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config, smoke_config
+from repro.models.api import build_model
+from repro.serve import (Request, ServeEngine, StepClock, bursty_workload,
+                         poisson_workload, shared_prefix_workload)
+
+ALL_FAMILIES = ["llama3-8b", "moonshot-v1-16b-a3b", "mamba2-370m",
+                "zamba2-1.2b"]
+PAGEABLE = ["llama3-8b", "moonshot-v1-16b-a3b", "zamba2-1.2b"]
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _release_executables():
+    # This module compiles dozens of engine callables (4 families x
+    # dense/paged x chunked variants) into the module-level compile
+    # cache. Drop them (and jax's own caches) on the way out so the
+    # process's live-executable footprint returns to what later modules
+    # (test_system's big training-step compile) expect — accumulating
+    # them has crashed XLA's CPU backend late in the full suite.
+    yield
+    from repro.serve.engine import _clear_compile_cache
+    _clear_compile_cache()
+    jax.clear_caches()
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def _built(arch, rng):
+    cfg = smoke_config(get_config(arch))
+    model = build_model(cfg)
+    return cfg, model, model.init(rng)
+
+
+def _assert_token_parity(ref, got, ctx):
+    for a, b in zip(ref, got):
+        assert a.uid == b.uid
+        np.testing.assert_array_equal(a.tokens, b.tokens,
+                                      err_msg=f"{ctx} uid={a.uid}")
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill: bit-identical to one-shot
+# ---------------------------------------------------------------------------
+
+
+class TestChunkedPrefillParity:
+    @pytest.mark.parametrize("arch", ALL_FAMILIES)
+    def test_dense_slots(self, rng, arch):
+        """Chunked greedy tokens == one-shot greedy tokens on the dense
+        per-slot cache (attention: suffix-prefill cursor; SSM/hybrid:
+        carried recurrent state at SSD-chunk alignment)."""
+        cfg, model, params = _built(arch, rng)
+        chunk = 8  # multiple of every smoke family's alignment (ssd_chunk=8)
+        assert chunk % model.prefill_chunk_alignment == 0
+        reqs = poisson_workload(n_requests=6, vocab=cfg.vocab, seed=3,
+                                prompt_len_range=(10, 40),
+                                gen_len_range=(4, 8))
+        base = ServeEngine(model, params, n_slots=2, max_len=64,
+                           clock=lambda: 0.0)
+        ref, _ = base.run(reqs)
+        eng = ServeEngine(model, params, n_slots=2, max_len=64,
+                          clock=lambda: 0.0, prefill_chunk_tokens=chunk)
+        got, _ = eng.run(reqs)
+        _assert_token_parity(ref, got, arch)
+        # the chunked path actually engaged (prompts above 8 tokens split)
+        assert max(r.metrics.prefill_chunks for r in got) > 1
+
+    @pytest.mark.parametrize("arch", PAGEABLE)
+    def test_paged(self, rng, arch):
+        """Same parity on the paged pool: per-chunk page scatters (with
+        the all-trash table row masking partial progress) reconstruct the
+        one-shot prefill exactly."""
+        cfg, model, params = _built(arch, rng)
+        reqs = poisson_workload(n_requests=6, vocab=cfg.vocab, seed=3,
+                                prompt_len_range=(10, 60),
+                                gen_len_range=(4, 8))
+        base = ServeEngine(model, params, n_slots=2, max_len=96, paged=True,
+                           block_size=8, clock=lambda: 0.0)
+        ref, _ = base.run(reqs)
+        eng = ServeEngine(model, params, n_slots=2, max_len=96, paged=True,
+                          block_size=8, clock=lambda: 0.0,
+                          prefill_chunk_tokens=16)
+        got, _ = eng.run(reqs)
+        _assert_token_parity(ref, got, arch)
+        assert max(r.metrics.prefill_chunks for r in got) > 1
+
+    def test_paged_shared_prefix_keeps_hits(self, rng):
+        """Dense paged chunked prefill preserves the prefix-cache head
+        start: matched blocks still skip compute, hit counters and cached
+        token counts match the one-shot path, tokens stay identical."""
+        cfg, model, params = _built("llama3-8b", rng)
+        reqs = shared_prefix_workload(n_requests=8, vocab=cfg.vocab,
+                                      n_prefixes=2, prefix_len=24,
+                                      suffix_len_range=(0, 8), seed=5)
+        base = ServeEngine(model, params, n_slots=2, max_len=96, paged=True,
+                           block_size=8, clock=lambda: 0.0)
+        ref, ref_rep = base.run(reqs)
+        eng = ServeEngine(model, params, n_slots=2, max_len=96, paged=True,
+                          block_size=8, clock=lambda: 0.0,
+                          prefill_chunk_tokens=16)
+        got, rep = eng.run(reqs)
+        _assert_token_parity(ref, got, "shared-prefix")
+        assert rep["paged"]["prefix_hits"] == ref_rep["paged"]["prefix_hits"]
+        assert [r.metrics.cached_prompt_tokens for r in got] == \
+            [r.metrics.cached_prompt_tokens for r in ref]
+
+    def test_short_prompts_skip_chunking(self, rng):
+        """Prompts at or below the chunk budget take the one-shot path —
+        prefill_chunks stays 1 and nothing regresses."""
+        cfg, model, params = _built("llama3-8b", rng)
+        reqs = poisson_workload(n_requests=3, vocab=cfg.vocab, seed=1,
+                                prompt_len_range=(4, 8),
+                                gen_len_range=(3, 5))
+        eng = ServeEngine(model, params, n_slots=2, max_len=32,
+                          clock=lambda: 0.0, prefill_chunk_tokens=8)
+        got, _ = eng.run(reqs)
+        assert all(r.metrics.prefill_chunks == 1 for r in got)
+
+    def test_constructor_validation(self, rng):
+        cfg, model, params = _built("zamba2-1.2b", rng)
+        with pytest.raises(ValueError, match="alignment"):
+            ServeEngine(model, params, n_slots=1, max_len=32,
+                        prefill_chunk_tokens=cfg.ssd_chunk + 1)
+        with pytest.raises(ValueError, match="block_size"):
+            ServeEngine(model, params, n_slots=1, max_len=32, paged=True,
+                        block_size=16, prefill_chunk_tokens=cfg.ssd_chunk)
+        with pytest.raises(ValueError, match=">= 1"):
+            ServeEngine(model, params, n_slots=1, max_len=32,
+                        prefill_chunk_tokens=0)
+        with pytest.raises(ValueError, match="unknown scheduling"):
+            ServeEngine(model, params, n_slots=1, max_len=32,
+                        scheduling="edf")
+
+
+# ---------------------------------------------------------------------------
+# preemption: spill/revive round-trips, SLO policy beats FIFO
+# ---------------------------------------------------------------------------
+
+
+class TestPreemption:
+    def test_slo_beats_fifo_on_burst(self, rng):
+        """The headline experiment in miniature: a deadline burst landing
+        mid-generation. SLO scheduling preempts the long requests, beats
+        FIFO on attainment and p99 deadline TTFT, and — greedy decode —
+        emits exactly the same tokens per request either way."""
+        cfg, model, params = _built("llama3-8b", rng)
+        reqs = bursty_workload(vocab=cfg.vocab, n_long=2, n_burst=4,
+                               long_prompt_len=16, long_gen_len=40,
+                               burst_prompt_len=8, burst_gen_len=4,
+                               burst_at_s=0.004, burst_deadline_s=0.02,
+                               seed=0)
+        out = {}
+        for pol in ("fifo", "slo"):
+            eng = ServeEngine(model, params, n_slots=2, max_len=64,
+                              clock=StepClock(dt=1e-3), scheduling=pol)
+            out[pol] = eng.run(list(reqs))
+            assert out[pol][1]["scheduling"] == pol
+            assert "slo" in out[pol][1]  # deadline requests force the block
+        _assert_token_parity(out["fifo"][0], out["slo"][0], "policy")
+        f, s = out["fifo"][1]["slo"], out["slo"][1]["slo"]
+        assert s["attainment"] > f["attainment"]
+        assert s["deadline_ttft_ms"]["p99"] < f["deadline_ttft_ms"]["p99"]
+        assert s["preemptions"] > 0
+        assert s["revivals"] == s["spills"] > 0
+        assert s["preempted_requests"] > 0
+        assert f["preemptions"] == 0  # FIFO never preempts
+
+    @pytest.mark.parametrize("arch,paged",
+                             [("llama3-8b", True),
+                              ("moonshot-v1-16b-a3b", True),
+                              ("zamba2-1.2b", True),
+                              ("mamba2-370m", False),
+                              ("zamba2-1.2b", False)])
+    def test_preempt_revive_greedy_parity(self, rng, arch, paged):
+        """Spill + revive is invisible to the emitted tokens in every
+        family x layout combination that can be preempted (paged: pinned
+        pages + cursor/SSM snapshot; dense slots: full row round-trip)."""
+        cfg, model, params = _built(arch, rng)
+        reqs = bursty_workload(vocab=cfg.vocab, n_long=2, n_burst=4,
+                               long_prompt_len=16, long_gen_len=40,
+                               burst_prompt_len=8, burst_gen_len=4,
+                               burst_at_s=0.004, burst_deadline_s=0.02,
+                               seed=0)
+        kw = dict(paged=True, block_size=8) if paged else {}
+        out = {}
+        for pol in ("fifo", "slo"):
+            eng = ServeEngine(model, params, n_slots=2, max_len=64,
+                              clock=StepClock(dt=1e-3), scheduling=pol,
+                              **kw)
+            out[pol] = eng.run(list(reqs))
+        _assert_token_parity(out["fifo"][0], out["slo"][0],
+                             f"{arch} paged={paged}")
+        s = out["slo"][1]["slo"]
+        assert s["preemptions"] > 0 and s["revivals"] == s["spills"] > 0
+
+    def test_inflight_preempt_revive_direct(self, rng):
+        """Driving the lifecycle methods directly: preempt a mid-decode
+        request, then let the run loop revive it — the result is
+        bit-identical to an uninterrupted run and records the preemption."""
+        cfg, model, params = _built("llama3-8b", rng)
+        toks = np.asarray(jax.random.randint(rng, (1, 8), 0, cfg.vocab),
+                          np.int32)
+        req = Request(uid=7, prompt=tuple(int(t) for t in toks[0]),
+                      max_new_tokens=8)
+        base = ServeEngine(model, params, n_slots=1, max_len=32,
+                           clock=lambda: 0.0)
+        ref, _ = base.run([req])
+        eng = ServeEngine(model, params, n_slots=1, max_len=32,
+                          clock=lambda: 0.0)
+        eng.scheduler.submit(req)
+        [(slot, r)] = eng.scheduler.admit_ready(0.0)
+        eng._admit(slot, r, 0.0, [])
+        for _ in range(3):
+            eng._decode_tick([])
+        assert slot in eng._inflight
+        eng.preempt(slot)
+        assert req.uid in eng._spilled and not eng._inflight
+        eng.scheduler.check()
+        with pytest.raises(KeyError):
+            eng.preempt(slot)  # nothing left in the slot
+        results, _ = eng.run([])
+        np.testing.assert_array_equal(results[0].tokens, ref[0].tokens)
+        assert results[0].metrics.preempted == 1
+
+    def test_midprefill_preempt_restarts_clean(self, rng):
+        """A request preempted mid-chunked-prefill discards progress, frees
+        every page it held, and restarts from scratch with unchanged greedy
+        output."""
+        cfg, model, params = _built("llama3-8b", rng)
+        toks = np.asarray(jax.random.randint(rng, (1, 24), 0, cfg.vocab),
+                          np.int32)
+        req = Request(uid=3, prompt=tuple(int(t) for t in toks[0]),
+                      max_new_tokens=6)
+        kw = dict(n_slots=1, max_len=64, paged=True, block_size=8,
+                  clock=lambda: 0.0, prefill_chunk_tokens=8)
+        base = ServeEngine(model, params, **kw)
+        ref, _ = base.run([req])
+        eng = ServeEngine(model, params, **kw)
+        eng.scheduler.submit(req)
+        [(slot, r)] = eng.scheduler.admit_ready(0.0)
+        eng._admit(slot, r, 0.0, [])
+        assert slot in eng._prefilling
+        eng._prefill_tick([])  # one of three chunks done
+        assert slot in eng._prefilling and eng._prefilling[slot].done == 8
+        eng.preempt(slot)
+        assert not eng._prefilling and not eng._spilled  # progress dropped
+        assert eng._pool.in_use == 0  # every reserved page returned
+        eng._pool.check()
+        eng.scheduler.check()
+        results, _ = eng.run([])
+        np.testing.assert_array_equal(results[0].tokens, ref[0].tokens)
+
+
+# ---------------------------------------------------------------------------
+# StepClock: the serve stack as a deterministic simulator
+# ---------------------------------------------------------------------------
+
+
+class TestStepClockSimulator:
+    def test_step_clock_unit(self):
+        c = StepClock(dt=2.0, start=1.0)
+        assert c() == 1.0 and c() == 3.0
+        assert c.reads == 2
+        c.advance(10.0)
+        assert c() == 15.0
+        with pytest.raises(ValueError):
+            c.advance(-1.0)
+        with pytest.raises(ValueError):
+            StepClock(dt=-1e-3)
+
+    def test_staggered_arrivals_replay_exactly(self, rng):
+        """The staggered-arrival scenario on the virtual clock: two
+        identical runs produce bit-identical metrics (every timestamp,
+        every latency), with the ordering guarantees intact and zero
+        wall-clock sleeps involved."""
+        cfg, model, params = _built("llama3-8b", rng)
+        toks = np.asarray(jax.random.randint(rng, (4, 8), 0, cfg.vocab),
+                          np.int32)
+
+        def run_once():
+            reqs = [Request(uid=i, prompt=tuple(int(t) for t in toks[i]),
+                            max_new_tokens=g, arrival_s=a)
+                    for i, (g, a) in enumerate(
+                        zip([3, 5, 2, 4], [0.0, 0.0, 5.0, 5.5]))]
+            clock = StepClock(dt=1e-3)
+            eng = ServeEngine(model, params, n_slots=2, max_len=32,
+                              clock=clock)
+            results, report = eng.run(reqs)
+            return results, report, clock.reads
+
+        (r1, rep1, reads1), (r2, rep2, reads2) = run_once(), run_once()
+        assert reads1 == reads2  # same number of clock reads: same schedule
+        assert [r.metrics.to_json() for r in r1] == \
+            [r.metrics.to_json() for r in r2]
+        assert rep1["ttft_ms"] == rep2["ttft_ms"]
+        assert rep1["wall_s"] == rep2["wall_s"]
+        for r in r1:
+            m = r.metrics
+            assert m.arrival_s <= m.admitted_s <= m.first_token_s \
+                <= m.finished_s
+        # fast-forward lands admissions exactly at (not before) arrival
+        assert r1[2].metrics.admitted_s >= 5.0
+        assert r1[3].metrics.admitted_s >= 5.5
+
+    def test_slo_report_is_exactly_recomputable(self, rng):
+        """Every slo_report number equals a recomputation from per-request
+        metrics — attainment, goodput, deadline flags are exact values on
+        the virtual clock, not approximations."""
+        cfg, model, params = _built("llama3-8b", rng)
+        reqs = bursty_workload(vocab=cfg.vocab, n_long=2, n_burst=4,
+                               long_prompt_len=16, long_gen_len=40,
+                               burst_prompt_len=8, burst_gen_len=4,
+                               burst_at_s=0.004, burst_deadline_s=0.02,
+                               seed=0)
+        eng = ServeEngine(model, params, n_slots=2, max_len=64,
+                          clock=StepClock(dt=1e-3), scheduling="slo",
+                          prefill_chunk_tokens=8)
+        results, rep = eng.run(reqs)
+        slo = rep["slo"]
+        with_dl = [r for r in results if r.metrics.deadline_s is not None]
+        met = [r for r in with_dl if r.metrics.deadline_met]
+        for r in with_dl:  # deadline_met is the exact first-token test
+            assert r.metrics.deadline_met == \
+                (r.metrics.first_token_s <= r.metrics.deadline_s)
+        assert slo["deadline_requests"] == len(with_dl)
+        assert slo["deadline_met"] == len(met)
+        assert slo["attainment"] == len(met) / len(with_dl)
+        good = sum(r.metrics.new_tokens for r in met) + \
+            sum(r.metrics.new_tokens for r in results
+                if r.metrics.deadline_s is None)
+        assert slo["goodput_tok_per_s"] == good / max(rep["wall_s"], 1e-9)
+        assert slo["prefill_chunk_tokens"] == 8
+        assert slo["prefill_chunk_count"] >= 2  # the 16-token prompts split
+
+
+# ---------------------------------------------------------------------------
+# 8-device subprocess: chunked parity on a (data=2, model=4) mesh
+# ---------------------------------------------------------------------------
+
+_SUBPROCESS_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, sys
+sys.path.insert(0, "src")
+import jax
+from repro.configs.registry import ARCHS, smoke_config
+from repro.launch.mesh import make_mesh
+from repro.models.api import build_model
+from repro.serve import ServeEngine, poisson_workload
+
+arch = sys.argv[1]
+cfg = smoke_config(ARCHS[arch])
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+mesh = make_mesh((2, 4))
+out = {"parity": {}, "chunked": {}}
+
+
+def workload():
+    return poisson_workload(n_requests=4, vocab=cfg.vocab, rate_rps=100.0,
+                            prompt_len_range=(10, 28), gen_len_range=(2, 6),
+                            seed=0)
+
+
+def tokens(results):
+    return [[int(t) for t in r.tokens] for r in results]
+
+
+combos = [(False, 8)]
+if model.cache_spec().pageable:
+    combos.append((True, 16))
+for paged, chunk in combos:
+    kw = dict(n_slots=2, max_len=64, mesh=mesh)
+    if paged:
+        kw.update(paged=True, block_size=8)
+    runs, engaged = [], 0
+    for c in (None, chunk):
+        eng = ServeEngine(model, params, **kw, prefill_chunk_tokens=c)
+        results, _ = eng.run(workload(), warmup=True)
+        runs.append(tokens(results))
+        engaged = max(engaged,
+                      max(r.metrics.prefill_chunks for r in results))
+    key = "paged=%s" % paged
+    out["parity"][key] = runs[0] == runs[1]
+    out["chunked"][key] = engaged
+print(json.dumps(out))
+"""
+
+
+def _run_subprocess(arch):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", _SUBPROCESS_SCRIPT, arch],
+        capture_output=True, text=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env, timeout=1200)
+    assert out.returncode == 0, out.stderr[-2000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ALL_FAMILIES)
+def test_sharded_chunked_prefill_parity(arch):
+    """Chunked prefill stays bit-identical to one-shot on an 8-device
+    (data=2, model=4) host mesh, dense-slot and paged layouts alike —
+    the per-chunk scatters respect the same sharding the one-shot write
+    does (device count locks at first backend init, hence subprocess)."""
+    result = _run_subprocess(arch)
+    assert result["parity"], "no parity combos ran"
+    for combo, ok in result["parity"].items():
+        assert ok, f"{arch} {combo}: chunked tokens diverged under mesh"
+    for combo, chunks in result["chunked"].items():
+        assert chunks > 1, f"{arch} {combo}: chunked path never engaged"
