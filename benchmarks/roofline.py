@@ -1,6 +1,14 @@
 """Roofline table reader: aggregates artifacts/dryrun/*.json into the
 EXPERIMENTS.md §Roofline table (per arch × shape × mesh: three terms in
-seconds, dominant bottleneck, useful-compute ratio, one-line lever)."""
+seconds, dominant bottleneck, useful-compute ratio, one-line lever).
+
+Also prices the **paged-decode** memory term analytically
+(:func:`paged_decode_cell`): at each context depth, the bytes a decode
+step *must* stream (live KV at depth ``pos+1`` — the bandwidth ceiling)
+vs. what the fused block-table kernel touches (live pages, block-size
+granularity) vs. what the gathered jnp path streams (the full
+high-water-bucketed padded view) — the gap the fused kernel closes
+(``docs/kernels.md``)."""
 
 from __future__ import annotations
 
@@ -10,7 +18,8 @@ import os
 import time
 from typing import Dict, List, Optional
 
-__all__ = ["run", "load_cells", "format_table"]
+__all__ = ["run", "load_cells", "format_table", "paged_decode_cell",
+           "format_paged_decode"]
 
 _LEVERS = {
     ("compute_s", "train"): "raise arithmetic intensity: causal chunk-skip "
@@ -29,7 +38,82 @@ _LEVERS = {
                                  "blocks per all-reduce",
     ("collective_s", "decode"): "replicate small weights; shrink TP degree "
                                 "for decode",
+    ("memory_s", "paged_decode"): "fused block-table kernel streams live "
+                                  "pages only (kernels/paged_attention.py)",
 }
+
+
+def paged_decode_cell(*, arch: str = "llama3-8b", n_slots: int = 64,
+                      max_len: int = 4096, block_size: int = 16,
+                      depths=(128, 512, 1024, 2048, 4095)) -> Dict:
+    """Analytic paged-decode KV-stream cell at a sweep of context depths.
+
+    For one batched decode step with every slot at depth ``pos``:
+
+    * ``ceiling_bytes`` — live KV at depth ``pos + 1``, the stream no
+      attention implementation can beat (the bandwidth ceiling);
+    * ``fused_bytes`` — what the fused block-table kernel touches: live
+      pages only, rounded up to block granularity;
+    * ``gathered_bytes`` — what the jnp gather path materializes: the
+      high-water block count rounded to the engine's power-of-two bucket,
+      for **all** slots.
+
+    Each is also expressed in seconds against the chip's HBM bandwidth
+    and as a fraction of the ceiling, so the cell reads directly as "how
+    far off the roofline is each path".
+    """
+    from repro.configs.registry import get_config
+    from repro.core.cost_model import TPU_V5E
+    cfg = get_config(arch)
+    kv_itemsize = 1 if cfg.kv_cache_dtype == "int8" else 2
+    kv_bytes_tok = cfg.n_layers * cfg.n_kv_heads * cfg.head_dim \
+        * 2 * kv_itemsize
+    max_blocks = max_len // block_size
+    bw = TPU_V5E.hbm_bandwidth
+    rows = []
+    for pos in depths:
+        pos = min(pos, max_len - 1)
+        live_blocks = pos // block_size + 1
+        hw = 1
+        while hw < live_blocks:
+            hw <<= 1
+        hw = min(hw, max_blocks)
+        ceiling = n_slots * (pos + 1) * kv_bytes_tok
+        fused = n_slots * live_blocks * block_size * kv_bytes_tok
+        gathered = n_slots * hw * block_size * kv_bytes_tok
+        rows.append({
+            "pos": pos,
+            "ceiling_bytes": ceiling,
+            "fused_bytes": fused,
+            "gathered_bytes": gathered,
+            "ceiling_s": ceiling / bw,
+            "fused_s": fused / bw,
+            "gathered_s": gathered / bw,
+            "fused_x_ceiling": fused / ceiling,
+            "gathered_x_ceiling": gathered / ceiling,
+        })
+    return {
+        "arch": cfg.name, "phase": "paged_decode", "n_slots": n_slots,
+        "max_len": max_len, "block_size": block_size,
+        "kv_bytes_per_token": kv_bytes_tok,
+        "hbm_bandwidth": bw,
+        "lever": _LEVERS[("memory_s", "paged_decode")],
+        "rows": rows,
+    }
+
+
+def format_paged_decode(cell: Dict) -> str:
+    lines = [
+        f"| depth | ceiling_s | fused_s | gathered_s | fused/ceil | "
+        f"gathered/ceil |",
+        "|---|---|---|---|---|---|",
+    ]
+    for r in cell["rows"]:
+        lines.append(
+            f"| {r['pos']} | {r['ceiling_s']:.4g} | {r['fused_s']:.4g} | "
+            f"{r['gathered_s']:.4g} | {r['fused_x_ceiling']:.2f} | "
+            f"{r['gathered_x_ceiling']:.2f} |")
+    return "\n".join(lines)
 
 
 def load_cells(art_dir: str = "artifacts/dryrun",
@@ -95,6 +179,12 @@ def run(verbose: bool = True):
         else:
             print("# no dry-run artifacts found — run "
                   "`python -m repro.launch.dryrun --all --mesh both` first")
+        cell = paged_decode_cell()
+        print(f"# Paged decode KV stream ({cell['arch']}, "
+              f"{cell['n_slots']} slots, block {cell['block_size']}, "
+              f"seconds/step vs the bandwidth ceiling; lever: "
+              f"{cell['lever']})")
+        print(format_paged_decode(cell))
     elapsed_us = (time.perf_counter() - t0) * 1e6
     return {
         "us_per_call": elapsed_us,

@@ -34,6 +34,13 @@ Record schemas (all validated by ``scripts/check_bench_schema.py``):
   cohort, attainment and goodput-under-SLO side by side, plus a greedy
   token-parity bit (preemption must not change any request's tokens).
 
+* ``serving-v6`` (``--backends``): the same workload through two paged
+  engines that differ only in the attention backend — ``jnp`` (gathered
+  dense KV view, reference) vs ``pallas`` (fused block-table flash
+  decode/verify, ``docs/kernels.md``) — tok/s and TTFT side by side, the
+  per-step gathered-vs-fused attention HBM bytes (the traffic the fused
+  kernel removes), and a ``greedy_tokens_match`` bit.
+
   PYTHONPATH=src python -m benchmarks.serving --smoke --json out.json
   PYTHONPATH=src python -m benchmarks.serving --smoke --paged \
       --shared-prefix --block-size 8 --json paged.json
@@ -43,6 +50,8 @@ Record schemas (all validated by ``scripts/check_bench_schema.py``):
       --json sharded.json
   PYTHONPATH=src python -m benchmarks.serving --smoke --slo \
       --json slo.json
+  PYTHONPATH=src python -m benchmarks.serving --smoke --backends \
+      --block-size 8 --json backends.json
 """
 
 from __future__ import annotations
@@ -138,7 +147,8 @@ def run_paged(*, arch: str = "llama3-8b", smoke: bool = True,
               prompt_len_range=(4, 24), gen_len_range=(2, 12),
               temperature: float = 0.0, seed: int = 0, warmup: bool = True,
               shared_prefix: bool = True, prefix_len: int = 16,
-              n_prefixes: int = 2) -> dict:
+              n_prefixes: int = 2,
+              attn_backend: str = None) -> dict:
     """Dense-vs-paged comparison on one workload; ``serving-v2`` record.
 
     Both engines serve the identical request stream (same seed) so the
@@ -160,7 +170,8 @@ def run_paged(*, arch: str = "llama3-8b", smoke: bool = True,
         engine = ServeEngine(
             model, params, n_slots=slots, max_len=max_len,
             paged=(mode == "paged"), block_size=block_size,
-            n_blocks=n_blocks or None, rng=rng)
+            n_blocks=n_blocks or None, rng=rng,
+            attn_backend=attn_backend if mode == "paged" else None)
         if warmup:
             # paged: twice — the first replay warms the prefix trie, the
             # second compiles the suffix-prefill shapes that only occur
@@ -374,6 +385,99 @@ def run_sharded(*, arch: str = "llama3-8b", smoke: bool = True,
     }
 
 
+def run_backends(*, arch: str = "llama3-8b", smoke: bool = True,
+                 requests: int = 8, rate_rps: float = 50.0, slots: int = 4,
+                 max_len: int = 96, block_size: int = 16, n_blocks: int = 0,
+                 prompt_len_range=(4, 24), gen_len_range=(2, 12),
+                 temperature: float = 0.0, seed: int = 0,
+                 warmup: bool = True, shared_prefix: bool = False,
+                 prefix_len: int = 16, n_prefixes: int = 2) -> dict:
+    """Gather-vs-fused paged attention on one workload; ``serving-v6``.
+
+    Both engines serve the identical request stream through the paged
+    pool; they differ only in ``attn_backend`` — ``jnp`` streams the
+    gathered (padded, high-water-bucketed) KV view, ``pallas`` walks the
+    block table inside the fused flash kernel and touches only live
+    pages. ``comparison.kv_bytes_per_step`` records both byte counts at
+    every decode step (same cursors, so the fused column is <= the
+    gathered one by construction — the bandwidth headroom the kernel
+    converts into tok/s), and ``greedy_tokens_match`` asserts the two
+    backends emit bit-identical greedy tokens. On CPU the pallas engine
+    runs the kernels in interpret mode, so the token-parity bit is
+    meaningful everywhere while the tok/s columns only are on TPU.
+    """
+    cfg, model = _build(arch, smoke)
+    rng = jax.random.PRNGKey(seed)
+    params = model.init(rng)
+    make_workload = _workload_factory(
+        cfg, requests=requests, rate_rps=rate_rps,
+        shared_prefix=shared_prefix, prefix_len=prefix_len,
+        n_prefixes=n_prefixes, prompt_len_range=prompt_len_range,
+        gen_len_range=gen_len_range, temperature=temperature, seed=seed)
+    runs = {}
+    logs = {}
+    for backend in ("jnp", "pallas"):
+        engine = ServeEngine(
+            model, params, n_slots=slots, max_len=max_len, paged=True,
+            block_size=block_size, n_blocks=n_blocks or None, rng=rng,
+            attn_backend=backend)
+        if warmup:
+            for _ in range(2):
+                engine.run(make_workload())
+        results, report = engine.run(make_workload(), warmup=warmup)
+        runs[backend] = {"results": results,
+                         "requests": [r.to_json() for r in results],
+                         "aggregate": report}
+        logs[backend] = [[int(g), int(f)] for g, f in engine._kv_step_log]
+    jnp_agg = runs["jnp"]["aggregate"]
+    pallas_agg = runs["pallas"]["aggregate"]
+    tokens_match = all(
+        np.array_equal(a.tokens, b.tokens)
+        for a, b in zip(runs["jnp"]["results"], runs["pallas"]["results"]))
+    for backend in runs:
+        del runs[backend]["results"]
+    # same workload + parity => identical cursor streams; keep one log
+    step_log = logs["jnp"]
+    comparison = {
+        "greedy_tokens_match": bool(tokens_match),
+        "tok_per_s_jnp": jnp_agg["tok_per_s"],
+        "tok_per_s_pallas": pallas_agg["tok_per_s"],
+        "pallas_speedup": pallas_agg["tok_per_s"]
+            / max(jnp_agg["tok_per_s"], 1e-9),
+        "ttft_p50_ms_jnp": jnp_agg["ttft_ms"]["p50"],
+        "ttft_p50_ms_pallas": pallas_agg["ttft_ms"]["p50"],
+        "compile_s_jnp": jnp_agg["compile_s"],
+        "compile_s_pallas": pallas_agg["compile_s"],
+        "gathered_kv_bytes": jnp_agg["paged"]["gathered_kv_bytes"],
+        "fused_kv_bytes": jnp_agg["paged"]["fused_kv_bytes"],
+        "kv_bytes_per_step": step_log,
+        "fused_le_gathered_every_step": bool(
+            all(f <= g for g, f in step_log)),
+        "kv_bytes_saved_frac": 1.0
+            - jnp_agg["paged"]["fused_kv_bytes"]
+            / max(jnp_agg["paged"]["gathered_kv_bytes"], 1),
+    }
+    return {
+        "schema": "serving-v6",
+        "config": {
+            "arch": cfg.name, "family": cfg.family, "smoke": smoke,
+            "moa": cfg.moa_strategy.spec, "n_slots": slots,
+            "max_len": max_len, "block_size": block_size,
+            "n_blocks": jnp_agg["paged"]["n_blocks"],
+            "requests": requests, "rate_rps": rate_rps,
+            "prompt_len_range": list(prompt_len_range),
+            "gen_len_range": list(gen_len_range),
+            "temperature": temperature, "seed": seed, "warmup": warmup,
+            "shared_prefix": shared_prefix,
+            "backends": ["jnp", "pallas"],
+            "default_backend": jax.default_backend(),
+        },
+        "jnp": runs["jnp"],
+        "pallas": runs["pallas"],
+        "comparison": comparison,
+    }
+
+
 def run_slo(*, arch: str = "llama3-8b", smoke: bool = True,
             slots: int = 2, max_len: int = 96, n_long: int = 0,
             n_burst: int = 8, long_prompt_len: int = 24,
@@ -472,6 +576,14 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--paged", action="store_true",
                     help="run the dense-vs-paged comparison (serving-v2)")
+    ap.add_argument("--backends", action="store_true",
+                    help="run the jnp-vs-pallas paged attention backend "
+                         "comparison (serving-v6; see docs/kernels.md)")
+    ap.add_argument("--attn-backend", default=None,
+                    choices=("auto", "jnp", "pallas"),
+                    help="[--paged] paged attention backend for the paged "
+                         "engine (default: the model config's, usually "
+                         "auto)")
     ap.add_argument("--mesh", default="",
                     help="run the single-vs-sharded comparison on a DxM "
                          "device mesh, e.g. 2x4 (serving-v4; see "
@@ -515,10 +627,14 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     if sum(map(bool, (args.paged, args.spec_decode, args.mesh,
-                      args.slo))) > 1:
-        raise SystemExit("--paged, --spec-decode, --mesh and --slo are "
-                         "separate comparisons; run them as separate "
-                         "records")
+                      args.slo, args.backends))) > 1:
+        raise SystemExit("--paged, --spec-decode, --mesh, --slo and "
+                         "--backends are separate comparisons; run them as "
+                         "separate records")
+    if args.attn_backend and not args.paged:
+        raise SystemExit("--attn-backend selects the paged engine's "
+                         "attention backend; it requires --paged "
+                         "(--backends always runs both)")
     if (args.spec_decode or args.mesh) and args.shared_prefix:
         raise SystemExit("--spec-decode and --mesh use the plain Poisson "
                          "workload; --shared-prefix belongs to the --paged "
@@ -549,11 +665,18 @@ def main(argv=None):
                               float(a) for a in
                               args.accept_probs.split(",") if a),
                           **common)
+    elif args.backends:
+        record = run_backends(block_size=args.block_size,
+                              n_blocks=args.blocks,
+                              shared_prefix=args.shared_prefix,
+                              prefix_len=args.prefix_len,
+                              n_prefixes=args.prefixes, **common)
     elif args.paged:
         record = run_paged(block_size=args.block_size, n_blocks=args.blocks,
                            shared_prefix=args.shared_prefix,
                            prefix_len=args.prefix_len,
-                           n_prefixes=args.prefixes, **common)
+                           n_prefixes=args.prefixes,
+                           attn_backend=args.attn_backend, **common)
     else:
         record = run(shared_prefix=args.shared_prefix,
                      prefix_len=args.prefix_len, n_prefixes=args.prefixes,
@@ -571,6 +694,16 @@ def main(argv=None):
                   f"goodput {c['goodput_tok_per_s_fifo']:.0f}->"
                   f"{c['goodput_tok_per_s_slo']:.0f} tok/s, "
                   f"preemptions={c['preemptions']}, greedy tokens "
+                  f"{'MATCH' if c['greedy_tokens_match'] else 'DIVERGE'}",
+                  file=sys.stderr)
+        elif record["schema"] == "serving-v6":
+            c = record["comparison"]
+            print(f"[bench] wrote {args.json}: serving-v6, tok/s "
+                  f"jnp={c['tok_per_s_jnp']:.1f} "
+                  f"pallas={c['tok_per_s_pallas']:.1f}, kv bytes/run "
+                  f"gathered={c['gathered_kv_bytes']:,}B "
+                  f"fused={c['fused_kv_bytes']:,}B "
+                  f"(saved {c['kv_bytes_saved_frac']:.0%}), greedy tokens "
                   f"{'MATCH' if c['greedy_tokens_match'] else 'DIVERGE'}",
                   file=sys.stderr)
         elif record["schema"] == "serving-v4":

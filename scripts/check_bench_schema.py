@@ -2,7 +2,7 @@
 """Validate repo JSON records against the schema registry.
 
 Every machine-readable artifact the repo emits carries a ``schema`` tag —
-serving benchmark records (``serving-v1`` .. ``serving-v5``) and the
+serving benchmark records (``serving-v1`` .. ``serving-v6``) and the
 static-analysis report (``analysis-v1``). Each schema registers a
 validator in :data:`SCHEMAS` via :func:`register`; adding a new record
 format means adding one decorated function here.
@@ -46,6 +46,8 @@ _PAGED_AGGREGATE = {
     "prefix_hits": int, "prefix_hit_rate": NUM, "shared_block_hits": int,
     "cow_count": int, "block_occupancy": NUM, "peak_blocks_in_use": int,
     "resident_kv_bytes": NUM, "dense_equiv_kv_bytes": NUM,
+    "attn_backend": STR, "gathered_kv_bytes": NUM, "fused_kv_bytes": NUM,
+    "gathered_kv_bytes_per_step": NUM, "fused_kv_bytes_per_step": NUM,
 }
 
 _CONFIG_V1 = {
@@ -91,6 +93,19 @@ _V4_COMPARISON = {
     "tok_per_s_sharded": NUM, "sharded_speedup": NUM,
     "ttft_p50_ms_single": NUM, "ttft_p50_ms_sharded": NUM,
     "compile_s_single": NUM, "compile_s_sharded": NUM,
+}
+
+_CONFIG_V6 = dict(_CONFIG_V1, block_size=int, n_blocks=int,
+                  shared_prefix=bool, backends=list, default_backend=STR)
+
+_V6_COMPARISON = {
+    "greedy_tokens_match": bool, "tok_per_s_jnp": NUM,
+    "tok_per_s_pallas": NUM, "pallas_speedup": NUM,
+    "ttft_p50_ms_jnp": NUM, "ttft_p50_ms_pallas": NUM,
+    "compile_s_jnp": NUM, "compile_s_pallas": NUM,
+    "gathered_kv_bytes": NUM, "fused_kv_bytes": NUM,
+    "kv_bytes_per_step": list, "fused_le_gathered_every_step": bool,
+    "kv_bytes_saved_frac": NUM,
 }
 
 _CONFIG_V5 = {
@@ -239,6 +254,31 @@ def _serving_v4(record, errors):
             if prod != n:
                 errors.append("$.config.mesh: shape does not multiply "
                               f"to n_devices ({shape} vs {n})")
+
+
+@register("serving-v6")
+def _serving_v6(record, errors):
+    """Paged attention backend comparison (jnp gather vs fused pallas)."""
+    _check(record, {"config": _CONFIG_V6,
+                    "comparison": _V6_COMPARISON}, "$", errors)
+    for backend in ("jnp", "pallas"):
+        _check_run(record.get(backend, {}), f"$.{backend}", errors)
+        _check(record.get(backend, {}).get("aggregate", {}).get("paged", {}),
+               _PAGED_AGGREGATE, f"$.{backend}.aggregate.paged", errors)
+    comp = record.get("comparison", {})
+    steps = comp.get("kv_bytes_per_step")
+    if isinstance(steps, list):
+        for i, pair in enumerate(steps):
+            if not (isinstance(pair, list) and len(pair) == 2
+                    and all(isinstance(x, numbers.Real)
+                            and not isinstance(x, bool) for x in pair)):
+                errors.append(f"$.comparison.kv_bytes_per_step[{i}]: "
+                              "expected [gathered, fused] number pair")
+            elif pair[1] > pair[0]:
+                errors.append(f"$.comparison.kv_bytes_per_step[{i}]: fused "
+                              f"bytes exceed gathered ({pair[1]} > "
+                              f"{pair[0]}) — the fused kernel must never "
+                              "touch more than the gather path streams")
 
 
 @register("serving-v5")

@@ -67,6 +67,9 @@ COLLECTIVE_PRIMITIVES = {
 UPCAST_ALLOWLIST = (
     "src/repro/layers/numerics.py",
     "src/repro/layers/attention.py",
+    # fused paged-attention kernels accumulate (m, l, acc) in f32 and
+    # dequantize int8 KV in-register — both are budgeted upcasts
+    "src/repro/kernels/paged_attention.py",
 )
 
 _SMALL_FLOATS = (jnp.bfloat16, jnp.float16)

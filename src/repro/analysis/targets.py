@@ -245,9 +245,34 @@ def build_family_targets(family: str, *, mesh: Optional[Mesh] = None,
         donate=(1,), ins=(param_sh, cache_p_sh, rep),
         outs=(rep, cache_p_sh), kv=kv_paged))
 
+    # the engine's per-live-block-bucket decode closure (high-water gather:
+    # only the first `hw` block-table columns are streamed)
+    hw = max(max_blocks // 2, 1)
+    fn_hw = lambda p, c, t: model.paged_decode_step(  # noqa: E731
+        p, c, t, live_blocks=hw)
+    targets.append(mkp(
+        "decode_hw", fn_hw, (params, cache_p, tokens1),
+        donate=(1,), ins=(param_sh, cache_p_sh, rep),
+        outs=(rep, cache_p_sh), kv=kv_paged))
+
+    # fused pallas backend (kernels/paged_attention.py); on CPU the kernel
+    # traces in interpret mode, which is exactly what the engine compiles
+    import dataclasses as _dc
+    model_pl = build_model(_dc.replace(cfg, attn_backend="pallas"))
+    targets.append(mkp(
+        "decode_fused", model_pl.paged_decode_step,
+        (params, cache_p, tokens1),
+        donate=(1,), ins=(param_sh, cache_p_sh, rep),
+        outs=(rep, cache_p_sh), kv=kv_paged))
+
     if model.supports_spec_decode:
         targets.append(mkp(
             "verify", model.paged_verify_step,
+            (params, cache_p, _sds((slots, window), _i32)),
+            donate=(1,), ins=(param_sh, cache_p_sh, rep),
+            outs=(rep, cache_p_sh, rep), kv=kv_paged))
+        targets.append(mkp(
+            "verify_fused", model_pl.paged_verify_step,
             (params, cache_p, _sds((slots, window), _i32)),
             donate=(1,), ins=(param_sh, cache_p_sh, rep),
             outs=(rep, cache_p_sh, rep), kv=kv_paged))

@@ -69,6 +69,11 @@ class ModelConfig:
     moa_overrides: Tuple[Tuple[str, MOASpec], ...] = ()
     # serving
     kv_cache_dtype: str = "bfloat16"   # bfloat16 | int8 (quantized cache)
+    # paged-attention backend on the serve hot path: "jnp" streams the
+    # gathered dense KV view (reference), "pallas" runs the fused
+    # block-table flash kernels, "auto" resolves to pallas on TPU and jnp
+    # elsewhere (layers/attention.py:resolve_attn_backend)
+    attn_backend: str = "auto"
     # context-parallel attention (Ulysses-style): attention computed over
     # model-axis-sharded sequence instead of sharded heads — swaps the
     # attn-out all-reduce for a cheap layout all-to-all (§Perf lever)
@@ -90,6 +95,9 @@ class ModelConfig:
                                  f"expected one of {MOA_SITES}")
             resolve(spec)   # validate eagerly — typos fail at config time
         resolve(self.moa)
+        if self.attn_backend not in ("auto", "jnp", "pallas"):
+            raise ValueError(f"unknown attn_backend {self.attn_backend!r}; "
+                             "expected 'auto', 'jnp' or 'pallas'")
 
     # ---- derived ----------------------------------------------------------
     @property

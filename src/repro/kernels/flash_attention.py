@@ -11,7 +11,10 @@ at each fold — an MOA whose "carry" is a scaling factor instead of a bit.
 Grid: ``(B·H, q_blocks, kv_blocks)``; per-step VMEM working set is
 ``(block_q + 2·block_k) × head_dim + block_q × block_k`` floats — the
 paper's cluster size ``n_c`` is ``block_k``. Layout: q/k/v arrive as
-``(BH, S, D)`` (GQA broadcast done by the wrapper).
+``(BH, S, D)`` (GQA broadcast done by the wrapper). Under the causal mask,
+KV blocks strictly above the diagonal are skipped via ``pl.when`` rather
+than computed-and-masked — halving score FLOPs at long prefill
+(the ``benchmarks/roofline.py`` prefill compute lever), bit-identically.
 """
 
 from __future__ import annotations
@@ -38,38 +41,46 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
         m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    q = q_ref[0].astype(jnp.float32) * sm_scale          # (bq, D)
-    k = k_ref[0].astype(jnp.float32)                     # (bk, D)
-    v = v_ref[0].astype(jnp.float32)                     # (bk, D)
-    s = q @ k.T                                          # (bq, bk)
+    def _fold():
+        q = q_ref[0].astype(jnp.float32) * sm_scale      # (bq, D)
+        k = k_ref[0].astype(jnp.float32)                 # (bk, D)
+        v = v_ref[0].astype(jnp.float32)                 # (bk, D)
+        s = q @ k.T                                      # (bq, bk)
 
-    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
-    kv_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
-    mask = kv_pos < kv_len
+        q_pos = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        kv_pos = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mask = kv_pos < kv_len
+        if causal:
+            mask &= kv_pos <= q_pos
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_ref[0]                                # (bq,)
+        l_prev = l_ref[0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        m_ref[0] = m_new
+        l_ref[0] = l_new
+        o_ref[0] = o_ref[0] * corr[:, None] + p @ v
+
     if causal:
-        mask &= kv_pos <= q_pos
-    s = jnp.where(mask, s, _NEG_INF)
+        # Skip KV blocks strictly above the causal diagonal
+        # (ki·block_k > qi·block_q + block_q − 1): every position in such a
+        # block is masked, so it would contribute an exact f32 zero without
+        # moving the running max — eliding it is bit-identical and saves
+        # the score matmul (the roofline's prefill compute lever).
+        pl.when(ki * block_k <= qi * block_q + block_q - 1)(_fold)
+    else:
+        _fold()
 
-    m_prev = m_ref[0]                                    # (bq,)
-    l_prev = l_ref[0]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
-    p = jnp.exp(s - m_new[:, None])
-    corr = jnp.exp(m_prev - m_new)
-    l_new = l_prev * corr + jnp.sum(p, axis=-1)
-    acc = o_ref[0].astype(jnp.float32) * corr[:, None] + p @ v
-
-    m_ref[0] = m_new
-    l_ref[0] = l_new
-    n_kv_blocks = pl.num_programs(2)
-
-    @pl.when(ki == n_kv_blocks - 1)
+    # the last KV block may sit above the diagonal for early q blocks, so
+    # normalization reads the carried (acc, l) from the refs
+    @pl.when(ki == pl.num_programs(2) - 1)
     def _finalize():
-        o_ref[0] = (acc / jnp.maximum(l_new, 1e-30)[:, None]) \
-            .astype(o_ref.dtype)
-
-    @pl.when(ki != n_kv_blocks - 1)
-    def _carry():
-        o_ref[0] = acc.astype(o_ref.dtype)
+        o_ref[0] = o_ref[0] / jnp.maximum(l_ref[0], 1e-30)[:, None]
 
 
 def flash_attention_pallas(q, k, v, *, causal: bool = True,

@@ -16,9 +16,10 @@ from repro.kernels import dot_moa as _dot_moa
 from repro.kernels import flash_attention as _flash
 from repro.kernels import loa_add as _loa_add
 from repro.kernels import moa_reduce as _moa_reduce
+from repro.kernels import paged_attention as _paged
 
 __all__ = ["moa_reduce", "loa_add", "loa_reduce", "dot_moa",
-           "flash_attention"]
+           "flash_attention", "paged_attention"]
 
 
 def _interpret() -> bool:
@@ -58,6 +59,20 @@ def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
     """Flash-attention forward ``(BH, S, D)`` (serialized softmax MOA)."""
     return _flash.flash_attention_pallas(
         q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+        interpret=_interpret(),
+    )
+
+
+@partial(jax.jit, static_argnames=("dequant_dtype",))
+def paged_attention(q, k_pool, v_pool, block_tables, start, *,
+                    k_scale=None, v_scale=None, dequant_dtype=jnp.bfloat16):
+    """Paged flash attention ``(B, T, H, D)`` over a block-table KV pool
+    (fused int8 dequant when the scale leaves are given; the in-register
+    values round through ``dequant_dtype`` — the gather reference's
+    materialization dtype — so both backends see bit-equal KV)."""
+    return _paged.paged_attention_pallas(
+        q, k_pool, v_pool, block_tables, start,
+        k_scale=k_scale, v_scale=v_scale, dequant_dtype=dequant_dtype,
         interpret=_interpret(),
     )
 

@@ -128,12 +128,16 @@ def _run_engine(args):
     if chunk is not None and args.paged and chunk % args.block_size:
         raise SystemExit(f"--prefill-chunk {chunk} must be a multiple of "
                          f"--block-size {args.block_size}")
+    if args.attn_backend and not args.paged:
+        raise SystemExit("--attn-backend selects the paged attention "
+                         "backend; it requires --paged")
     engine = ServeEngine(model, params, n_slots=args.slots, max_len=max_len,
                          paged=args.paged, block_size=args.block_size,
                          n_blocks=args.blocks or None, rng=rng,
                          drafter=drafter, mesh=mesh,
                          prefill_chunk_tokens=chunk,
-                         scheduling=args.scheduling)
+                         scheduling=args.scheduling,
+                         attn_backend=args.attn_backend or None)
     if args.scheduling == "slo":
         requests = bursty_workload(
             vocab=cfg.vocab, n_long=args.slots,
@@ -179,11 +183,14 @@ def _run_engine(args):
     if args.paged:
         pg = report["paged"]
         print(f"[serve] paged: {pg['n_blocks']}x{pg['block_size']}-token "
-              f"blocks, occupancy={pg['block_occupancy']:.2f}, "
+              f"blocks, backend={pg['attn_backend']}, "
+              f"occupancy={pg['block_occupancy']:.2f}, "
               f"prefix hits={pg['prefix_hits']}/{pg['admissions']}, "
               f"cow={pg['cow_count']}, "
               f"resident={pg['resident_kv_bytes']:,}B "
-              f"(dense equiv {pg['dense_equiv_kv_bytes']:,}B)")
+              f"(dense equiv {pg['dense_equiv_kv_bytes']:,}B), "
+              f"kv read/step gathered={pg['gathered_kv_bytes_per_step']:,.0f}B "
+              f"fused={pg['fused_kv_bytes_per_step']:,.0f}B")
     if "slo" in report:
         sl = report["slo"]
         print(f"[serve] slo ({report['scheduling']}): attainment "
@@ -227,6 +234,13 @@ def main():
     ap.add_argument("--blocks", type=int, default=0,
                     help="[engine --paged] pool size in pages (0 = dense "
                          "equivalent slots*max_len/block_size)")
+    ap.add_argument("--attn-backend", default="",
+                    choices=("", "auto", "jnp", "pallas"),
+                    help="[engine --paged] paged attention backend: jnp "
+                         "(gathered KV view, reference), pallas (fused "
+                         "block-table flash kernels, docs/kernels.md), or "
+                         "auto (pallas on TPU). Default: the model "
+                         "config's (auto)")
     ap.add_argument("--spec-decode", action="store_true",
                     help="[engine] speculative decoding: draft k tokens "
                          "per tick, verify in one pass "

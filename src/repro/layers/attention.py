@@ -31,10 +31,32 @@ __all__ = [
     "init_attention", "attention_forward", "attention_decode",
     "attention_decode_paged", "attention_verify", "attention_verify_paged",
     "flash_attention", "full_attention", "init_kv_cache", "init_kv_pool",
-    "gather_paged_kv",
+    "gather_paged_kv", "resolve_attn_backend",
 ]
 
 _NEG_INF = NEG_INF  # canonical sentinel lives in layers/numerics.py
+
+#: valid ``attn_backend`` values (mirrors ``moa/backends.py``'s two
+#: substrates: a pure-jnp reference and the Pallas kernels)
+ATTN_BACKENDS = ("jnp", "pallas")
+
+
+def resolve_attn_backend(backend: str = "auto") -> str:
+    """Resolve the paged-attention backend knob.
+
+    Mirrors ``MOAStrategy.resolve_backend()``: ``"auto"`` selects the fused
+    Pallas block-table kernels on TPU and the gather-based jnp reference
+    elsewhere (where the kernels would only run in interpret mode — the
+    correctness path, not a fast one). Explicit ``"pallas"`` on CPU still
+    works via interpret mode, which is how the parity suite exercises the
+    kernel schedule on CI.
+    """
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if backend not in ATTN_BACKENDS:
+        raise ValueError(f"unknown attn backend {backend!r}; expected "
+                         f"'auto' or one of {ATTN_BACKENDS}")
+    return backend
 
 
 def init_attention(rng, *, d_model: int, n_heads: int, n_kv_heads: int,
@@ -442,7 +464,9 @@ def attention_verify_paged(params: Params, x, pool: Params, block_tables,
                            head_dim: int, rope_theta: float = 10000.0,
                            use_rope: bool = True,
                            compute_dtype=jnp.bfloat16,
-                           strategy=None) -> Tuple[jax.Array, Params]:
+                           strategy=None, backend: str = "jnp",
+                           live_blocks: Optional[int] = None,
+                           ) -> Tuple[jax.Array, Params]:
     """Paged twin of :func:`attention_verify`.
 
     The T tentative K/V entries scatter to pages
@@ -452,6 +476,13 @@ def attention_verify_paged(params: Params, x, pool: Params, block_tables,
     writing slot (or the trash page, for logical blocks past the table) —
     a rejected position is rolled back by rewinding ``pos`` alone and the
     page row is simply overwritten when decode reaches it again.
+
+    ``backend`` / ``live_blocks`` behave as in
+    :func:`attention_decode_paged`; the pallas path is the paged
+    flash-**prefill** kernel instance (T-token contiguous window per slot),
+    which is also what the bucketed suffix-prefill path runs. Callers must
+    size ``live_blocks`` to cover ``max(pos) + T`` positions, not just the
+    cursors.
     """
     B, T, _ = x.shape
     bs = pool["k"].shape[1]
@@ -488,8 +519,16 @@ def attention_verify_paged(params: Params, x, pool: Params, block_tables,
         new_pool["v"] = write(pool["v"], v_new)
     new_pool = _constrain_pool(new_pool)
 
-    k_cache, v_cache = gather_paged_kv(new_pool, block_tables, compute_dtype)
-    o = full_attention(q, k_cache, v_cache, causal=True, positions_q=pos_q)
+    if resolve_attn_backend(backend) == "pallas":
+        o = _paged_attention_fused(q, new_pool, block_tables, pos_q[:, 0],
+                                   compute_dtype=compute_dtype,
+                                   live_blocks=live_blocks)
+    else:
+        k_cache, v_cache = gather_paged_kv(new_pool, block_tables,
+                                           compute_dtype,
+                                           live_blocks=live_blocks)
+        o = full_attention(q, k_cache, v_cache, causal=True,
+                           positions_q=pos_q)
     o = o.reshape(B, T, n_heads * head_dim)
     y = _moa_dot(o, params["wo"].astype(compute_dtype),
                  strategy=strategy, compute_dtype=compute_dtype)
@@ -501,18 +540,27 @@ def attention_verify_paged(params: Params, x, pool: Params, block_tables,
 # ---------------------------------------------------------------------------
 
 
-def gather_paged_kv(pool: Params, block_tables, dtype=jnp.bfloat16):
+def gather_paged_kv(pool: Params, block_tables, dtype=jnp.bfloat16,
+                    *, live_blocks: Optional[int] = None):
     """Materialize each sequence's logical KV view from the shared pool.
 
     ``pool`` leaves are ``(n_phys_blocks, block_size, ...)``;
     ``block_tables`` is ``(B, max_blocks)`` int32 logical→physical. Returns
-    dense ``(B, max_blocks·block_size, Hk, D)`` K and V (dequantized for an
+    dense ``(B, n_blk·block_size, Hk, D)`` K and V (dequantized for an
     int8 pool). With ``block_size`` dividing ``max_len`` the gathered view
     has *exactly* the dense cache's shape, and every attended position
     holds the same value — the paged read is bit-identical by construction
     (unattended garbage is masked to ``_NEG_INF`` before the softmax either
     way).
+
+    ``live_blocks`` (static) truncates the gather to the batch's high-water
+    logical block — pages past *every* slot's cursor were fully masked, so
+    not streaming them is float-bit-identical (a masked score contributes
+    an exact f32 zero to the softmax and never holds the row max) while
+    cutting the gathered HBM traffic from ``max_blocks`` to the live depth.
     """
+    if live_blocks is not None:
+        block_tables = block_tables[:, :live_blocks]
 
     def flat(name):
         x = pool[name][block_tables]         # (B, n_blk, bs, ...)
@@ -529,12 +577,37 @@ def gather_paged_kv(pool: Params, block_tables, dtype=jnp.bfloat16):
     return k, v
 
 
+def _paged_attention_fused(q, pool: Params, block_tables, start, *,
+                           compute_dtype=jnp.bfloat16,
+                           live_blocks: Optional[int] = None):
+    """Route the paged score reduction through the fused Pallas kernel.
+
+    ``q: (B, T, H, D)`` queries at positions ``start[b] .. start[b]+T-1``.
+    The kernel walks the (optionally high-water-truncated) block tables
+    inside the grid and dequantizes int8 pools in-register — the dense
+    gathered view of :func:`gather_paged_kv` never exists.
+    ``compute_dtype`` is the dtype the gather path would materialize that
+    view in; the kernel rounds its dequantized values through it so the
+    two backends agree bit-for-bit on every attended KV entry.
+    """
+    from repro.kernels import ops as kernel_ops
+
+    if live_blocks is not None:
+        block_tables = block_tables[:, :live_blocks]
+    return kernel_ops.paged_attention(
+        q, pool["k"], pool["v"], block_tables, start,
+        k_scale=pool.get("k_scale"), v_scale=pool.get("v_scale"),
+        dequant_dtype=compute_dtype)
+
+
 def attention_decode_paged(params: Params, x, pool: Params, block_tables,
                            pos, *, n_heads: int, n_kv_heads: int,
                            head_dim: int, rope_theta: float = 10000.0,
                            use_rope: bool = True,
                            compute_dtype=jnp.bfloat16,
-                           strategy=None) -> Tuple[jax.Array, Params]:
+                           strategy=None, backend: str = "jnp",
+                           live_blocks: Optional[int] = None,
+                           ) -> Tuple[jax.Array, Params]:
     """One decode step against a *paged* KV pool.
 
     Identical math to :func:`attention_decode` — same projections, same
@@ -545,6 +618,13 @@ def attention_decode_paged(params: Params, x, pool: Params, block_tables,
     guarantees writes only ever land on unshared pages (copy-on-write
     happens host-side before the first divergent write), so slots at
     heterogeneous depths share physical prefix pages safely.
+
+    ``backend`` picks the score-reduction substrate (resolved via
+    :func:`resolve_attn_backend`): ``"jnp"`` gathers the dense logical view
+    (reference), ``"pallas"`` runs the fused block-table kernel — greedy
+    tokens are bit-identical, floats agree to online-softmax reassociation.
+    ``live_blocks`` (static) bounds both paths to the batch's high-water
+    logical block.
     """
     B = x.shape[0]
     bs = pool["k"].shape[1]
@@ -575,8 +655,15 @@ def attention_decode_paged(params: Params, x, pool: Params, block_tables,
             v_new[:, 0].astype(pool["v"].dtype))
     new_pool = _constrain_pool(new_pool)
 
-    k_cache, v_cache = gather_paged_kv(new_pool, block_tables, compute_dtype)
-    o = full_attention(q, k_cache, v_cache, causal=False, kv_len=cur + 1)
+    if resolve_attn_backend(backend) == "pallas":
+        o = _paged_attention_fused(q, new_pool, block_tables, cur,
+                                   compute_dtype=compute_dtype,
+                                   live_blocks=live_blocks)
+    else:
+        k_cache, v_cache = gather_paged_kv(new_pool, block_tables,
+                                           compute_dtype,
+                                           live_blocks=live_blocks)
+        o = full_attention(q, k_cache, v_cache, causal=False, kv_len=cur + 1)
     o = o.reshape(B, 1, n_heads * head_dim)
     y = _moa_dot(o, params["wo"].astype(compute_dtype),
                  strategy=strategy, compute_dtype=compute_dtype)

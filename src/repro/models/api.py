@@ -172,10 +172,14 @@ class Model:
         return self._mod.init_paged_cache(self.cfg, n_slots, n_phys_blocks,
                                           block_size, max_blocks)
 
-    def paged_decode_step(self, params, cache, tokens):
+    def paged_decode_step(self, params, cache, tokens, *, live_blocks=None):
         """One decode step against the paged cache; bit-identical math to
-        :meth:`decode_step` (``tests/test_paged_kv.py`` parity suite)."""
-        return self._mod.paged_decode_step(params, cache, tokens, self.cfg)
+        :meth:`decode_step` (``tests/test_paged_kv.py`` parity suite).
+        ``live_blocks`` (static) bounds the KV stream to the batch's
+        high-water logical block — pages past every cursor were fully
+        masked, so truncating them is exact."""
+        return self._mod.paged_decode_step(params, cache, tokens, self.cfg,
+                                           live_blocks=live_blocks)
 
     def prefill_suffix(self, params, batch, *, prefix, prompt_len):
         """Suffix-only prefill against cached prefix K/V.
@@ -315,15 +319,18 @@ class Model:
                 "draft window through expert capacity)")
         return self._mod.verify_step(params, cache, tokens, self.cfg)
 
-    def paged_verify_step(self, params, cache, tokens):
+    def paged_verify_step(self, params, cache, tokens, *, live_blocks=None):
         """:meth:`verify_step` against the paged cache layout (same
-        contract; tentative writes route through the block tables)."""
+        contract; tentative writes route through the block tables).
+        ``live_blocks`` must cover the deepest cursor plus the verify
+        window."""
         if not self.supports_spec_decode:
             raise ValueError(
                 f"family {self.cfg.family!r} (cfg {self.cfg.name!r}) has no "
                 "exact multi-token verify (capacity-limited MoE couples the "
                 "draft window through expert capacity)")
-        return self._mod.paged_verify_step(params, cache, tokens, self.cfg)
+        return self._mod.paged_verify_step(params, cache, tokens, self.cfg,
+                                           live_blocks=live_blocks)
 
     def commit_verified(self, cache, keep, aux=None):
         """Finalize a verify: advance each slot's ``pos`` by ``keep (B,)``

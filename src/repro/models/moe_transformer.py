@@ -147,9 +147,19 @@ def prefill(params: Params, batch: dict, cfg: ModelConfig, *, max_len: int,
                            strategy=cfg.moa_for("moe"))
         h2 = h2 + m
         pad = max_len - k.shape[1]
-        kv = attn_lib._constrain_cache(
-            {"k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
-             "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))})
+
+        def pad_seq(t):
+            return jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+
+        if cfg.kv_cache_dtype == "int8":
+            kq, ks = attn_lib.quantize_kv(k)
+            vq, vs = attn_lib.quantize_kv(v)
+            kv = attn_lib._constrain_cache(
+                {"k": pad_seq(kq), "v": pad_seq(vq),
+                 "k_scale": pad_seq(ks), "v_scale": pad_seq(vs)})
+        else:
+            kv = attn_lib._constrain_cache({"k": pad_seq(k),
+                                            "v": pad_seq(v)})
         return h2, kv
 
     h, kv_layers = lax.scan(dense._remat(body, cfg), h, params["layers"])
@@ -211,6 +221,10 @@ def prefill_suffix(params: Params, batch: dict, cfg: ModelConfig, *,
                            compute_dtype=cfg.cdtype,
                            strategy=cfg.moa_for("moe"))
         h2 = h2 + m
+        if cfg.kv_cache_dtype == "int8":
+            kq, ks = attn_lib.quantize_kv(k)
+            vq, vs = attn_lib.quantize_kv(v)
+            return h2, {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
         return h2, {"k": k, "v": v}
 
     h, kv_layers = lax.scan(dense._remat(body, cfg), h,
@@ -252,11 +266,12 @@ def decode_step(params: Params, cache: Params, tokens, cfg: ModelConfig):
 
 
 def paged_decode_step(params: Params, cache: Params, tokens,
-                      cfg: ModelConfig):
+                      cfg: ModelConfig, *, live_blocks=None):
     """Paged decode step (same layout contract as
     :func:`repro.models.transformer.paged_decode_step`); the MoE layers are
     untouched — only the attention KV read/write goes through the block
-    tables."""
+    tables (bounded to ``live_blocks``, dispatched per
+    ``cfg.attn_backend``)."""
     pos, tables = cache["pos"], cache["block_tables"]
     h = embed(params["embed"], tokens, compute_dtype=cfg.cdtype)
     h = constrain(h, "batch", None, "embed")
@@ -268,7 +283,8 @@ def paged_decode_step(params: Params, cache: Params, tokens,
             layer["attn"], hn, layer_pool, tables, pos, n_heads=cfg.n_heads,
             n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
             rope_theta=cfg.rope_theta, compute_dtype=cfg.cdtype,
-            strategy=cfg.moa_for("attention"))
+            strategy=cfg.moa_for("attention"),
+            backend=cfg.attn_backend, live_blocks=live_blocks)
         h2 = carry + constrain(a, "batch", None, "embed")
         hn = rms_norm(layer["mlp_norm"], h2)
         m, _ = moe_forward(layer["moe"], hn, n_experts=cfg.n_experts,
@@ -315,11 +331,12 @@ def verify_step(params: Params, cache: Params, tokens, cfg: ModelConfig):
 
 
 def paged_verify_step(params: Params, cache: Params, tokens,
-                      cfg: ModelConfig):
+                      cfg: ModelConfig, *, live_blocks=None):
     """Paged twin of :func:`verify_step`; same contract as
     :func:`repro.models.transformer.paged_verify_step`."""
     return dense.verify_impl(params, cache, tokens, cfg, paged=True,
-                             mlp_fn=_moe_mlp_fn(cfg))
+                             mlp_fn=_moe_mlp_fn(cfg),
+                             live_blocks=live_blocks)
 
 
 commit_verified = dense.commit_verified

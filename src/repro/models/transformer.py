@@ -369,14 +369,16 @@ def decode_step(params: Params, cache: Params, tokens, cfg: ModelConfig):
 
 
 def paged_decode_step(params: Params, cache: Params, tokens,
-                      cfg: ModelConfig):
+                      cfg: ModelConfig, *, live_blocks=None):
     """One token step against the paged pool (``init_paged_cache`` layout).
 
     Same layer scan as :func:`decode_step`; the KV read/write is routed
     through per-slot block tables, so the step's math — and its greedy
     continuation — is bit-identical to the dense-slot path (the gathered
     logical view has exactly the dense cache's shape; see
-    ``docs/paged-kv.md``).
+    ``docs/paged-kv.md``). ``live_blocks`` (static) bounds the KV stream to
+    the batch's high-water logical block; ``cfg.attn_backend`` picks the
+    gather-based jnp path or the fused Pallas block-table kernel.
     """
     pos, tables = cache["pos"], cache["block_tables"]
     h = embed(params["embed"], tokens, compute_dtype=cfg.cdtype)
@@ -389,7 +391,8 @@ def paged_decode_step(params: Params, cache: Params, tokens,
             layer["attn"], hn, layer_pool, tables, pos, n_heads=cfg.n_heads,
             n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
             rope_theta=cfg.rope_theta, compute_dtype=cfg.cdtype,
-            strategy=cfg.moa_for("attention"))
+            strategy=cfg.moa_for("attention"),
+            backend=cfg.attn_backend, live_blocks=live_blocks)
         h2 = carry + a
         hn = rms_norm(layer["mlp_norm"], h2)
         mlp_fn = gelu_mlp if cfg.family == "encoder" else swiglu
@@ -435,10 +438,11 @@ def _verify_scan(params: Params, cache: Params, tokens, cfg: ModelConfig,
 
 
 def verify_impl(params: Params, cache: Params, tokens, cfg: ModelConfig, *,
-                paged: bool, mlp_fn=None):
+                paged: bool, mlp_fn=None, live_blocks=None):
     """Verify implementation shared by the dense and MoE families (which
     differ only in the MLP block); ``paged`` selects the KV read/write
-    path. See :func:`verify_step` for the contract."""
+    path (``live_blocks`` bounds its KV stream, as in
+    :func:`paged_decode_step`). See :func:`verify_step` for the contract."""
     if mlp_fn is None:
         def mlp_fn(layer, hn):
             return swiglu(layer["mlp"], hn, strategy=cfg.moa_for("mlp"),
@@ -453,7 +457,8 @@ def verify_impl(params: Params, cache: Params, tokens, cfg: ModelConfig, *,
                 n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
                 head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
                 compute_dtype=cfg.cdtype,
-                strategy=cfg.moa_for("attention"))
+                strategy=cfg.moa_for("attention"),
+                backend=cfg.attn_backend, live_blocks=live_blocks)
     else:
         def attn_fn(layer, hn, layer_cache):
             return attn_lib.attention_verify(
@@ -488,14 +493,17 @@ def verify_step(params: Params, cache: Params, tokens, cfg: ModelConfig):
 
 
 def paged_verify_step(params: Params, cache: Params, tokens,
-                      cfg: ModelConfig):
+                      cfg: ModelConfig, *, live_blocks=None):
     """Paged twin of :func:`verify_step` (``init_paged_cache`` layout).
 
     Tentative writes scatter through the block tables; the engine's
     admission margin guarantees they land on slot-private pages (or the
     trash page), so rejection rolls back by rewinding ``pos`` alone.
+    ``live_blocks`` must cover the deepest slot's cursor *plus the verify
+    window* (the engine adds the margin).
     """
-    return verify_impl(params, cache, tokens, cfg, paged=True)
+    return verify_impl(params, cache, tokens, cfg, paged=True,
+                       live_blocks=live_blocks)
 
 
 def commit_verified(cache: Params, keep, aux, cfg: ModelConfig) -> Params:

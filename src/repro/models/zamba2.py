@@ -408,10 +408,12 @@ def decode_step(params: Params, cache: Params, tokens, cfg: ModelConfig):
 
 
 def paged_decode_step(params: Params, cache: Params, tokens,
-                      cfg: ModelConfig):
+                      cfg: ModelConfig, *, live_blocks=None):
     """Paged decode step: identical to :func:`decode_step` except the
     shared attention block reads/writes its KV through per-slot block
-    tables; the dense per-slot SSM recurrence is untouched."""
+    tables (bounded to ``live_blocks``, dispatched per
+    ``cfg.attn_backend``); the dense per-slot SSM recurrence is
+    untouched."""
     pos, tables = cache["pos"], cache["block_tables"]
     h = embed(params["embed"], tokens, compute_dtype=cfg.cdtype)
     h = constrain(h, "batch", None, "embed")
@@ -441,7 +443,8 @@ def paged_decode_step(params: Params, cache: Params, tokens,
             params["shared_attn"], hn, kv_pool, tables, pos,
             n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
             head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
-            compute_dtype=cfg.cdtype, strategy=cfg.moa_for("attention"))
+            compute_dtype=cfg.cdtype, strategy=cfg.moa_for("attention"),
+            backend=cfg.attn_backend, live_blocks=live_blocks)
         out = out + constrain(a, "batch", None, "embed")
         hn = rms_norm(app_norm["mlp"], out)
         m = swiglu(params["shared_mlp"], hn, strategy=cfg.moa_for("mlp"),
@@ -485,13 +488,16 @@ def verify_step(params: Params, cache: Params, tokens, cfg: ModelConfig):
 
 
 def paged_verify_step(params: Params, cache: Params, tokens,
-                      cfg: ModelConfig):
+                      cfg: ModelConfig, *, live_blocks=None):
     """Paged twin of :func:`verify_step`: the scanned step is
     :func:`paged_decode_step`, so tentative KV writes route through the
-    block tables (slot-private pages — the engine's admission margin)."""
+    block tables (slot-private pages — the engine's admission margin).
+    ``live_blocks`` must already include the T-token verify window — every
+    scanned step reuses the same static bound."""
     return verify_common.scan_verify(
-        lambda p, c, t: paged_decode_step(p, c, t, cfg), params, cache,
-        tokens, state_keys=("ssm",))
+        lambda p, c, t: paged_decode_step(p, c, t, cfg,
+                                          live_blocks=live_blocks),
+        params, cache, tokens, state_keys=("ssm",))
 
 
 def commit_verified(cache: Params, keep, aux, cfg: ModelConfig) -> Params:

@@ -63,6 +63,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.launch.costing import request_decode_cost, spec_request_decode_cost
+from repro.layers.attention import resolve_attn_backend
 from repro.parallel import (activate, replicate_uneven_kv_heads,
                             serve_cache_shardings, serve_rules_for)
 from repro.serve.kv_pool import TRASH_BLOCK, BlockPool, blocks_needed
@@ -362,6 +363,14 @@ class ServeEngine:
         snapshot; paged: pinned block table + per-slot state) and revives
         it later bit-identically. Incompatible with a ``drafter`` (the
         verify window's tentative state cannot be spilled mid-flight).
+    attn_backend:
+        Override ``cfg.attn_backend`` for the paged decode/verify hot
+        path: ``"jnp"`` streams the gathered dense KV view (reference),
+        ``"pallas"`` runs the fused block-table flash kernels
+        (``repro.kernels.paged_attention``), ``"auto"`` picks pallas on
+        TPU and jnp elsewhere. ``None`` keeps the model config's value.
+        Greedy decode tokens are identical across backends
+        (``docs/kernels.md``).
     """
 
     def __init__(self, model, params, *, n_slots: int, max_len: int,
@@ -371,7 +380,15 @@ class ServeEngine:
                  mesh=None, rules=None,
                  clock: Callable[[], float] = time.monotonic,
                  prefill_chunk_tokens: Optional[int] = None,
-                 scheduling: str = "fifo"):
+                 scheduling: str = "fifo",
+                 attn_backend: Optional[str] = None):
+        if attn_backend is not None:
+            # override the config's paged-attention backend ("jnp" | "pallas"
+            # | "auto"); baked into cfg so it keys the compile cache and the
+            # jitted decode/verify closures see it as a static attribute
+            model = dataclasses.replace(
+                model, cfg=dataclasses.replace(model.cfg,
+                                               attn_backend=attn_backend))
         if model.cfg.family == "encoder":
             raise ValueError("encoder-only arch has no decode step")
         if model.cfg.family == "vlm":
@@ -520,11 +537,13 @@ class ServeEngine:
                     out_specs=self._rep)
         self._sample = self._build("sample", sample_batch)
         if drafter is not None:
-            verify = model.paged_verify_step if paged else model.verify_step
-            self._verify = self._build(
-                "verify", verify, donate=(1,),
-                in_specs=(self._param_sh, self._cache_sh, self._rep),
-                out_specs=(self._rep, self._cache_sh, self._rep))
+            if not paged:
+                self._verify = self._build(
+                    "verify", model.verify_step, donate=(1,),
+                    in_specs=(self._param_sh, self._cache_sh, self._rep),
+                    out_specs=(self._rep, self._cache_sh, self._rep))
+            # paged: verify is built lazily per live-block bucket
+            # (_verify_for), mirroring the decode path
             self._commit = self._build(
                 "commit", model.commit_verified, donate=(0,),
                 in_specs=(self._cache_sh, self._rep, self._rep),
@@ -598,10 +617,10 @@ class ServeEngine:
         self._kv_key = kv_key = \
             "kv" if model.cfg.family == "hybrid" else "layers"
         kv_sh = self._cache_sh[kv_key] if self._cache_sh is not None else None
-        self._decode = self._build(
-            "decode", model.paged_decode_step, donate=(1,),
-            in_specs=(self._param_sh, self._cache_sh, self._rep),
-            out_specs=(self._rep, self._cache_sh))
+        # decode/verify are built lazily per live-block bucket (_decode_for /
+        # _verify_for): attention gathers only up to the in-flight high-water
+        # block instead of the full table width, so a mostly-shallow batch
+        # streams a fraction of the padded KV (docs/kernels.md)
         if self._suffix_capable:
             self._suffix_prefill = self._build(
                 "suffix_prefill",
@@ -644,6 +663,15 @@ class ServeEngine:
         self._admissions = 0
         self._block_occ_sum = 0.0
         self._peak_blocks = 0
+        # attention KV traffic accounting (both numbers priced per tick from
+        # the same cursors, independent of which backend actually ran):
+        # gathered = what the jnp gather path streams (n_slots × high-water
+        # bucket), fused = what the block-table kernel touches (live blocks
+        # only). _kv_step_log keeps the per-tick (gathered, fused) pairs for
+        # depth-resolved reporting (benchmarks/serving.py --backends).
+        self._gathered_kv_bytes = 0
+        self._fused_kv_bytes = 0
+        self._kv_step_log: List[Tuple[int, int]] = []
 
     # ---- sharding + compile-cache plumbing ---------------------------------
     def _place_cache(self, cache):
@@ -694,6 +722,75 @@ class ServeEngine:
             return jax.jit(fn, **kwargs)
 
         return self._ctx(_cached_jit(key, builder))
+
+    # ---- live-block bucketing (paged) --------------------------------------
+    def _hw_buckets(self) -> List[int]:
+        """The block-count buckets decode/verify compile against: powers of
+        two up to the table width, plus the width itself."""
+        buckets = []
+        b = 1
+        while b < self._max_blocks:
+            buckets.append(b)
+            b <<= 1
+        buckets.append(self._max_blocks)
+        return buckets
+
+    def _live_blocks(self, window: int) -> int:
+        """Bucketed high-water block count covering every in-flight slot's
+        cursor plus ``window`` rows written this tick (1 for decode, k+1
+        for a verify pass). Computed host-side from the same cursors the
+        device cache holds, then rounded up to the next power of two so the
+        number of compiled decode/verify shapes stays logarithmic in the
+        table width."""
+        need = 1
+        for inf in self._inflight.values():
+            top = inf.metrics.prompt_tokens + len(inf.generated) + window - 1
+            need = max(need, top // self.block_size + 1)
+        b = 1
+        while b < need:
+            b <<= 1
+        return min(b, self._max_blocks)
+
+    def _decode_for(self, hw: int):
+        """Paged decode callable that reads only the first ``hw`` block-table
+        columns (cached per bucket; attention output for every live slot is
+        bit-identical to the full-width gather — trailing columns are fully
+        masked, contributing exact zeros to the softmax)."""
+        model = self.model
+        return self._build(
+            "decode",
+            lambda p, c, t, _hw=hw: model.paged_decode_step(
+                p, c, t, live_blocks=_hw),
+            donate=(1,),
+            in_specs=(self._param_sh, self._cache_sh, self._rep),
+            out_specs=(self._rep, self._cache_sh),
+            key_extra=(hw,))
+
+    def _verify_for(self, hw: int):
+        """Paged verify callable bounded to ``hw`` block-table columns; the
+        bucket must cover the cursor plus the tentative k+1-row window."""
+        model = self.model
+        return self._build(
+            "verify",
+            lambda p, c, t, _hw=hw: model.paged_verify_step(
+                p, c, t, live_blocks=_hw),
+            donate=(1,),
+            in_specs=(self._param_sh, self._cache_sh, self._rep),
+            out_specs=(self._rep, self._cache_sh, self._rep),
+            key_extra=(hw,))
+
+    def _kv_bytes_tick(self, hw: int, window: int) -> Tuple[int, int]:
+        """(gathered, fused) attention KV bytes for one tick at bucket
+        ``hw``: the jnp gather path materializes ``n_slots × hw`` blocks
+        whether live or not; the fused kernel touches only each slot's live
+        blocks (dead pages are index-redirected and elided)."""
+        blk = self._spec.kv_block_bytes(self.block_size)
+        gathered = self.n_slots * hw * blk
+        fused = 0
+        for inf in self._inflight.values():
+            top = inf.metrics.prompt_tokens + len(inf.generated) + window - 1
+            fused += (top // self.block_size + 1) * blk
+        return gathered, fused
 
     # ---- time --------------------------------------------------------------
     def _now(self, t_start: float) -> float:
@@ -1167,8 +1264,13 @@ class ServeEngine:
             toks[slot, 0] = inf.next_token
             temps[slot] = max(inf.request.sampler.temperature, 0.0)
             greedy[slot] = inf.request.sampler.greedy
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          jnp.asarray(toks))
+        if self.paged:
+            hw = self._live_blocks(1)
+            decode = self._decode_for(hw)
+        else:
+            decode = self._decode
+        logits, self.cache = decode(self.params, self.cache,
+                                    jnp.asarray(toks))
         next_toks = np.asarray(self._sample(
             logits[:, -1], jnp.asarray(temps), jnp.asarray(greedy),
             self._next_key()))
@@ -1177,6 +1279,10 @@ class ServeEngine:
         if self.paged:
             self._block_occ_sum += self._pool.in_use / self.n_blocks
             self._peak_blocks = max(self._peak_blocks, self._pool.in_use)
+            g, f = self._kv_bytes_tick(hw, 1)
+            self._gathered_kv_bytes += g
+            self._fused_kv_bytes += f
+            self._kv_step_log.append((g, f))
         now = self._now(self._t_start)
         for slot in sorted(self._inflight):
             inf = self._inflight[slot]
@@ -1212,8 +1318,13 @@ class ServeEngine:
             toks[slot, 1:] = proposals[slot]
             temps[slot] = max(inf.request.sampler.temperature, 0.0)
             greedy[slot] = inf.request.sampler.greedy
-        logits, self.cache, aux = self._verify(self.params, self.cache,
-                                               jnp.asarray(toks))
+        if self.paged:
+            hw = self._live_blocks(k + 1)
+            verify = self._verify_for(hw)
+        else:
+            verify = self._verify
+        logits, self.cache, aux = verify(self.params, self.cache,
+                                         jnp.asarray(toks))
         out, n_acc = self._accept(logits, jnp.asarray(toks[:, 1:]),
                                   jnp.asarray(temps), jnp.asarray(greedy),
                                   self._next_key())
@@ -1229,6 +1340,10 @@ class ServeEngine:
         if self.paged:
             self._block_occ_sum += self._pool.in_use / self.n_blocks
             self._peak_blocks = max(self._peak_blocks, self._pool.in_use)
+            g, f = self._kv_bytes_tick(hw, k + 1)
+            self._gathered_kv_bytes += g
+            self._fused_kv_bytes += f
+            self._kv_step_log.append((g, f))
         now = self._now(self._t_start)
         for slot in sorted(self._inflight):
             inf = self._inflight[slot]
@@ -1293,15 +1408,38 @@ class ServeEngine:
             self.cache = self._clear_slot(self.cache, 0)
         if self.drafter is not None:
             toks = np.zeros((n, self.spec_k + 1), np.int32)
-            logits, cache, aux = self._verify(self.params, self.cache,
-                                              jnp.asarray(toks))
+            if self.paged:
+                # compile every live-block bucket now (a growing batch walks
+                # the buckets in order; each is a distinct executable, and a
+                # mid-run compile would land in wall_s) — verify + keep=0
+                # commit restores the pre-verify cache bit-identically
+                toks_j = jnp.asarray(toks)
+                keep0 = jnp.zeros((n,), jnp.int32)
+                for hw in self._hw_buckets():
+                    logits, cache, aux = self._verify_for(hw)(
+                        self.params, self.cache, toks_j)
+                    self.cache = self._commit(cache, keep0, aux)
+            else:
+                logits, cache, aux = self._verify(self.params, self.cache,
+                                                  jnp.asarray(toks))
+                self.cache = self._commit(cache, jnp.zeros((n,), jnp.int32),
+                                          aux)
             self._accept(logits, jnp.asarray(toks[:, 1:]),
                          jnp.zeros((n,), jnp.float32),
                          jnp.ones((n,), bool), key)
-            self.cache = self._commit(cache, jnp.zeros((n,), jnp.int32), aux)
         else:
-            logits, self.cache = self._decode(self.params, self.cache,
-                                              jnp.zeros((n, 1), jnp.int32))
+            if self.paged:
+                # warmup decode writes land on the trash page and idle-slot
+                # cursors are reset at admission, so ticking once per bucket
+                # is as harmless as ticking once
+                toks0 = jnp.zeros((n, 1), jnp.int32)
+                for hw in self._hw_buckets():
+                    logits, self.cache = self._decode_for(hw)(
+                        self.params, self.cache, toks0)
+            else:
+                logits, self.cache = self._decode(self.params, self.cache,
+                                                  jnp.zeros((n, 1),
+                                                            jnp.int32))
             self._sample(logits[:, -1], jnp.zeros((n,), jnp.float32),
                          jnp.ones((n,), bool), key)
         jax.block_until_ready(self.cache)
@@ -1367,6 +1505,9 @@ class ServeEngine:
             self._admissions = 0
             self._block_occ_sum = 0.0
             self._peak_blocks = 0
+            self._gathered_kv_bytes = 0
+            self._fused_kv_bytes = 0
+            self._kv_step_log = []
         self._preemptions = 0
         self._spills = 0
         self._revivals = 0
@@ -1457,6 +1598,9 @@ class ServeEngine:
                 shared_block_hits=self._shared_block_hits,
                 cow_count=self._cow_count,
                 block_occ_sum=self._block_occ_sum, decode_steps=self._steps,
-                peak_blocks=self._peak_blocks)
+                peak_blocks=self._peak_blocks,
+                attn_backend=resolve_attn_backend(self.model.cfg.attn_backend),
+                gathered_kv_bytes=self._gathered_kv_bytes,
+                fused_kv_bytes=self._fused_kv_bytes)
         results.sort(key=lambda r: r.uid)
         return results, report

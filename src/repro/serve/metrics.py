@@ -143,7 +143,9 @@ def paged_report(*, spec, n_slots: int, max_len: int, block_size: int,
                  n_blocks: int, admissions: int, prefix_hits: int,
                  shared_block_hits: int, cow_count: int,
                  block_occ_sum: float, decode_steps: int,
-                 peak_blocks: int) -> dict:
+                 peak_blocks: int, attn_backend: str = "jnp",
+                 gathered_kv_bytes: int = 0,
+                 fused_kv_bytes: int = 0) -> dict:
     """Paged-pool sub-report for the engine's aggregate.
 
     ``block_occupancy`` averages ``blocks_in_use / n_blocks`` over decode
@@ -153,6 +155,12 @@ def paged_report(*, spec, n_slots: int, max_len: int, block_size: int,
     request state — the number to compare against
     ``dense_equiv_kv_bytes = n_slots · max_len`` worth of statically
     reserved cache (``spec`` is a :class:`repro.models.api.CacheSpec`).
+    ``gathered_kv_bytes`` / ``fused_kv_bytes`` price the run's attention
+    KV traffic under the two backends — the padded high-water gather
+    stream vs. the live blocks the fused block-table kernel actually
+    touches (both accumulated per tick from the same cursors, so
+    ``fused <= gathered`` at every step; ``attn_backend`` records which
+    one actually ran).
     """
     return {
         "block_size": block_size,
@@ -166,6 +174,12 @@ def paged_report(*, spec, n_slots: int, max_len: int, block_size: int,
         "peak_blocks_in_use": peak_blocks,
         "resident_kv_bytes": peak_blocks * spec.kv_block_bytes(block_size),
         "dense_equiv_kv_bytes": spec.dense_kv_bytes(n_slots, max_len),
+        "attn_backend": attn_backend,
+        "gathered_kv_bytes": gathered_kv_bytes,
+        "fused_kv_bytes": fused_kv_bytes,
+        "gathered_kv_bytes_per_step": gathered_kv_bytes
+        / max(decode_steps, 1),
+        "fused_kv_bytes_per_step": fused_kv_bytes / max(decode_steps, 1),
     }
 
 

@@ -114,6 +114,29 @@ class TestFlashAttention:
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    rtol=1e-4, atol=1e-4)
 
+    @pytest.mark.parametrize("bq,bk", [(16, 16), (32, 64), (64, 32)])
+    def test_causal_block_skip_parity(self, rng, bq, bk):
+        """Causal runs skip fully-above-diagonal k-blocks via ``pl.when``
+        instead of computing-then-masking them; the skip must change no
+        bits relative to the unskipped schedule. Comparing across block
+        shapes moves the diagonal through different skip patterns — any
+        dropped live block or leaked dead block shows up immediately."""
+        kq, kk, kv = jax.random.split(rng, 3)
+        q = jax.random.normal(kq, (2, 128, 32), jnp.float32)
+        k = jax.random.normal(kk, (2, 128, 32), jnp.float32)
+        v = jax.random.normal(kv, (2, 128, 32), jnp.float32)
+        got = ops.flash_attention(q, k, v, causal=True, block_q=bq,
+                                  block_k=bk)
+        want = ref.flash_attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+        # single k-block along the row => nothing skippable: the skipped
+        # and unskipped schedules fold the identical block sequence
+        whole_row = ops.flash_attention(q, k, v, causal=True, block_q=bq,
+                                        block_k=128)
+        np.testing.assert_allclose(np.asarray(whole_row),
+                                   np.asarray(want), rtol=1e-4, atol=1e-4)
+
     def test_bf16_inputs(self, rng):
         kq, kk, kv = jax.random.split(rng, 3)
         q = jax.random.normal(kq, (2, 64, 32)).astype(jnp.bfloat16)
