@@ -41,6 +41,15 @@ Record schemas (all validated by ``scripts/check_bench_schema.py``):
   per-step gathered-vs-fused attention HBM bytes (the traffic the fused
   kernel removes), and a ``greedy_tokens_match`` bit.
 
+* ``serving-v7`` (``--replicas N``): the same greedy workload through a
+  failure-free replica fleet and a **chaos** fleet — injected replica
+  crashes (heartbeat-detected, requests requeued and re-prefilled
+  elsewhere) plus a mid-run checkpoint save that triggers a rolling
+  watcher-driven weight reload (``docs/fault-tolerance.md``) — goodput
+  and requeue-latency cost of the failures, a ``greedy_tokens_match``
+  bit against the failure-free baseline, and the zero-loss /
+  zero-reload-drop counters CI gates on.
+
   PYTHONPATH=src python -m benchmarks.serving --smoke --json out.json
   PYTHONPATH=src python -m benchmarks.serving --smoke --paged \
       --shared-prefix --block-size 8 --json paged.json
@@ -563,6 +572,120 @@ def run_slo(*, arch: str = "llama3-8b", smoke: bool = True,
     }
 
 
+def run_replicas(*, arch: str = "llama3-8b", smoke: bool = True,
+                 n_replicas: int = 3, requests: int = 8,
+                 rate_rps: float = 100.0, slots: int = 2, max_len: int = 96,
+                 prompt_len_range=(4, 16), gen_len_range=(3, 8),
+                 kill_schedule=((6, 1),), reload_at_step: int = 12,
+                 miss_limit: int = 3, clock_dt: float = 1e-3,
+                 seed: int = 0) -> dict:
+    """Failure-free vs chaos replica-set serving; ``serving-v7`` record.
+
+    Both fleets serve the identical greedy workload on a deterministic
+    :class:`StepClock`. The chaos fleet additionally takes ``kill_schedule``
+    — per-replica :class:`~repro.runtime.failures.FailureInjector` crashes
+    at the given router steps (requests requeue after heartbeat detection
+    and restart from their prompts elsewhere) — and, at
+    ``reload_at_step``, a checkpoint save that the watcher turns into a
+    rolling drain → swap → rejoin weight reload. ``comparison`` records
+    the goodput cost of the chaos (the dead replica's partial decodes are
+    wasted work), the requeue latency distribution, and the two proof
+    bits CI gates on: ``greedy_tokens_match`` (every requeued request
+    regenerated a bit-identical stream) and ``lost_requests == 0`` with
+    ``reload_dropped == 0``.
+    """
+    import tempfile
+
+    from repro.checkpoint import CheckpointManager, CheckpointWatcher
+    from repro.runtime import FailureInjector
+    from repro.serve import ReplicaSet
+
+    cfg, model = _build(arch, smoke)
+    rng = jax.random.PRNGKey(seed)
+    params = model.init(rng)
+    make_workload = _workload_factory(
+        cfg, requests=requests, rate_rps=rate_rps, shared_prefix=False,
+        prefix_len=0, n_prefixes=1, prompt_len_range=prompt_len_range,
+        gen_len_range=gen_len_range, temperature=0.0, seed=seed)
+    kills = {}
+    for step, rid in kill_schedule:
+        kills.setdefault(int(rid), []).append(int(step))
+
+    def fleet(chaos: bool, tmpdir: str):
+        clock = StepClock(dt=clock_dt)
+        factory = lambda: ServeEngine(  # noqa: E731
+            model, params, n_slots=slots, max_len=max_len, rng=rng,
+            clock=clock)
+        manager = watcher = None
+        actions = {}
+        if chaos and reload_at_step:
+            manager = CheckpointManager(tmpdir)
+            watcher = CheckpointWatcher(manager)
+            actions[reload_at_step] = lambda _rs: manager.save(1, params)
+        rs = ReplicaSet(
+            factory, n_replicas=n_replicas, clock=clock,
+            miss_limit=miss_limit,
+            failure_injectors={rid: FailureInjector(steps)
+                               for rid, steps in kills.items()}
+            if chaos else None,
+            watcher=watcher,
+            load_params=(lambda step: manager.restore(params)[0])
+            if watcher else None)
+        results, report = rs.run(make_workload(), actions=actions)
+        rs.check()
+        return results, report
+
+    with tempfile.TemporaryDirectory() as tmpdir:
+        base_results, base_report = fleet(False, tmpdir)
+        chaos_results, chaos_report = fleet(True, tmpdir)
+    tokens_match = len(base_results) == len(chaos_results) and all(
+        a.uid == b.uid and np.array_equal(a.tokens, b.tokens)
+        for a, b in zip(base_results, chaos_results))
+
+    def _run_record(results, report):
+        return {
+            "requests": [{"uid": r.uid,
+                          "prompt_tokens": r.metrics.prompt_tokens,
+                          "new_tokens": r.metrics.new_tokens,
+                          "ttft_ms": 1e3 * r.metrics.ttft_s}
+                         for r in results],
+            "fleet": report,
+        }
+
+    return {
+        "schema": "serving-v7",
+        "config": {
+            "arch": cfg.name, "family": cfg.family, "smoke": smoke,
+            "moa": cfg.moa_strategy.spec, "n_replicas": n_replicas,
+            "n_slots": slots, "max_len": max_len, "requests": requests,
+            "rate_rps": rate_rps,
+            "prompt_len_range": list(prompt_len_range),
+            "gen_len_range": list(gen_len_range),
+            "kill_schedule": [[int(s), int(r)] for s, r in kill_schedule],
+            "reload_at_step": reload_at_step, "miss_limit": miss_limit,
+            "clock_dt": clock_dt, "seed": seed,
+        },
+        "baseline": _run_record(base_results, base_report),
+        "chaos": _run_record(chaos_results, chaos_report),
+        "comparison": {
+            "greedy_tokens_match": bool(tokens_match),
+            "lost_requests": chaos_report["lost_requests"],
+            "kills": chaos_report["kills"],
+            "deaths_detected": chaos_report["deaths_detected"],
+            "requeues": chaos_report["requeues"],
+            "requeue_latency_ms": chaos_report["requeue_latency_ms"],
+            "reloads_completed": chaos_report["reloads_completed"],
+            "reload_dropped": chaos_report["reload_dropped"],
+            "goodput_tok_per_s_baseline": base_report["tok_per_s"],
+            "goodput_tok_per_s_chaos": chaos_report["tok_per_s"],
+            "goodput_ratio": chaos_report["tok_per_s"]
+                / max(base_report["tok_per_s"], 1e-9),
+            "router_steps_baseline": base_report["router_steps"],
+            "router_steps_chaos": chaos_report["router_steps"],
+        },
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(
         description="Continuous-batching serving benchmark (JSON output)")
@@ -595,6 +718,17 @@ def main(argv=None):
                     help="run the FIFO-vs-SLO bursty-deadline comparison "
                          "on a deterministic virtual clock (serving-v5; "
                          "see docs/slo-scheduling.md)")
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="run the failure-free-vs-chaos replica-set "
+                         "comparison with N replicas (serving-v7; see "
+                         "docs/fault-tolerance.md)")
+    ap.add_argument("--kill", default="6:1",
+                    help="[--replicas] chaos schedule STEP:REPLICA[,...] "
+                         "of injected replica crashes")
+    ap.add_argument("--reload-at", type=int, default=12,
+                    help="[--replicas] router step of the mid-run "
+                         "checkpoint save that triggers the rolling hot "
+                         "reload (0 = no reload)")
     ap.add_argument("--burst", type=int, default=8,
                     help="[--slo] short tight-deadline requests in the "
                          "burst")
@@ -627,10 +761,10 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     if sum(map(bool, (args.paged, args.spec_decode, args.mesh,
-                      args.slo, args.backends))) > 1:
-        raise SystemExit("--paged, --spec-decode, --mesh, --slo and "
-                         "--backends are separate comparisons; run them as "
-                         "separate records")
+                      args.slo, args.backends, args.replicas))) > 1:
+        raise SystemExit("--paged, --spec-decode, --mesh, --slo, "
+                         "--backends and --replicas are separate "
+                         "comparisons; run them as separate records")
     if args.attn_backend and not args.paged:
         raise SystemExit("--attn-backend selects the paged engine's "
                          "attention backend; it requires --paged "
@@ -647,7 +781,20 @@ def main(argv=None):
                   rate_rps=args.rate, slots=args.slots, max_len=args.max_len,
                   temperature=args.temperature, seed=args.seed,
                   warmup=not args.no_warmup)
-    if args.slo:
+    if args.replicas:
+        kill_schedule = []
+        for item in filter(None, (s.strip()
+                                  for s in args.kill.split(","))):
+            step_s, rid_s = item.split(":")
+            kill_schedule.append((int(step_s), int(rid_s)))
+        record = run_replicas(arch=args.arch, smoke=args.smoke,
+                              n_replicas=args.replicas,
+                              requests=args.requests, rate_rps=args.rate,
+                              slots=args.slots, max_len=args.max_len,
+                              kill_schedule=tuple(kill_schedule),
+                              reload_at_step=args.reload_at,
+                              seed=args.seed)
+    elif args.slo:
         record = run_slo(arch=args.arch, smoke=args.smoke,
                          slots=args.slots, max_len=args.max_len,
                          n_burst=args.burst,
@@ -685,7 +832,20 @@ def main(argv=None):
     if args.json:
         with open(args.json, "w") as f:
             f.write(text + "\n")
-        if record["schema"] == "serving-v5":
+        if record["schema"] == "serving-v7":
+            c = record["comparison"]
+            print(f"[bench] wrote {args.json}: serving-v7, "
+                  f"kills={c['kills']} requeues={c['requeues']} "
+                  f"(latency p95={c['requeue_latency_ms']['p95']:.0f}ms), "
+                  f"reloads={c['reloads_completed']} "
+                  f"(dropped {c['reload_dropped']}), lost="
+                  f"{c['lost_requests']}, goodput "
+                  f"{c['goodput_tok_per_s_baseline']:.0f}->"
+                  f"{c['goodput_tok_per_s_chaos']:.0f} tok/s, greedy "
+                  f"tokens "
+                  f"{'MATCH' if c['greedy_tokens_match'] else 'DIVERGE'}",
+                  file=sys.stderr)
+        elif record["schema"] == "serving-v5":
             c = record["comparison"]
             print(f"[bench] wrote {args.json}: serving-v5, deadline ttft "
                   f"p99 fifo={c['deadline_ttft_p99_ms_fifo']:.0f}ms "

@@ -2,7 +2,7 @@
 """Validate repo JSON records against the schema registry.
 
 Every machine-readable artifact the repo emits carries a ``schema`` tag —
-serving benchmark records (``serving-v1`` .. ``serving-v6``) and the
+serving benchmark records (``serving-v1`` .. ``serving-v7``) and the
 static-analysis report (``analysis-v1``). Each schema registers a
 validator in :data:`SCHEMAS` via :func:`register`; adding a new record
 format means adding one decorated function here.
@@ -131,6 +131,41 @@ _SLO_COMPARISON = {
     "goodput_tok_per_s_slo": NUM, "preemptions": int, "spills": int,
     "revivals": int, "prefill_chunk_count": int, "slo_wins_p99": bool,
     "slo_wins_goodput": bool,
+}
+
+_CONFIG_V7 = {
+    "arch": STR, "family": STR, "smoke": bool, "moa": STR,
+    "n_replicas": int, "n_slots": int, "max_len": int, "requests": int,
+    "rate_rps": NUM, "prompt_len_range": list, "gen_len_range": list,
+    "kill_schedule": list, "reload_at_step": int, "miss_limit": int,
+    "clock_dt": NUM, "seed": int,
+}
+
+_FLEET = {
+    "n_replicas": int, "router_steps": int, "wall_s": NUM, "requests": int,
+    "completed": int, "lost_requests": int, "kills": int,
+    "deaths_detected": int, "requeues": int, "requeued_requests": int,
+    "requeue_latency_ms": _DIST, "reloads_completed": int,
+    "reload_dropped": int, "stragglers": int, "total_new_tokens": int,
+    "tok_per_s": NUM, "replicas": list,
+}
+
+_FLEET_REPLICA = {
+    "rid": int, "state": STR, "ticks": int, "completed": int,
+    "param_version": int, "kills": int, "revivals": int, "reloads": int,
+}
+
+_FLEET_REQUEST = {
+    "uid": int, "prompt_tokens": int, "new_tokens": int, "ttft_ms": NUM,
+}
+
+_V7_COMPARISON = {
+    "greedy_tokens_match": bool, "lost_requests": int, "kills": int,
+    "deaths_detected": int, "requeues": int, "requeue_latency_ms": _DIST,
+    "reloads_completed": int, "reload_dropped": int,
+    "goodput_tok_per_s_baseline": NUM, "goodput_tok_per_s_chaos": NUM,
+    "goodput_ratio": NUM, "router_steps_baseline": int,
+    "router_steps_chaos": int,
 }
 
 _ANALYSIS_SUMMARY = {
@@ -298,6 +333,37 @@ def _serving_v5(record, errors):
                 and spills > preemptions:
             errors.append("$.slo.aggregate.slo: spills exceed preemptions "
                           f"({spills} > {preemptions})")
+
+
+@register("serving-v7")
+def _serving_v7(record, errors):
+    """Replica-set chaos benchmark (kill + reload vs failure-free)."""
+    _check(record, {"config": _CONFIG_V7,
+                    "comparison": _V7_COMPARISON}, "$", errors)
+    for mode in ("baseline", "chaos"):
+        run = record.get(mode, {})
+        _check(run, {"fleet": _FLEET}, f"$.{mode}", errors)
+        reqs = run.get("requests") if isinstance(run, dict) else None
+        if not isinstance(reqs, list) or not reqs:
+            errors.append(f"$.{mode}.requests: expected non-empty list")
+        else:
+            for i, r in enumerate(reqs):
+                _check(r, _FLEET_REQUEST, f"$.{mode}.requests[{i}]", errors)
+        replicas = run.get("fleet", {}).get("replicas") \
+            if isinstance(run, dict) else None
+        if isinstance(replicas, list):
+            for i, rep in enumerate(replicas):
+                _check(rep, _FLEET_REPLICA,
+                       f"$.{mode}.fleet.replicas[{i}]", errors)
+    comp = record.get("comparison", {})
+    chaos_fleet = record.get("chaos", {}).get("fleet", {})
+    if isinstance(comp, dict) and isinstance(chaos_fleet, dict):
+        for key in ("lost_requests", "requeues", "reloads_completed",
+                    "reload_dropped"):
+            a, b = comp.get(key), chaos_fleet.get(key)
+            if isinstance(a, int) and isinstance(b, int) and a != b:
+                errors.append(f"$.comparison.{key}: disagrees with "
+                              f"$.chaos.fleet.{key} ({a} vs {b})")
 
 
 @register("analysis-v1")

@@ -1,3 +1,4 @@
 from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.watcher import CheckpointWatcher
 
-__all__ = ["CheckpointManager"]
+__all__ = ["CheckpointManager", "CheckpointWatcher"]

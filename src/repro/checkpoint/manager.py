@@ -188,13 +188,32 @@ class CheckpointManager:
         arrays: Dict[str, np.ndarray] = {}
         metadata = {}
         for shard in range(self.n_shards):
-            npz = np.load(os.path.join(ckpt_dir, f"shard_{shard}.npz"))
-            with open(os.path.join(ckpt_dir,
-                                   f"manifest_{shard}.json")) as f:
-                manifest = json.load(f)
+            shard_path = os.path.join(ckpt_dir, f"shard_{shard}.npz")
+            try:
+                # eager member reads: a truncated zip member only fails
+                # when decompressed, so force it here where the error can
+                # name the file instead of surfacing mid-unflatten
+                npz = np.load(shard_path)
+                npz = {k: npz[k] for k in npz.files}
+            except FileNotFoundError:
+                raise
+            except Exception as e:
+                raise RuntimeError(
+                    f"checkpoint step_{step} shard {shard} is corrupt or "
+                    f"truncated ({shard_path}): {e}") from e
+            try:
+                with open(os.path.join(ckpt_dir,
+                                       f"manifest_{shard}.json")) as f:
+                    manifest = json.load(f)
+            except FileNotFoundError:
+                raise
+            except Exception as e:
+                raise RuntimeError(
+                    f"checkpoint step_{step} shard {shard} manifest is "
+                    f"corrupt ({ckpt_dir}): {e}") from e
             metadata = manifest["metadata"] | metadata
             dtypes = manifest.get("dtypes", {})
-            for k in npz.files:
+            for k in npz:
                 key = k.replace("\x1f", "/")
                 arr = npz[k]
                 logical = dtypes.get(key, arr.dtype.name)

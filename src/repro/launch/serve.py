@@ -26,8 +26,8 @@ from repro.configs.base import ShapeSpec
 from repro.configs.registry import get_config, smoke_config
 from repro.launch.mesh import ensure_host_devices, make_mesh, parse_mesh
 from repro.models.api import build_model
-from repro.serve import (GREEDY, Sampler, ServeEngine, bursty_workload,
-                         poisson_workload, resolve_drafter)
+from repro.serve import (GREEDY, ReplicaSet, Sampler, ServeEngine, StepClock,
+                         bursty_workload, poisson_workload, resolve_drafter)
 
 __all__ = ["serve_batch", "main"]
 
@@ -203,6 +203,122 @@ def _run_engine(args):
               f"chunked ticks={sl['prefill_chunk_count']}")
 
 
+def _parse_kill_schedule(spec: str):
+    """``"step:replica,step:replica"`` → {replica: [steps]}."""
+    schedule = {}
+    for item in filter(None, (s.strip() for s in spec.split(","))):
+        try:
+            step_s, rid_s = item.split(":")
+            step, rid = int(step_s), int(rid_s)
+        except ValueError:
+            raise SystemExit(f"--kill: bad entry {item!r}; expected "
+                             "STEP:REPLICA, e.g. 6:1")
+        schedule.setdefault(rid, []).append(step)
+    return schedule
+
+
+def _run_replicas(args):
+    """Replica-set serving on a deterministic StepClock: the chaos smoke.
+
+    Kills from ``--kill`` are injected through per-replica
+    FailureInjectors at the scheduled router steps; ``--reload-at`` saves
+    the serving weights as a checkpoint mid-run so the watcher triggers a
+    rolling drain → swap → rejoin. Exits non-zero if any request is lost,
+    any reload drops an in-flight request, or (greedy) any token stream
+    diverges from the failure-free fleet baseline.
+    """
+    import tempfile
+
+    from repro.checkpoint import CheckpointManager, CheckpointWatcher
+    from repro.runtime import FailureInjector
+
+    if args.spec_decode or args.scheduling != "fifo" or args.mesh \
+            or args.static:
+        raise SystemExit("--replicas drives plain fifo engines tick-by-"
+                         "tick; --spec-decode/--scheduling slo/--mesh/"
+                         "--static are single-engine modes")
+    cfg, model = _build(args)
+    rng = jax.random.PRNGKey(args.seed)
+    params = model.init(rng)
+    max_len = args.max_len or (args.prompt_len + args.gen_len + 1) * 2
+    if args.paged and max_len % args.block_size:
+        max_len += args.block_size - max_len % args.block_size
+    sampler = _sampler(args)
+    make_workload = lambda: poisson_workload(  # noqa: E731
+        n_requests=args.requests, vocab=cfg.vocab, rate_rps=args.rate,
+        prompt_len_range=(min(4, args.prompt_len), args.prompt_len),
+        gen_len_range=(min(2, args.gen_len), args.gen_len),
+        sampler=sampler, seed=args.seed)
+    kills = _parse_kill_schedule(args.kill)
+    for rid in kills:
+        if not 0 <= rid < args.replicas:
+            raise SystemExit(f"--kill: replica {rid} out of range "
+                             f"(0..{args.replicas - 1})")
+
+    def fleet(chaos: bool, tmpdir):
+        clock = StepClock(dt=args.dt)
+        factory = lambda: ServeEngine(  # noqa: E731
+            model, params, n_slots=args.slots, max_len=max_len,
+            paged=args.paged, block_size=args.block_size,
+            n_blocks=args.blocks or None, rng=rng, clock=clock)
+        manager = watcher = None
+        actions = {}
+        if chaos and args.reload_at:
+            manager = CheckpointManager(tmpdir)
+            watcher = CheckpointWatcher(manager)
+            actions[args.reload_at] = \
+                lambda _rs: manager.save(1, params)
+        rs = ReplicaSet(
+            factory, n_replicas=args.replicas, clock=clock,
+            failure_injectors={rid: FailureInjector(steps)
+                               for rid, steps in kills.items()}
+            if chaos else None,
+            watcher=watcher,
+            load_params=(lambda step: manager.restore(params)[0])
+            if watcher else None)
+        results, report = rs.run(make_workload(), actions=actions)
+        rs.check()
+        return results, report
+
+    with tempfile.TemporaryDirectory() as tmpdir:
+        base_results, base_report = fleet(False, tmpdir)
+        results, report = fleet(True, tmpdir)
+    print(f"[serve] arch={cfg.name} replicas={args.replicas} "
+          f"slots={args.slots}/replica max_len={max_len} "
+          f"requests={args.requests} rate={args.rate}/s dt={args.dt}")
+    print(f"[serve] chaos: kills={report['kills']} (schedule "
+          f"{args.kill or 'none'}), deaths detected="
+          f"{report['deaths_detected']}, requeues={report['requeues']}, "
+          f"requeue latency p95="
+          f"{report['requeue_latency_ms']['p95']:.0f}ms")
+    print(f"[serve] reload: completed={report['reloads_completed']} "
+          f"dropped={report['reload_dropped']} versions="
+          f"{[r['param_version'] for r in report['replicas']]}")
+    print(f"[serve] fleet: {report['completed']}/{report['requests']} "
+          f"requests, {report['tok_per_s']:.1f} tok/s "
+          f"(baseline {base_report['tok_per_s']:.1f}), router steps="
+          f"{report['router_steps']}")
+    failures = []
+    if report["lost_requests"]:
+        failures.append(f"{report['lost_requests']} requests lost")
+    if report["reload_dropped"]:
+        failures.append(f"reload dropped {report['reload_dropped']} "
+                        "in-flight requests")
+    if args.reload_at and not report["reloads_completed"]:
+        failures.append("scheduled reload never completed")
+    if sampler.greedy:
+        diverged = [r.uid for r, b in zip(results, base_results)
+                    if not np.array_equal(r.tokens, b.tokens)]
+        if diverged:
+            failures.append(f"greedy tokens diverged from failure-free "
+                            f"baseline for uids {diverged}")
+        else:
+            print("[serve] greedy tokens bit-identical to failure-free "
+                  "baseline")
+    if failures:
+        raise SystemExit("[serve] FAIL: " + "; ".join(failures))
+
+
 def main():
     ap = argparse.ArgumentParser(
         description="Serve a registry arch: continuous batching (default) "
@@ -271,6 +387,24 @@ def main():
                          "fixed-budget prefill chunks interleaved with "
                          "decode ticks (0 = one-shot; see "
                          "repro.launch.costing.prefill_chunk_guidance)")
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="[engine] serve through a fault-tolerant "
+                         "replica set of N engines on a deterministic "
+                         "StepClock (docs/fault-tolerance.md); 0 = single "
+                         "engine, -1 = plan from the visible device count "
+                         "(repro.runtime.elastic.plan_replicas)")
+    ap.add_argument("--kill", default="",
+                    help="[--replicas] chaos schedule STEP:REPLICA[,...] — "
+                         "each entry crashes that replica at that router "
+                         "step via a FailureInjector; its requests requeue "
+                         "after heartbeat detection")
+    ap.add_argument("--reload-at", type=int, default=0,
+                    help="[--replicas] router step at which to save the "
+                         "weights as a checkpoint, triggering a rolling "
+                         "watcher-driven hot reload (0 = no reload)")
+    ap.add_argument("--dt", type=float, default=1e-3,
+                    help="[--replicas] StepClock virtual seconds per "
+                         "clock read")
     ap.add_argument("--no-warmup", action="store_true",
                     help="[engine] skip the unmeasured warmup tick "
                          "(first-call XLA compile time then lands in "
@@ -284,7 +418,12 @@ def main():
     if args.mesh:
         # before any backend touch: XLA locks device count at first init
         ensure_host_devices(parse_mesh(args.mesh))
-    if args.static:
+    if args.replicas == -1:
+        from repro.runtime import plan_replicas
+        args.replicas = plan_replicas(jax.device_count())
+    if args.replicas:
+        _run_replicas(args)
+    elif args.static:
         _run_static(args)
     else:
         _run_engine(args)

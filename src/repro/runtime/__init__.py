@@ -1,7 +1,7 @@
 from repro.runtime.heartbeat import HeartbeatMonitor
 from repro.runtime.failures import FailureInjector, SimulatedFailure
 from repro.runtime.supervisor import Supervisor, RunResult
-from repro.runtime.elastic import plan_mesh_shape
+from repro.runtime.elastic import plan_mesh_shape, plan_replicas
 
 __all__ = ["HeartbeatMonitor", "FailureInjector", "SimulatedFailure",
-           "Supervisor", "RunResult", "plan_mesh_shape"]
+           "Supervisor", "RunResult", "plan_mesh_shape", "plan_replicas"]

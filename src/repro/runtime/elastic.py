@@ -11,7 +11,7 @@ from __future__ import annotations
 
 from typing import Optional, Tuple
 
-__all__ = ["plan_mesh_shape"]
+__all__ = ["plan_mesh_shape", "plan_replicas"]
 
 
 def plan_mesh_shape(n_devices: int, *, model_parallel: int = 16,
@@ -25,3 +25,22 @@ def plan_mesh_shape(n_devices: int, *, model_parallel: int = 16,
             return (n_devices // mp, mp)
         mp -= 1
     return (n_devices, 1)
+
+
+def plan_replicas(n_devices: int, *, devices_per_replica: int = 1,
+                  min_replicas: int = 1) -> int:
+    """Serve-fleet sizing: how many replicas the surviving devices carry.
+
+    Each replica needs ``devices_per_replica`` chips (its TP degree is a
+    memory fact, like ``model_parallel`` above, so the replica *count* is
+    the elastic axis — a lost host shrinks the fleet, never a replica's
+    mesh). Floors at ``min_replicas`` so a degraded fleet keeps serving
+    even when the device budget formally rounds to zero.
+    """
+    if n_devices < 1:
+        raise ValueError("no devices")
+    if devices_per_replica < 1:
+        raise ValueError("devices_per_replica must be >= 1")
+    if min_replicas < 1:
+        raise ValueError("min_replicas must be >= 1")
+    return max(min_replicas, n_devices // devices_per_replica)

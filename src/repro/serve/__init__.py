@@ -33,7 +33,9 @@ from repro.serve.clock import StepClock
 from repro.serve.engine import ServeEngine
 from repro.serve.kv_pool import AdmissionPlan, BlockPool, blocks_needed
 from repro.serve.metrics import RequestMetrics, aggregate, slo_report
+from repro.serve.replica import Replica
 from repro.serve.request import FinishReason, Request, RequestResult
+from repro.serve.router import ReplicaSet
 from repro.serve.sampling import GREEDY, Sampler, sample_batch
 from repro.serve.scheduler import SlotScheduler
 from repro.serve.spec import (Drafter, DraftModelDrafter, NgramDrafter,
@@ -44,7 +46,7 @@ from repro.serve.workload import (bursty_workload, poisson_workload,
 __all__ = [
     "AdmissionPlan", "BlockPool", "Drafter", "DraftModelDrafter",
     "FinishReason", "GREEDY", "NgramDrafter", "OracleDrafter", "Request",
-    "RequestMetrics", "RequestResult", "Sampler", "ServeEngine",
+    "Replica", "ReplicaSet", "RequestMetrics", "RequestResult", "Sampler", "ServeEngine",
     "SlotScheduler", "StepClock", "aggregate", "blocks_needed",
     "bursty_workload", "resolve_drafter", "sample_batch", "slo_report",
     "verify_accept", "poisson_workload", "shared_prefix_workload",

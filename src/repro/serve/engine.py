@@ -565,6 +565,8 @@ class ServeEngine:
         # run() resets the clock origin; set here so preempt() works before
         # the first run (tests drive the lifecycle methods directly)
         self._t_start = self._clock()
+        self._compile_s = 0.0
+        self._log_start = 0
         self._spec_ticks = 0
         self._spec_emitted = 0
         self._spec_slot_steps = 0.0
@@ -1459,32 +1461,52 @@ class ServeEngine:
                     "admitted")
         self.scheduler.submit(request)
 
-    def run(self, requests: Sequence[Request] = (),
-            max_steps: Optional[int] = None, *, warmup: bool = False
-            ) -> Tuple[List[RequestResult], dict]:
-        """Serve until every submitted request completes.
+    def reload_params(self, params) -> None:
+        """Swap the weight tree in place (live reload between ticks).
 
-        Returns ``(results sorted by uid, report)`` where ``report`` is the
-        JSON-able aggregate from :func:`repro.serve.metrics.aggregate` plus
-        ``slot_reuse`` (admissions into a previously-used slot this run)
-        and — paged — a ``paged`` sub-report (block occupancy, prefix-hit
-        rate, resident bytes). ``max_steps`` is a runaway backstop, not a
-        budget: exceeding it raises RuntimeError (default 1e6 decode
-        ticks).
-
-        ``warmup=True`` executes one throwaway prefill + decode/verify tick
-        *before* the engine clock starts, so first-call XLA compilation
-        lands in the report's ``compile_s`` instead of inflating
-        ``wall_s`` / TTFT / ``tok_per_s`` (a warm engine pays ~0 here).
+        The new tree must match the current one's structure, shapes, and
+        dtypes; on a mesh engine it is ``device_put`` onto the engine's
+        parameter shardings. The jitted callables take params as a plain
+        (non-donated) argument, so the swap is just a reference change —
+        the next prefill/decode tick reads the new weights. In-flight
+        slots keep decoding, now against the new weights; callers that
+        need every generation pinned to one weight version (the replica
+        router's rolling reload) drain the engine first.
         """
-        compile_s = 0.0
+        old_leaves, old_def = jax.tree_util.tree_flatten(self.params)
+        new_leaves, new_def = jax.tree_util.tree_flatten(params)
+        if old_def != new_def:
+            raise ValueError(
+                "reload_params: new weight tree structure differs from the "
+                f"serving one ({new_def} vs {old_def})")
+        for i, (old, new) in enumerate(zip(old_leaves, new_leaves)):
+            if (tuple(old.shape) != tuple(np.shape(new))
+                    or old.dtype != np.asarray(new).dtype):
+                raise ValueError(
+                    f"reload_params: leaf {i} changed layout "
+                    f"({np.shape(new)}/{np.asarray(new).dtype} vs "
+                    f"{tuple(old.shape)}/{old.dtype}) — a reload may not "
+                    "change the architecture")
+        if self.mesh is not None:
+            params = jax.device_put(params, self._param_sh)
+        self.params = params
+
+    def start_run(self, *, warmup: bool = False,
+                  t_origin: Optional[float] = None) -> None:
+        """Reset per-run counters and start the engine clock.
+
+        Part of the tick-level API (``start_run`` / ``tick`` /
+        ``finish_run``) that :meth:`run` is built from and that the replica
+        router drives directly. ``t_origin`` pins the clock origin instead
+        of reading the clock — the router passes one shared origin so every
+        replica (including ones constructed mid-run on revival) reports on
+        the same fleet timeline.
+        """
+        self._compile_s = 0.0
         if warmup:
             t0 = self._clock()
             self._warmup_tick()
-            compile_s = self._clock() - t0
-        for r in requests:
-            self.submit(r)
-        results: List[RequestResult] = []
+            self._compile_s = self._clock() - t0
         # per-run counters: a reused engine (submit + repeated run) must not
         # carry stale fast-forward offsets, occupancy sums, or prior-run
         # admissions into its report
@@ -1512,49 +1534,89 @@ class ServeEngine:
         self._spills = 0
         self._revivals = 0
         self._chunk_ticks = 0
-        log_start = len(self.scheduler.admission_log)
-        self._t_start = self._clock()
-        limit = max_steps if max_steps is not None else 1_000_000
-        gate = self._admission_gate if self.paged else None
-        while not self.scheduler.done:
+        self._log_start = len(self.scheduler.admission_log)
+        self._t_start = self._clock() if t_origin is None else t_origin
+
+    def tick(self, results: List[RequestResult]) -> None:
+        """One scheduling tick: admit what arrived, advance one prefill
+        chunk set, one decode/verify step. Appends newly finished requests
+        to ``results``. No-op when the scheduler has no work (so a router
+        may tick an idle replica safely)."""
+        if self.scheduler.done:
+            return
+        now = self._now(self._t_start)
+        if not self.scheduler.active and not self.scheduler.has_ready \
+                and self.scheduler.next_arrival_s > now:
+            # idle: fast-forward the engine clock to the next arrival
+            # (a gate-vetoed head sits in the ready queue, so has_ready
+            # guards against fast-forwarding past work that only needs
+            # blocks, not time)
+            self._fast_forward_s += self.scheduler.next_arrival_s - now
             now = self._now(self._t_start)
-            if not self.scheduler.active and not self.scheduler.has_ready \
-                    and self.scheduler.next_arrival_s > now:
-                # idle: fast-forward the engine clock to the next arrival
-                # (a gate-vetoed head sits in the ready queue, so has_ready
-                # guards against fast-forwarding past work that only needs
-                # blocks, not time)
-                self._fast_forward_s += self.scheduler.next_arrival_s - now
-                now = self._now(self._t_start)
-            if self.scheduling == "slo":
-                self._maybe_preempt(now)
-            while True:
-                # one at a time so each admission's block allocation is
-                # visible to the next gate evaluation
-                admitted = self.scheduler.admit_ready(now, gate=gate,
-                                                      limit=1)
-                if not admitted:
-                    break
-                self._admit(admitted[0][0], admitted[0][1], now, results)
-            if self.paged and not self._inflight and not self._prefilling \
-                    and self._spilled:
-                # stall escape: every runnable request is spilled but the
-                # gate vetoes the (fresh) ready head — revive a spilled one
-                # out of order; it holds its reservation, so it always fits
-                got = self.scheduler.admit_revivable(now, set(self._spilled))
-                if got is not None:
-                    self._admit(got[0], got[1], now, results)
-            if self._prefilling:
-                self._prefill_tick(results)
-            if self._inflight:
-                if self.drafter is not None:
-                    self._spec_tick(results)
-                else:
-                    self._decode_tick(results)
+        if self.scheduling == "slo":
+            self._maybe_preempt(now)
+        gate = self._admission_gate if self.paged else None
+        while True:
+            # one at a time so each admission's block allocation is
+            # visible to the next gate evaluation
+            admitted = self.scheduler.admit_ready(now, gate=gate,
+                                                  limit=1)
+            if not admitted:
+                break
+            self._admit(admitted[0][0], admitted[0][1], now, results)
+        if self.paged and not self._inflight and not self._prefilling \
+                and self._spilled:
+            # stall escape: every runnable request is spilled but the
+            # gate vetoes the (fresh) ready head — revive a spilled one
+            # out of order; it holds its reservation, so it always fits
+            got = self.scheduler.admit_revivable(now, set(self._spilled))
+            if got is not None:
+                self._admit(got[0], got[1], now, results)
+        if self._prefilling:
+            self._prefill_tick(results)
+        if self._inflight:
+            if self.drafter is not None:
+                self._spec_tick(results)
+            else:
+                self._decode_tick(results)
+
+    def run(self, requests: Sequence[Request] = (),
+            max_steps: Optional[int] = None, *, warmup: bool = False
+            ) -> Tuple[List[RequestResult], dict]:
+        """Serve until every submitted request completes.
+
+        Returns ``(results sorted by uid, report)`` where ``report`` is the
+        JSON-able aggregate from :func:`repro.serve.metrics.aggregate` plus
+        ``slot_reuse`` (admissions into a previously-used slot this run)
+        and — paged — a ``paged`` sub-report (block occupancy, prefix-hit
+        rate, resident bytes). ``max_steps`` is a runaway backstop, not a
+        budget: exceeding it raises RuntimeError (default 1e6 decode
+        ticks).
+
+        ``warmup=True`` executes one throwaway prefill + decode/verify tick
+        *before* the engine clock starts, so first-call XLA compilation
+        lands in the report's ``compile_s`` instead of inflating
+        ``wall_s`` / TTFT / ``tok_per_s`` (a warm engine pays ~0 here).
+        """
+        self.start_run(warmup=warmup)
+        for r in requests:
+            self.submit(r)
+        results: List[RequestResult] = []
+        limit = max_steps if max_steps is not None else 1_000_000
+        while not self.scheduler.done:
+            self.tick(results)
             if self._steps + self._chunk_ticks >= limit:
                 raise RuntimeError(
                     f"serve engine exceeded {limit} decode steps with "
                     f"{len(self._inflight)} requests still in flight")
+        return self.finish_run(results)
+
+    def finish_run(self, results: List[RequestResult]
+                   ) -> Tuple[List[RequestResult], dict]:
+        """Price completed requests and build the run report; the closing
+        half of the tick-level API."""
+        compile_s = self._compile_s
+        log_start = self._log_start
         wall = self._now(self._t_start)
         for r in results:
             if self.drafter is not None:

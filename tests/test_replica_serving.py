@@ -1,0 +1,462 @@
+"""Chaos suite: fault-tolerant replica-set serving (docs/fault-tolerance.md).
+
+Four pillars, all on the deterministic :class:`StepClock` simulator:
+
+* **Op-stream invariants** (hypothesis): random interleavings of
+  {submit, kill, revive, reload, step} against a live 3-replica fleet,
+  auditing ``ReplicaSet.check()`` (R1-R4) plus HRW affinity stability
+  after every op — a request is never lost or completed twice, and a
+  key's route only moves when its replica stopped accepting.
+* **Kill-mid-decode parity**: crash the busiest replica while it is
+  decoding; the requeued requests' greedy tokens must be bit-identical
+  to an unkilled single-engine run, across dense/MoE/hybrid families
+  and dense/paged KV layouts.
+* **Determinism**: identical (workload, failure schedule, dt) triples
+  produce bit-identical fleet metrics JSON, including requeue latencies.
+* **Rolling reload**: a checkpoint save mid-run triggers a
+  watcher-driven drain → swap → rejoin cycle that drops no in-flight
+  request and pins every generation to exactly one weight version.
+
+The hypothesis classes skip (like ``test_scheduler_properties.py``) when
+the package is absent; everything else runs on the base install.
+"""
+
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, CheckpointWatcher
+from repro.configs.registry import get_config, smoke_config
+from repro.models.api import build_model
+from repro.runtime.failures import FailureInjector, SimulatedFailure
+from repro.serve import (Replica, ReplicaSet, Request, ServeEngine,
+                         StepClock, resolve_drafter)
+from repro.serve.replica import DEAD, DRAINING, HEALTHY
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # container base install; CI tier1 has it
+    HAVE_HYPOTHESIS = False
+
+    def given(**_kw):        # decorators must still import-evaluate on
+        return lambda fn: fn  # the skipped classes
+
+    def settings(**_kw):
+        return lambda fn: fn
+
+    class st:                # noqa: N801 — stands in for strategies
+        @staticmethod
+        def booleans():
+            return None
+
+        @staticmethod
+        def integers(*_a, **_k):
+            return None
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS, reason="property tests need the hypothesis package")
+
+# dense attention / MoE / attention+SSM hybrid — the three families whose
+# KV state a crash destroys in structurally different ways
+PARITY_FAMILIES = ["llama3-8b", "moonshot-v1-16b-a3b", "zamba2-1.2b"]
+
+_MAX_LEN = 48
+_N_SLOTS = 2
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _release_executables():
+    # Same hygiene as test_slo_serving: this module compiles several
+    # engine variants; drop them on the way out.
+    yield
+    from repro.serve.engine import _clear_compile_cache
+    _clear_compile_cache()
+    jax.clear_caches()
+
+
+_BUILT = {}
+
+
+def _built(arch):
+    if arch not in _BUILT:
+        cfg = smoke_config(get_config(arch))
+        model = build_model(cfg)
+        _BUILT[arch] = (cfg, model, model.init(jax.random.PRNGKey(0)))
+    return _BUILT[arch]
+
+
+def _factory(model, params, clock, *, paged=False):
+    def build():
+        kw = dict(paged=True, block_size=8, n_blocks=24) if paged else {}
+        return ServeEngine(model, params, n_slots=_N_SLOTS,
+                           max_len=_MAX_LEN, clock=clock, **kw)
+    return build
+
+
+def _fleet(arch="llama3-8b", *, n=3, paged=False, dt=1e-3, **kw):
+    _, model, params = _built(arch)
+    clock = StepClock(dt)
+    rs = ReplicaSet(_factory(model, params, clock, paged=paged),
+                    n_replicas=n, clock=clock, **kw)
+    return rs, params
+
+
+def _workload(n=6, prompt_len=6, gen=4, spacing_s=2e-3):
+    """Deterministic open-loop workload with colliding affinity keys:
+    prompts cycle over two shared prefixes so routing is non-trivial."""
+    reqs = []
+    for uid in range(n):
+        prefix = (uid % 2 + 1,) * 4
+        prompt = prefix + tuple(2 + (uid + i) % 5
+                                for i in range(prompt_len - 4))
+        reqs.append(Request(uid=uid, prompt=prompt, max_new_tokens=gen,
+                            arrival_s=uid * spacing_s))
+    return reqs
+
+
+def _drain(rs, limit=4000):
+    """Step the fleet to completion, reviving any dead replicas first."""
+    for rid in range(len(rs.replicas)):
+        if not rs.replicas[rid].alive:
+            rs.revive(rid)
+    steps = 0
+    while rs.outstanding or rs.reloading:
+        rs.step()
+        steps += 1
+        assert steps < limit, f"fleet failed to drain ({rs.outstanding} left)"
+    return rs.finish()
+
+
+def _tokens(results):
+    return {r.uid: tuple(np.asarray(r.tokens).tolist()) for r in results}
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: op-stream invariants
+# ---------------------------------------------------------------------------
+
+# op vocabulary mirrors ReplicaSet's public surface; rid/prompt indices
+# are taken modulo the live sizes inside the test
+_CHAOS_OPS = st.lists(
+    st.one_of(
+        st.tuples(st.just("submit"), st.integers(0, 3), st.integers(1, 4)),
+        st.tuples(st.just("kill"), st.integers(0, 2)),
+        st.tuples(st.just("revive"), st.integers(0, 2)),
+        st.tuples(st.just("reload")),
+        st.tuples(st.just("step"), st.integers(1, 3)),
+    ),
+    min_size=1, max_size=12) if HAVE_HYPOTHESIS else None
+
+_PROBE_PROMPTS = [(1, 1, 1, 1, 5, 6), (2, 2, 2, 2, 5, 6),
+                  (3, 4, 5, 6, 7, 8), (9, 9, 2, 3, 4, 5)]
+
+
+@needs_hypothesis
+class TestChaosOpStream:
+    @given(ops=_CHAOS_OPS)
+    @settings(max_examples=15, deadline=None)
+    def test_invariants_under_random_ops(self, ops):
+        """R1-R4 + affinity stability hold through arbitrary interleavings
+        of the chaos vocabulary, and the fleet always drains to done with
+        every submitted request completed exactly once."""
+        rs, params = _fleet()
+        uid = 0
+        version = 0
+        for op in ops:
+            accepting_old = {r.rid for r in rs.replicas if r.accepting}
+            routes_old = {p: rs.route(p) for p in _PROBE_PROMPTS}
+            if op[0] == "submit":
+                _, pi, gen = op
+                prefix = (pi % 2 + 1,) * 4
+                rs.submit(Request(uid=uid, prompt=prefix + (pi + 2, 7),
+                                  max_new_tokens=gen, arrival_s=0.0))
+                uid += 1
+            elif op[0] == "kill":
+                rs.kill(op[1])
+            elif op[0] == "revive":
+                rs.revive(op[1])
+            elif op[0] == "reload":
+                version += 1
+                rs.begin_reload(version, params)
+            else:
+                for _ in range(op[1]):
+                    rs.step()
+            rs.check()
+            # affinity stability: a key moves only because its old target
+            # stopped accepting, or a better (HRW-ranked) replica rejoined
+            accepting_new = {r.rid for r in rs.replicas if r.accepting}
+            for p, new_rid in ((p, rs.route(p)) for p in _PROBE_PROMPTS):
+                old_rid = routes_old[p]
+                if new_rid == old_rid:
+                    continue
+                assert (old_rid is None
+                        or old_rid not in accepting_new
+                        or (new_rid is not None
+                            and new_rid in accepting_new - accepting_old)), \
+                    f"key {p} moved {old_rid}->{new_rid} with both accepting"
+            if accepting_new == accepting_old:
+                assert {p: rs.route(p) for p in _PROBE_PROMPTS} == \
+                    routes_old, "routes changed with a stable accepting set"
+        results, report = _drain(rs)
+        rs.check()
+        assert report["lost_requests"] == 0
+        assert {r.uid for r in results} == set(range(uid))
+        assert report["completed"] == uid
+        assert report["reload_dropped"] == 0
+
+    @given(kill_first=st.booleans(), n_requests=st.integers(1, 5))
+    @settings(max_examples=10, deadline=None)
+    def test_requests_survive_total_fleet_loss(self, kill_first, n_requests):
+        """Killing every replica parks the work (route -> None, nothing
+        lost); revival requeues and completes all of it."""
+        rs, _ = _fleet(n=2)
+        for req in _workload(n_requests, spacing_s=0.0):
+            rs.submit(req)
+        if not kill_first:
+            rs.step()
+        rs.kill(0)
+        rs.kill(1)
+        rs.check()
+        assert rs.route(_PROBE_PROMPTS[0]) is None
+        with pytest.raises(SimulatedFailure):
+            rs.run(max_steps=10)
+        results, report = _drain(rs)
+        assert report["lost_requests"] == 0
+        assert len(results) == n_requests
+
+
+# ---------------------------------------------------------------------------
+# kill-mid-decode parity
+# ---------------------------------------------------------------------------
+
+
+def _busiest(rs):
+    return max((r for r in rs.replicas if r.alive),
+               key=lambda r: (len(r.uids), -r.rid)).rid
+
+
+class TestKillMidDecodeParity:
+    @pytest.mark.parametrize("arch", PARITY_FAMILIES)
+    @pytest.mark.parametrize("paged", [False, True],
+                             ids=["dense-kv", "paged-kv"])
+    def test_requeued_tokens_bit_identical(self, arch, paged):
+        """Crash the replica that owns the most in-flight decodes; the
+        requeued requests restart from their prompts elsewhere and must
+        emit greedy tokens bit-identical to an unkilled single engine."""
+        _, model, params = _built(arch)
+        requests = _workload(8, gen=8)
+
+        clock = StepClock(1e-3)
+        engine = _factory(model, params, clock, paged=paged)()
+        baseline, _ = engine.run(requests)
+
+        rs, _ = _fleet(arch, paged=paged)
+        killed = []
+
+        def kill_busiest(fleet):
+            rid = _busiest(fleet)
+            fleet.kill(rid)
+            killed.append(rid)
+
+        results, report = rs.run(requests, actions={5: kill_busiest})
+        rs.check()
+        assert killed and report["kills"] == 1
+        assert report["requeues"] >= 1, \
+            "kill hit an idle replica; parity was not exercised"
+        assert report["deaths_detected"] == 1
+        assert report["lost_requests"] == 0
+        assert _tokens(results) == _tokens(baseline)
+
+    def test_requeue_latency_measured(self):
+        """Requeued requests carry a positive detect+redispatch latency
+        (the heartbeat monitor needs miss_limit silent steps)."""
+        rs, _ = _fleet(miss_limit=2)
+        results, report = rs.run(_workload(8, gen=8),
+                                 actions={5: lambda f: f.kill(_busiest(f))})
+        assert report["requeued_requests"] >= 1
+        assert report["requeue_latency_ms"]["p50"] > 0.0
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+
+
+class TestFleetDeterminism:
+    def test_identical_triples_give_identical_metrics_json(self, tmp_path):
+        """(workload, failure schedule, dt) is the complete state: two
+        runs agree bit-for-bit on the fleet report JSON, requeue
+        latencies and all."""
+
+        def once(run_dir):
+            mgr = CheckpointManager(str(run_dir), keep=2)
+            _, model, params = _built("llama3-8b")
+            clock = StepClock(1e-3)
+            rs = ReplicaSet(
+                _factory(model, params, clock), n_replicas=3, clock=clock,
+                failure_injectors={1: FailureInjector(fail_at_steps=[6])},
+                watcher=CheckpointWatcher(mgr),
+                load_params=lambda step: mgr.restore(params)[0])
+            actions = {10: lambda f: mgr.save(1, params),
+                       14: lambda f: f.revive(1)}
+            results, report = rs.run(_workload(8), actions=actions)
+            rs.check()
+            return _tokens(results), json.dumps(report, sort_keys=True)
+
+        toks_a, json_a = once(tmp_path / "a")
+        toks_b, json_b = once(tmp_path / "b")
+        assert toks_a == toks_b
+        assert json_a == json_b
+        report = json.loads(json_a)
+        assert report["kills"] == 1 and report["reloads_completed"] == 1
+
+    def test_different_failure_schedule_changes_metrics(self):
+        def once(fail_step):
+            rs, _ = _fleet(failure_injectors={
+                1: FailureInjector(fail_at_steps=[fail_step])})
+            _, report = rs.run(_workload(6))
+            return report
+        early, late = once(2), once(9)
+        assert json.dumps(early, sort_keys=True) != \
+            json.dumps(late, sort_keys=True)
+        # ... but the serving outcome is failure-schedule independent
+        assert early["lost_requests"] == late["lost_requests"] == 0
+        assert early["completed"] == late["completed"] == 6
+
+
+# ---------------------------------------------------------------------------
+# rolling reload
+# ---------------------------------------------------------------------------
+
+
+class TestRollingReload:
+    def test_watcher_reload_drops_nothing(self, tmp_path):
+        """A checkpoint landing mid-run rolls new weights across the
+        fleet replica-by-replica; every in-flight request completes and
+        every live replica ends on the new version."""
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        _, model, params = _built("llama3-8b")
+        clock = StepClock(1e-3)
+        rs = ReplicaSet(_factory(model, params, clock), n_replicas=3,
+                        clock=clock, watcher=CheckpointWatcher(mgr),
+                        load_params=lambda step: mgr.restore(params)[0])
+        results, report = rs.run(
+            _workload(8), actions={6: lambda f: mgr.save(1, params)})
+        rs.check()
+        assert report["reloads_completed"] == 1
+        assert report["reload_dropped"] == 0
+        assert report["lost_requests"] == 0
+        assert len(results) == 8
+        assert [r.param_version for r in rs.replicas] == [1, 1, 1]
+        assert all(r.reloads == 1 for r in rs.replicas)
+
+    def test_reload_versions_never_skipped(self):
+        """A reload requested while one is rolling is deferred, not
+        dropped: both complete, in order."""
+        rs, params = _fleet()
+        rs.begin_reload(1, params)
+        rs.begin_reload(2, params)
+        steps = 0
+        while rs.reloading:
+            rs.step()
+            rs.check()
+            steps += 1
+            assert steps < 100
+        assert rs.reloads_completed == 2
+        assert [r.param_version for r in rs.replicas] == [2, 2, 2]
+
+    def test_dead_replica_skipped_then_stale_after_revive(self):
+        """A replica dead during the roll is skipped (it has no engine to
+        swap); revival brings it back on the *old* version — stale until
+        the next checkpoint, exactly like a rejoining host."""
+        rs, params = _fleet()
+        rs.kill(1)
+        rs.begin_reload(1, params)
+        steps = 0
+        while rs.reloading:
+            rs.step()
+            steps += 1
+            assert steps < 100
+        rs.revive(1)
+        assert [r.param_version for r in rs.replicas] == [1, 0, 1]
+
+    def test_reload_params_rejects_mismatched_tree(self):
+        _, model, params = _built("llama3-8b")
+        engine = ServeEngine(model, params, n_slots=_N_SLOTS,
+                             max_len=_MAX_LEN, clock=StepClock(1e-3))
+        with pytest.raises(ValueError):
+            engine.reload_params({"not": "the right tree"})
+
+
+# ---------------------------------------------------------------------------
+# replica lifecycle + routing units
+# ---------------------------------------------------------------------------
+
+
+class TestReplicaLifecycle:
+    def test_state_transitions_guarded(self):
+        rs, params = _fleet(n=2)
+        rep = rs.replicas[0]
+        assert rep.state == HEALTHY and rep.accepting
+        rep.begin_drain()
+        assert rep.state == DRAINING and not rep.accepting and rep.alive
+        with pytest.raises(RuntimeError):
+            rep.begin_drain()          # only healthy replicas drain
+        rep.reload(params, 1)          # drained: swap + rejoin
+        assert rep.state == HEALTHY and rep.param_version == 1
+        with pytest.raises(RuntimeError):
+            rep.reload(params, 2)      # must be draining
+        rep.kill()
+        assert rep.state == DEAD and not rep.alive
+        with pytest.raises(RuntimeError):
+            rep.submit(_workload(1)[0])
+        with pytest.raises(RuntimeError):
+            rep.tick()
+        rep.revive()
+        assert rep.state == HEALTHY and rep.revivals == 1
+
+    def test_kill_and_revive_idempotent(self):
+        rs, _ = _fleet(n=2)
+        assert rs.kill(0) and not rs.kill(0)
+        assert rs.revive(0) and not rs.revive(0)
+
+    def test_spec_decode_rejected(self):
+        _, model, params = _built("llama3-8b")
+        clock = StepClock(1e-3)
+
+        def build():
+            return ServeEngine(model, params, n_slots=_N_SLOTS,
+                               max_len=_MAX_LEN, clock=clock,
+                               drafter=resolve_drafter("ngram?n=3", 3))
+        with pytest.raises(ValueError, match="speculative"):
+            Replica(0, build)
+
+    def test_hrw_moves_only_dead_replicas_keys(self):
+        """The routing property behind prefix-cache survival: killing one
+        replica re-homes exactly the keys it owned."""
+        rs, _ = _fleet()
+        keys = [(a, b, c, d, 5, 6) for a in (1, 2) for b in (1, 3)
+                for c in (2, 4) for d in (1, 5)]
+        before = {k: rs.route(k) for k in keys}
+        assert len(set(before.values())) > 1, "probe keys all co-located"
+        victim = rs.replicas[1].rid
+        rs.kill(victim)
+        after = {k: rs.route(k) for k in keys}
+        for k in keys:
+            if before[k] != victim:
+                assert after[k] == before[k], \
+                    f"key {k} moved off a live replica"
+            else:
+                assert after[k] != victim
+        rs.revive(victim)
+        assert {k: rs.route(k) for k in keys} == before
+
+    def test_duplicate_uid_rejected(self):
+        rs, _ = _fleet(n=2)
+        req = _workload(1)[0]
+        rs.submit(req)
+        with pytest.raises(ValueError, match="duplicate"):
+            rs.submit(req)

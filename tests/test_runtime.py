@@ -1,9 +1,22 @@
-"""Unit tests for the runtime fault-tolerance helpers."""
+"""Unit tests for the runtime fault-tolerance helpers.
 
+Unlike ``test_substrate.py`` (which skips wholesale when hypothesis is
+absent), this module runs on the base install — it is where the
+checkpoint manager's error paths, the supervisor's restart budget, and
+replica-fleet sizing are actually pinned.
+"""
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
 import pytest
 
+from repro.checkpoint import CheckpointManager, CheckpointWatcher
+from repro.runtime.elastic import plan_replicas
 from repro.runtime.failures import FailureInjector, SimulatedFailure
 from repro.runtime.heartbeat import HeartbeatMonitor, StragglerReport
+from repro.runtime.supervisor import Supervisor
 
 
 class TestHeartbeatMonitor:
@@ -84,3 +97,213 @@ class TestFailureInjector:
     def test_is_runtime_error(self):
         with pytest.raises(RuntimeError):
             FailureInjector([0]).maybe_fail(0)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint manager
+# ---------------------------------------------------------------------------
+
+
+def _tree(k=0):
+    return {"params": {"w": jnp.arange(6, dtype=jnp.float32) + k,
+                       "b": jnp.ones((2,), jnp.bfloat16) * k},
+            "step": jnp.asarray(k, jnp.int32)}
+
+
+class TestCheckpointManager:
+    def test_save_restore_roundtrip(self, tmp_path):
+        m = CheckpointManager(str(tmp_path))
+        m.save(3, _tree(3), metadata={"loss": 1.5})
+        restored, meta = m.restore(_tree())
+        assert meta == {"loss": 1.5}
+        np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                      np.asarray(_tree(3)["params"]["w"]))
+        # bfloat16 is not npz-native; the uint bit-cast must round-trip
+        assert restored["params"]["b"].dtype == jnp.bfloat16
+        np.testing.assert_array_equal(
+            np.asarray(restored["params"]["b"], np.float32),
+            np.asarray(_tree(3)["params"]["b"], np.float32))
+
+    def test_restore_by_step(self, tmp_path):
+        m = CheckpointManager(str(tmp_path))
+        for s in (2, 7):
+            m.save(s, _tree(s))
+        old, _ = m.restore(_tree(), step=2)
+        assert int(old["step"]) == 2
+        latest, _ = m.restore(_tree())
+        assert int(latest["step"]) == 7
+
+    def test_retention_keeps_newest_n(self, tmp_path):
+        m = CheckpointManager(str(tmp_path), keep=2)
+        for s in (1, 5, 9, 12):
+            m.save(s, _tree(s))
+        assert m.available_steps() == [9, 12]
+        assert m.latest_step() == 12
+        assert sorted(os.listdir(tmp_path)) == ["step_12", "step_9"]
+
+    def test_async_save_then_wait(self, tmp_path):
+        m = CheckpointManager(str(tmp_path))
+        m.save_async(4, _tree(4))
+        m.wait()
+        restored, _ = m.restore(_tree())
+        assert int(restored["step"]) == 4
+
+    def test_async_failure_surfaces_on_next_call(self, tmp_path,
+                                                 monkeypatch):
+        """A background write error is reported like a real multi-host
+        checkpointer's: on the *next* save, not silently swallowed."""
+        m = CheckpointManager(str(tmp_path))
+
+        def boom(*a, **kw):
+            raise OSError("disk gone")
+
+        monkeypatch.setattr("repro.checkpoint.manager.np.savez", boom)
+        m.save_async(1, _tree(1))
+        m.wait()
+        monkeypatch.undo()
+        with pytest.raises(RuntimeError, match="async checkpoint save"):
+            m.save(2, _tree(2))
+        m.save(3, _tree(3))             # error consumed; manager recovers
+        assert m.available_steps() == [3]
+
+    def test_no_checkpoints_raises_filenotfound(self, tmp_path):
+        with pytest.raises(FileNotFoundError):
+            CheckpointManager(str(tmp_path)).restore(_tree())
+
+    def test_missing_template_key_raises(self, tmp_path):
+        m = CheckpointManager(str(tmp_path))
+        m.save(0, {"a": jnp.ones(3)})
+        with pytest.raises(KeyError, match="missing keys"):
+            m.restore({"a": jnp.ones(3), "b": jnp.ones(2)})
+
+    def test_truncated_shard_names_file(self, tmp_path):
+        m = CheckpointManager(str(tmp_path))
+        m.save(5, _tree(5))
+        shard = tmp_path / "step_5" / "shard_0.npz"
+        shard.write_bytes(shard.read_bytes()[:40])
+        with pytest.raises(RuntimeError,
+                           match="corrupt or truncated") as exc:
+            m.restore(_tree())
+        assert "step_5" in str(exc.value) and "shard_0.npz" in str(exc.value)
+
+    def test_corrupt_manifest_names_step(self, tmp_path):
+        m = CheckpointManager(str(tmp_path))
+        m.save(6, _tree(6))
+        (tmp_path / "step_6" / "manifest_0.json").write_text("{not json")
+        with pytest.raises(RuntimeError, match="manifest is corrupt"):
+            m.restore(_tree())
+
+    def test_unfinished_write_is_invisible(self, tmp_path):
+        """A crash mid-save (arrays written, manifest missing) must leave
+        the step invisible rather than restorable-but-broken."""
+        m = CheckpointManager(str(tmp_path))
+        m.save(1, _tree(1))
+        os.makedirs(tmp_path / "step_2")
+        (tmp_path / "step_2" / "shard_0.npz.tmp").write_bytes(b"partial")
+        assert m.available_steps() == [1]
+        restored, _ = m.restore(_tree())
+        assert int(restored["step"]) == 1
+
+
+class TestCheckpointWatcher:
+    def test_reports_each_new_step_once(self, tmp_path):
+        m = CheckpointManager(str(tmp_path))
+        w = CheckpointWatcher(m)
+        assert w.poll() is None
+        m.save(3, _tree(3))
+        assert w.poll() == 3
+        assert w.poll() is None            # seen; no re-report
+        m.save(8, _tree(8))
+        assert w.poll() == 8
+
+    def test_gc_shrinkage_never_rereports(self, tmp_path):
+        m = CheckpointManager(str(tmp_path), keep=1)
+        w = CheckpointWatcher(m)
+        m.save(4, _tree(4))
+        assert w.poll() == 4
+        m.save(9, _tree(9))                # GC deletes step_4
+        assert w.poll() == 9
+        assert m.available_steps() == [9]
+        assert w.poll() is None            # 9 already seen; 4 is gone
+
+    def test_start_step_suppresses_history(self, tmp_path):
+        m = CheckpointManager(str(tmp_path))
+        m.save(5, _tree(5))
+        w = CheckpointWatcher(m, start_step=5)
+        assert w.poll() is None
+        m.save(6, _tree(6))
+        assert w.poll() == 6
+
+
+# ---------------------------------------------------------------------------
+# supervisor restart budget
+# ---------------------------------------------------------------------------
+
+
+class TestSupervisorBudget:
+    def _run(self, tmp_path, fail_steps, max_restarts):
+        mgr = CheckpointManager(str(tmp_path))
+        inj = FailureInjector(fail_steps)
+        trace = []
+
+        def train_fn(start, restored):
+            state = restored if restored is not None else 0
+            for step in range(start, 8):
+                state += step
+                inj.maybe_fail(step)
+                mgr.save(step, {"acc": jnp.asarray(state)})
+                trace.append(step)
+            return state
+
+        def restore_fn(step):
+            t, _ = mgr.restore({"acc": jnp.asarray(0)}, step=step)
+            return int(t["acc"])
+
+        res = Supervisor(mgr, max_restarts=max_restarts).run(
+            train_fn, restore_fn=restore_fn)
+        return res, trace
+
+    def test_budget_exhausted_reports_incomplete(self, tmp_path):
+        # 4 scheduled failures vs a budget of 2 restarts: give up, say so
+        res, _ = self._run(tmp_path, [1, 2, 3, 4], max_restarts=2)
+        assert not res.completed
+        assert res.final_state is None
+        assert res.restarts == 3           # max_restarts + the last straw
+        assert len(res.failures) == 3
+
+    def test_resume_is_bit_identical_to_unfailed_run(self, tmp_path):
+        clean, clean_trace = self._run(tmp_path / "clean", [], 0)
+        faulty, faulty_trace = self._run(tmp_path / "faulty", [3, 5], 3)
+        assert faulty.completed and faulty.restarts == 2
+        assert faulty.final_state == clean.final_state == sum(range(8))
+        # no step is recomputed after its checkpoint landed
+        assert faulty_trace == sorted(set(faulty_trace)) == clean_trace
+
+    def test_within_budget_failures_are_logged(self, tmp_path):
+        res, _ = self._run(tmp_path, [2], max_restarts=3)
+        assert res.completed and res.restarts == 1
+        assert len(res.failures) == 1 and "step 2" in res.failures[0]
+
+
+# ---------------------------------------------------------------------------
+# elastic replica-fleet sizing
+# ---------------------------------------------------------------------------
+
+
+class TestPlanReplicas:
+    def test_floor_division_of_devices(self):
+        assert plan_replicas(8) == 8
+        assert plan_replicas(8, devices_per_replica=2) == 4
+        assert plan_replicas(7, devices_per_replica=2) == 3
+
+    def test_min_replicas_floor(self):
+        assert plan_replicas(1, devices_per_replica=4) == 1
+        assert plan_replicas(2, devices_per_replica=4, min_replicas=2) == 2
+
+    def test_rejects_bad_arguments(self):
+        with pytest.raises(ValueError):
+            plan_replicas(0)
+        with pytest.raises(ValueError):
+            plan_replicas(4, devices_per_replica=0)
+        with pytest.raises(ValueError):
+            plan_replicas(4, min_replicas=0)

@@ -89,3 +89,8 @@ class TestSchemaFixtures:
         v4 = _fixture_record("serving-v4")
         v4["config"]["mesh"]["n_devices"] += 1
         assert registry.validate(v4)
+
+        # serving-v7: comparison counters must mirror the chaos fleet.
+        v7 = _fixture_record("serving-v7")
+        v7["comparison"]["requeues"] += 1
+        assert any("requeues" in e for e in registry.validate(v7))
