@@ -64,10 +64,14 @@ def paged_decode_cell(*, arch: str = "llama3-8b", n_slots: int = 64,
     """
     from repro.configs.registry import get_config
     from repro.core.cost_model import TPU_V5E
+    from repro.launch.costing import kv_bytes_per_token
     cfg = get_config(arch)
-    kv_itemsize = 1 if cfg.kv_cache_dtype == "int8" else 2
-    kv_bytes_tok = cfg.n_layers * cfg.n_kv_heads * cfg.head_dim \
-        * 2 * kv_itemsize
+    # CacheSpec-derived, NOT a hand formula: int8 scale planes and the
+    # hybrid's attn-application-only KV stacks are part of the stream the
+    # engine's _kv_bytes_tick meters, and the static cost audit
+    # (analysis/cost_audit.py) pins all three to the same number
+    # (tests/test_cost_audit.py::TestKvBytesAgree)
+    kv_bytes_tok = kv_bytes_per_token(cfg)
     max_blocks = max_len // block_size
     bw = TPU_V5E.hbm_bandwidth
     rows = []

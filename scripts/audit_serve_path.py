@@ -10,11 +10,19 @@ for the rule catalog.
   PYTHONPATH=src python scripts/audit_serve_path.py
   PYTHONPATH=src python scripts/audit_serve_path.py --json report.json
   PYTHONPATH=src python scripts/audit_serve_path.py --families ssm,hybrid
+  PYTHONPATH=src python scripts/audit_serve_path.py --cost \\
+      --cost-json cost-report.json
 
-``--json`` writes a schema-tagged ``analysis-v1`` record and
-self-validates it against the registry in ``check_bench_schema.py``
-before exiting, so a malformed report can never slip through CI as a
-pass.
+``--cost`` additionally walks every target's jaxpr with trip-count-aware
+FLOP/byte accounting and reconciles it against the analytic model in
+``launch/costing.py`` (rules ``audit-cost-drift`` /
+``audit-unbounded-loop``); ``--cost-json`` writes the per-target
+``analysis-v2`` record. ``--json`` writes a schema-tagged ``analysis-v1``
+record; both reports self-validate against the registry in
+``check_bench_schema.py`` before exiting, so a malformed report can
+never slip through CI as a pass. Exit status is 1 only on error-severity
+violations — warnings (diagnostics on unchecked helper targets) print
+but do not gate.
 """
 
 from __future__ import annotations
@@ -39,9 +47,24 @@ def _load_schema_registry():
     return mod
 
 
+def _self_validated_dump(report, path) -> bool:
+    errors = _load_schema_registry().validate(report)
+    if errors:
+        for e in errors:
+            print(f"INTERNAL: report fails its own schema: {e}",
+                  file=sys.stderr)
+        return False
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {path} ({report['schema']})")
+    return True
+
+
 def main(argv=None) -> int:
     from repro.analysis import (SERVE_FAMILIES, audit_targets, build_report,
+                                build_cost_report, cost_audit_targets,
                                 enumerate_targets, run_lint, summarize)
+    from repro.analysis.cost_audit import FLOPS_RTOL, KV_BYTES_RTOL
 
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--families", default=",".join(SERVE_FAMILIES),
@@ -52,9 +75,17 @@ def main(argv=None) -> int:
                     help="jaxpr audit only")
     ap.add_argument("--skip-jaxpr", action="store_true",
                     help="lint only")
+    ap.add_argument("--cost", action="store_true",
+                    help="trip-count-aware static cost audit reconciled "
+                         "against launch/costing.py")
     ap.add_argument("--json", metavar="PATH",
                     help="write a schema-validated analysis-v1 report")
+    ap.add_argument("--cost-json", metavar="PATH",
+                    help="write a schema-validated analysis-v2 cost report "
+                         "(implies --cost)")
     args = ap.parse_args(argv)
+    if args.cost_json:
+        args.cost = True
 
     families = tuple(f for f in args.families.split(",") if f)
     mesh_modes = tuple(m for m in args.mesh_modes.split(",") if m)
@@ -76,6 +107,19 @@ def main(argv=None) -> int:
         print(f"linted {files_linted} source files")
         violations.extend(lint_violations)
 
+    cost_records, cost_violations = [], []
+    if args.cost:
+        cost_targets = targets or enumerate_targets(
+            families=families, mesh_modes=mesh_modes)
+        print(f"cost-auditing {len(cost_targets)} targets against "
+              "launch/costing.py...")
+        cost_records, cost_violations = cost_audit_targets(cost_targets)
+        checked = sum(1 for r in cost_records if r["drift_checked"])
+        unbounded = sum(r["loops"]["unbounded"] for r in cost_records)
+        print(f"cost audit: {len(cost_records)} targets, {checked} "
+              f"drift-checked, {unbounded} unbounded loops")
+        violations.extend(cost_violations)
+
     for v in violations:
         print(v.format())
     print(f"{summarize(violations)} [{time.time() - t0:.1f}s]")
@@ -87,18 +131,21 @@ def main(argv=None) -> int:
             config={"families": list(families),
                     "mesh_modes": list(mesh_modes),
                     "skip_lint": args.skip_lint,
-                    "skip_jaxpr": args.skip_jaxpr})
-        errors = _load_schema_registry().validate(report)
-        if errors:
-            for e in errors:
-                print(f"INTERNAL: report fails its own schema: {e}",
-                      file=sys.stderr)
+                    "skip_jaxpr": args.skip_jaxpr,
+                    "cost": args.cost})
+        if not _self_validated_dump(report, args.json):
             return 2
-        with open(args.json, "w") as f:
-            json.dump(report, f, indent=2)
-        print(f"wrote {args.json} ({report['schema']})")
+    if args.cost_json:
+        cost_report = build_cost_report(
+            cost_records, cost_violations,
+            config={"families": list(families),
+                    "mesh_modes": list(mesh_modes),
+                    "flops_rtol": FLOPS_RTOL,
+                    "kv_bytes_rtol": KV_BYTES_RTOL})
+        if not _self_validated_dump(cost_report, args.cost_json):
+            return 2
 
-    return 1 if violations else 0
+    return 1 if any(v.severity == "error" for v in violations) else 0
 
 
 if __name__ == "__main__":

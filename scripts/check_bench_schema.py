@@ -3,7 +3,8 @@
 
 Every machine-readable artifact the repo emits carries a ``schema`` tag —
 serving benchmark records (``serving-v1`` .. ``serving-v7``) and the
-static-analysis report (``analysis-v1``). Each schema registers a
+static-analysis reports (``analysis-v1`` invariants, ``analysis-v2``
+cost audit). Each schema registers a
 validator in :data:`SCHEMAS` via :func:`register`; adding a new record
 format means adding one decorated function here.
 
@@ -176,6 +177,27 @@ _ANALYSIS_SUMMARY = {
 _ANALYSIS_VIOLATION = {
     "rule": STR, "severity": STR, "target": STR, "file": STR, "line": int,
     "message": STR, "provenance": STR,
+}
+
+_COST_SUMMARY = {
+    "targets_costed": int, "targets_drift_checked": int, "violations": int,
+    "unbounded_loops": int, "max_abs_drift": NUM,
+}
+
+_COST_STATIC = {
+    "flops": NUM, "gather_bytes": NUM, "scatter_bytes": NUM,
+    "kv_gather_bytes": NUM, "pallas_stream_bytes": NUM, "peak_bytes": NUM,
+    "arg_bytes": NUM, "out_bytes": NUM,
+}
+
+_COST_LOOPS = {
+    "scans": int, "pallas_grids": int, "max_trip_count": int,
+    "unbounded": int,
+}
+
+_COST_TARGET = {
+    "target": STR, "family": STR, "phase": STR, "mesh": bool,
+    "drift_checked": bool, "static": _COST_STATIC, "loops": _COST_LOOPS,
 }
 
 
@@ -387,6 +409,84 @@ def _analysis_v1(record, errors):
         errors.append("$.summary.violations: count does not match "
                       f"len(violations) ({summary.get('violations')} vs "
                       f"{len(violations)})")
+
+
+@register("analysis-v2")
+def _analysis_v2(record, errors):
+    """Static cost-audit report: per-target static vs analytic counts.
+
+    Cross-field invariants beyond key/type checks:
+
+    * ``summary.violations`` / ``summary.targets_costed`` /
+      ``summary.unbounded_loops`` must equal what the record bodies sum to;
+    * a ``drift_checked`` target must carry ``analytic.flops`` and
+      ``drift.flops``, and the drift ratio must actually BE
+      ``static/analytic − 1`` (a report that states one number and
+      implies another is how cost models rot);
+    * an unchecked target must carry ``analytic: null`` — coverage is
+      reported, never faked.
+    """
+    _check(record, {"config": dict, "summary": _COST_SUMMARY}, "$", errors)
+    violations = record.get("violations")
+    if not isinstance(violations, list):
+        errors.append("$.violations: expected list")
+        return
+    for i, v in enumerate(violations):
+        _check(v, _ANALYSIS_VIOLATION, f"$.violations[{i}]", errors)
+        if isinstance(v, dict) and v.get("severity") not in ("error",
+                                                            "warning"):
+            errors.append(f"$.violations[{i}].severity: expected "
+                          f"'error' or 'warning', got {v.get('severity')!r}")
+    targets = record.get("targets")
+    if not isinstance(targets, list) or not targets:
+        errors.append("$.targets: expected non-empty list")
+        return
+    n_checked = n_unbounded = 0
+    for i, t in enumerate(targets):
+        path = f"$.targets[{i}]"
+        _check(t, _COST_TARGET, path, errors)
+        if not isinstance(t, dict):
+            continue
+        loops = t.get("loops")
+        if isinstance(loops, dict) and isinstance(loops.get("unbounded"),
+                                                  int):
+            n_unbounded += loops["unbounded"]
+        if not t.get("drift_checked"):
+            if t.get("analytic") is not None:
+                errors.append(f"{path}.analytic: expected null on an "
+                              "unchecked target (drift_checked=false)")
+            continue
+        n_checked += 1
+        analytic, drift = t.get("analytic"), t.get("drift")
+        if not isinstance(analytic, dict) or not isinstance(drift, dict):
+            errors.append(f"{path}: drift_checked target must carry "
+                          "analytic and drift objects")
+            continue
+        _check(analytic, {"flops": NUM}, f"{path}.analytic", errors)
+        _check(drift, {"flops": NUM}, f"{path}.drift", errors)
+        static = t.get("static", {})
+        for qty, stated in drift.items():
+            a = analytic.get(qty)
+            s = static.get(qty) if isinstance(static, dict) else None
+            if not all(isinstance(x, numbers.Real) and not isinstance(x, bool)
+                       for x in (a, s, stated)):
+                continue            # key/type errors already reported
+            implied = (s / a - 1.0) if a else (0.0 if not s else None)
+            if implied is not None and abs(stated - implied) > 1e-9 \
+                    + 1e-9 * abs(implied):
+                errors.append(
+                    f"{path}.drift.{qty}: stated ratio {stated} does not "
+                    f"equal static/analytic - 1 = {implied} "
+                    f"(static={s}, analytic={a})")
+    summary = record.get("summary", {})
+    if isinstance(summary, dict):
+        for key, got in (("violations", len(violations)),
+                         ("targets_costed", len(targets)),
+                         ("targets_drift_checked", n_checked),
+                         ("unbounded_loops", n_unbounded)):
+            if isinstance(summary.get(key), int) and summary[key] != got:
+                errors.append(f"$.summary.{key}: count does not match the "
+                              f"record body ({summary[key]} vs {got})")
 
 
 def validate(record: dict) -> list:

@@ -1,6 +1,6 @@
 """Static analysis for the serve path: jaxpr auditing + repo lint.
 
-Two passes, both run by ``scripts/audit_serve_path.py`` and gated in CI:
+Three passes, all run by ``scripts/audit_serve_path.py`` and gated in CI:
 
 * :mod:`repro.analysis.jaxpr_audit` traces every serve-path callable
   (families × dense/paged × mesh/no-mesh, enumerated by
@@ -10,24 +10,37 @@ Two passes, both run by ``scripts/audit_serve_path.py`` and gated in CI:
 * :mod:`repro.analysis.lint` checks the source tree itself for the
   regression patterns learned in PRs 1–5 (per-instance ``jax.jit``,
   blocking tick loops, per-token ``jnp`` calls, the deprecated
-  ``repro.core.moa`` shim) plus a dead-module census.
+  ``repro.core.moa`` shim, stale suppressions) plus a dead-module census;
+* :mod:`repro.analysis.cost_audit` walks the same jaxprs with
+  trip-count-aware FLOP/byte accounting and reconciles every target
+  against the analytic model in :mod:`repro.launch.costing` (the
+  ``analysis-v2`` record, ``--cost`` gate).
 
 See docs/static-analysis.md for the rule catalog and how to allowlist a
 site or add a rule.
 """
 
+from repro.analysis.cost_audit import (DRIFT_PHASES, FLOPS_RTOL,
+                                       KV_BYTES_RTOL, LoopRecord, StaticCost,
+                                       cost_audit_targets, cost_target,
+                                       count_jaxpr, reconcile_target)
 from repro.analysis.jaxpr_audit import (AuditTarget, audit_target,
                                         audit_targets)
 from repro.analysis.lint import run_lint
-from repro.analysis.report import (ANALYSIS_SCHEMA, RULES, Violation,
+from repro.analysis.report import (ANALYSIS_SCHEMA, ANALYSIS_V2_SCHEMA,
+                                   RULES, Violation, build_cost_report,
                                    build_report, summarize)
-from repro.analysis.targets import (SERVE_FAMILIES, SMOKE_BY_FAMILY,
-                                    build_family_targets, enumerate_targets,
-                                    make_audit_mesh)
+from repro.analysis.targets import (AUDIT_SHAPE, SERVE_FAMILIES,
+                                    SMOKE_BY_FAMILY, build_family_targets,
+                                    enumerate_targets, make_audit_mesh)
 
 __all__ = [
-    "ANALYSIS_SCHEMA", "RULES", "Violation", "build_report", "summarize",
+    "ANALYSIS_SCHEMA", "ANALYSIS_V2_SCHEMA", "RULES", "Violation",
+    "build_report", "build_cost_report", "summarize",
     "AuditTarget", "audit_target", "audit_targets", "run_lint",
-    "SERVE_FAMILIES", "SMOKE_BY_FAMILY", "build_family_targets",
-    "enumerate_targets", "make_audit_mesh",
+    "StaticCost", "LoopRecord", "count_jaxpr", "cost_target",
+    "cost_audit_targets", "reconcile_target",
+    "DRIFT_PHASES", "FLOPS_RTOL", "KV_BYTES_RTOL",
+    "AUDIT_SHAPE", "SERVE_FAMILIES", "SMOKE_BY_FAMILY",
+    "build_family_targets", "enumerate_targets", "make_audit_mesh",
 ]

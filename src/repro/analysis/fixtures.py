@@ -22,7 +22,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.analysis.jaxpr_audit import AuditTarget
 
-__all__ = ["JAXPR_FIXTURES", "LINT_FIXTURES", "CLEAN_LINT_FIXTURES"]
+__all__ = ["JAXPR_FIXTURES", "LINT_FIXTURES", "CLEAN_LINT_FIXTURES",
+           "COST_FIXTURES", "unbounded_while", "drifting_cost"]
 
 _BF16_44 = jax.ShapeDtypeStruct((4, 4), jnp.bfloat16)
 _KV_SHAPE = (2, 32, 2, 16)
@@ -125,6 +126,41 @@ def bad_model_collective(mesh) -> AuditTarget:
                        fn=fn, args=(_BF16_44,), mesh=mesh)
 
 
+def unbounded_while() -> AuditTarget:
+    """``lax.while_loop`` has no statically-provable trip count — its
+    dot-bearing body is counted once and ``cost_target`` must diagnose
+    the silent undercount → audit-unbounded-loop."""
+
+    def fn(x):
+        return jax.lax.while_loop(
+            lambda s: jnp.sum(s).astype(jnp.float32) < 1e6,
+            lambda s: s @ s + 1, x)
+
+    return AuditTarget(name="fixture/unbounded-while", family="dense",
+                       fn=fn, args=(_BF16_44,))
+
+
+def drifting_cost() -> Tuple[AuditTarget, Dict[str, float]]:
+    """A 4×4 matmul (128 contraction FLOPs) paired with an analytic
+    prediction seeded 25 % low — ``reconcile_target`` must flag it →
+    audit-cost-drift."""
+
+    def fn(x):
+        return x @ x
+
+    target = AuditTarget(name="fixture/cost-drift", family="dense",
+                         fn=fn, args=(_BF16_44,))
+    true_flops = 2.0 * 4 * 4 * 4
+    return target, {"flops": true_flops * 0.75}
+
+
+#: cost-audit rule id → fixture builder (proven in tests/test_cost_audit.py)
+COST_FIXTURES: Dict[str, Callable] = {
+    "audit-unbounded-loop": unbounded_while,
+    "audit-cost-drift": drifting_cost,
+}
+
+
 #: rule id → fixture builder; builders taking a mesh are marked True
 JAXPR_FIXTURES: Dict[str, Tuple[Callable, bool]] = {
     "no-host-transfer": (bad_host_transfer, False),
@@ -170,6 +206,13 @@ LINT_FIXTURES: Dict[str, Tuple[str, str]] = {
     "lint-moa-shim": ("src/repro/core/_fixture.py", _src("""
         from repro.core.moa import popcount_adder
     """)),
+    "lint-stale-allow": ("src/repro/serve/_fixture.py", _src("""
+        import jax
+
+        # audit: allow(lint-jit-in-init)
+        def build(fn):
+            return jax.jit(fn)
+    """)),
 }
 
 #: near-misses that must stay clean (scoping and suppression are part of
@@ -206,5 +249,21 @@ CLEAN_LINT_FIXTURES: Dict[str, Tuple[str, str]] = {
     """)),
     "moa-shim-in-tests": ("tests/test_fixture.py", _src("""
         from repro.core.moa import popcount_adder
+    """)),
+    # a LIVE allow is the stale rule's near-miss: it must not be flagged
+    # (same shape as "jit-in-init-allowed", asserted separately so the
+    # stale rule's contract is explicit)
+    "live-allow-not-stale": ("src/repro/launch/_fixture.py", _src("""
+        import jax
+
+        class Trainer:
+            def __init__(self, fn):
+                # audit: allow(lint-jit-in-init)
+                self.step = jax.jit(fn)
+    """)),
+    # allow-text inside a string literal is data, not a suppression —
+    # neither suppresses nor goes stale (the tokenize rationale)
+    "allow-in-string-not-stale": ("src/repro/serve/_fixture.py", _src("""
+        BANNER = "# audit: allow(lint-jit-in-init)"
     """)),
 }

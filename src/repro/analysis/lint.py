@@ -20,13 +20,22 @@ Rules (ids match :data:`repro.analysis.report.RULES`):
 * ``lint-dead-module`` — every ``src/repro`` module must be imported
   somewhere (src, tests, scripts, benchmarks, examples); package
   ``__init__``s and ``__main__``-guarded entry points are exempt.
+* ``lint-stale-allow`` — a ``# audit: allow(rule)`` comment that no
+  longer sits on (or directly above) a line producing that violation
+  suppresses nothing; it survives refactors as a standing invitation to
+  reintroduce the bug unnoticed. Suppression comments are read from real
+  COMMENT tokens (``tokenize``), never from string literals — the fixture
+  corpus in ``analysis/fixtures.py`` embeds allow-comments inside test
+  sources and must not trip the rule. Scope: wherever suppressions apply.
 """
 
 from __future__ import annotations
 
 import ast
+import io
 import os
 import re
+import tokenize
 from typing import Dict, Iterable, List, Optional, Set, Tuple
 
 from repro.analysis.report import Violation
@@ -45,6 +54,23 @@ _MOA_SHIM_FILE = "src/repro/core/moa.py"
 #: inline suppression: ``# audit: allow(<rule-id>)`` on the flagged line
 #: or the line directly above it (a rationale comment is expected there)
 _ALLOW_RE = re.compile(r"#\s*audit:\s*allow\(([\w-]+)\)")
+
+
+def _allow_comments(source: str) -> List[Tuple[int, str]]:
+    """``(line, rule)`` for every suppression in a real COMMENT token.
+
+    Tokenizing (not line-regexing) is load-bearing: fixture sources in
+    this package quote allow-comments inside string literals, which must
+    be invisible both to suppression and to the staleness check."""
+    out: List[Tuple[int, str]] = []
+    try:
+        for tok in tokenize.generate_tokens(io.StringIO(source).readline):
+            if tok.type == tokenize.COMMENT:
+                for rule in _ALLOW_RE.findall(tok.string):
+                    out.append((tok.start[0], rule))
+    except (tokenize.TokenError, SyntaxError, IndentationError):
+        pass                      # ast.parse already reports unparseables
+    return out
 
 
 class _Linter(ast.NodeVisitor):
@@ -153,16 +179,24 @@ def lint_source(rel_path: str, source: str) -> List[Violation]:
     linter.visit(tree)
     if not shim_scope:
         linter.out = [v for v in linter.out if v.rule != "lint-moa-shim"]
-    lines = source.splitlines()
+    allows = _allow_comments(source)
 
     def allowed(v: Violation) -> bool:
-        for ln in (v.line, v.line - 1):
-            if 1 <= ln <= len(lines) and v.rule in _ALLOW_RE.findall(
-                    lines[ln - 1]):
-                return True
-        return False
+        # the flagged line or the line above (rationale comments sit there)
+        return any(rule == v.rule and ln in (v.line, v.line - 1)
+                   for ln, rule in allows)
 
-    return [v for v in linter.out if not allowed(v)]
+    kept = [v for v in linter.out if not allowed(v)]
+    for ln, rule in allows:
+        if not any(v.rule == rule and v.line in (ln, ln + 1)
+                   for v in linter.out):
+            kept.append(Violation(
+                rule="lint-stale-allow", target=_LINT_TARGET, file=rel,
+                line=ln,
+                message=(f"# audit: allow({rule}) suppresses nothing — no "
+                         f"live {rule} violation on this or the next line; "
+                         "delete the comment or re-point it")))
+    return sorted(kept, key=lambda v: (v.line, v.rule))
 
 
 def _py_files(root: str, sub: str) -> Iterable[str]:

@@ -12,9 +12,11 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Sequence
 
-__all__ = ["ANALYSIS_SCHEMA", "RULES", "Violation", "build_report"]
+__all__ = ["ANALYSIS_SCHEMA", "ANALYSIS_V2_SCHEMA", "RULES", "Violation",
+           "build_report", "build_cost_report"]
 
 ANALYSIS_SCHEMA = "analysis-v1"
+ANALYSIS_V2_SCHEMA = "analysis-v2"
 
 #: rule id → one-line description (the catalog in docs/static-analysis.md)
 RULES: Dict[str, str] = {
@@ -46,6 +48,16 @@ RULES: Dict[str, str] = {
         "no new imports of the deprecated repro.core.moa shim"),
     "lint-dead-module": (
         "every src/repro module is imported by something (dead-code census)"),
+    "audit-cost-drift": (
+        "trip-count-corrected static FLOP/byte counts of every serve-path "
+        "jaxpr reconcile with launch/costing.py within tolerance"),
+    "audit-unbounded-loop": (
+        "every serve-path loop has a statically-provable trip count — a "
+        "while with none makes every derived cost a silent lower bound"),
+    "lint-stale-allow": (
+        "every '# audit: allow(rule)' comment suppresses a live violation "
+        "(a stale suppression hides nothing today and a regression "
+        "tomorrow)"),
 }
 
 
@@ -85,6 +97,43 @@ def build_report(violations: Sequence[Violation], *, targets_audited: int,
             "violations": len(violations),
             "rules_checked": sorted(RULES),
         },
+        "violations": [
+            {
+                "rule": v.rule,
+                "severity": v.severity,
+                "target": v.target,
+                "file": v.file,
+                "line": int(v.line),
+                "message": v.message,
+                "provenance": v.provenance,
+            }
+            for v in violations
+        ],
+    }
+
+
+def build_cost_report(records: Sequence[Dict], violations: Sequence[Violation],
+                      *, config: Dict) -> Dict:
+    """Assemble the ``analysis-v2`` cost-audit record: per-target static
+    vs. analytic FLOPs/bytes, drift ratios, and loop-accounting metadata
+    (see scripts/check_bench_schema.py for the cross-field invariants)."""
+    checked = [r for r in records if r.get("drift_checked")]
+    max_abs_drift = 0.0
+    for r in checked:
+        for d in (r.get("drift") or {}).values():
+            if d == d and abs(d) > abs(max_abs_drift):     # NaN-safe
+                max_abs_drift = d
+    return {
+        "schema": ANALYSIS_V2_SCHEMA,
+        "config": dict(config),
+        "summary": {
+            "targets_costed": len(records),
+            "targets_drift_checked": len(checked),
+            "violations": len(violations),
+            "unbounded_loops": sum(r["loops"]["unbounded"] for r in records),
+            "max_abs_drift": float(max_abs_drift),
+        },
+        "targets": [dict(r) for r in records],
         "violations": [
             {
                 "rule": v.rule,

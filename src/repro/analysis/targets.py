@@ -36,8 +36,8 @@ from repro.serve.engine import (_clear_slot, _cow_copy, _gather_prefix,
 from repro.serve.sampling import sample_batch
 from repro.serve.spec import verify_accept
 
-__all__ = ["SMOKE_BY_FAMILY", "SERVE_FAMILIES", "make_audit_mesh",
-           "build_family_targets", "enumerate_targets"]
+__all__ = ["SMOKE_BY_FAMILY", "SERVE_FAMILIES", "AUDIT_SHAPE",
+           "make_audit_mesh", "build_family_targets", "enumerate_targets"]
 
 #: family → smallest real config of that family (smoke-shrunk for tracing)
 SMOKE_BY_FAMILY = {
@@ -47,6 +47,12 @@ SMOKE_BY_FAMILY = {
     "hybrid": "zamba2-1.2b",
 }
 SERVE_FAMILIES = tuple(SMOKE_BY_FAMILY)
+
+#: the one shape every audit target traces at — shared with the cost
+#: auditor so :func:`repro.launch.costing.serve_target_cost` predictions
+#: are keyed exactly the way the targets are built
+AUDIT_SHAPE = dict(slots=2, max_len=32, window=4, block_size=8,
+                   prefill_len=16)
 
 _CACHE_AXES = ("batch", "kv_seq", "kv_heads_cache", "head_dim")
 _POOL_AXES = (None, None, "kv_heads_cache", "head_dim")

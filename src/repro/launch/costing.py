@@ -36,6 +36,7 @@ from repro.configs.base import ModelConfig, ShapeSpec
 __all__ = ["CellCost", "estimate_cell", "request_decode_cost",
            "kv_bytes_per_token", "kv_resident_bytes",
            "expected_accepted_len", "prefill_chunk_guidance",
+           "serve_target_cost", "NONCONTRACTION_COMPONENTS",
            "spec_decode_cost", "spec_request_decode_cost",
            "spec_break_even_accept"]
 
@@ -151,11 +152,16 @@ def _ssd_layer_flops(cfg: ModelConfig, T: float, decode: bool) -> Dict[str, floa
         "ssm_conv": 2 * T * cfg.d_conv * conv_dim,
     }
     if decode:
-        out["ssm_core"] = 4 * T * H * P * N          # state update + readout
+        # outer product dB·x (2THPN) + readout h·C (2THPN) + the dt
+        # broadcast einsum (K=1 dot over (T,H,N) — ssd.py step path)
+        out["ssm_core"] = 4 * T * H * P * N + 2 * T * H * N
     else:
+        # chunked SSD (layers/ssd.py): y_diag = CBᵀ over n (2TLHN) +
+        # decay mask (K=1, 2TLH) + ·X over s (2TLHP); states/y_off each
+        # pay a 2THPN contraction + a K=1 decay dot (2THP)
         L = cfg.ssd_chunk
-        out["ssm_core"] = (2 * T * L * H * (N + P)   # intra-chunk quadratic
-                           + 4 * T * H * N * P)      # states in + out
+        out["ssm_core"] = (2 * T * L * H * (N + P + 1)
+                           + 4 * T * H * P * (N + 1))
     return out
 
 
@@ -224,6 +230,105 @@ def forward_flops(cfg: ModelConfig, *, tokens: float, s_attn: float,
         comp["moe_experts"] *= _moa_flops_multiplier(cfg, "moe", cfg.d_ff)
         comp["moe_router"] *= _moa_flops_multiplier(cfg, "moe", cfg.d_model)
     return comp
+
+
+#: components of :func:`forward_flops` implemented WITHOUT MXU
+#: contractions (the depthwise conv is an elementwise shift-multiply-sum,
+#: not a ``conv_general_dilated``), so the static contraction-FLOP audit
+#: cannot see them. ``serve_target_cost`` excludes them; they are real
+#: compute and stay in :func:`forward_flops` for wall-clock estimates.
+NONCONTRACTION_COMPONENTS = ("ssm_conv",)
+
+#: serve-path phases ``analysis/targets.py`` builds per family; the keying
+#: below must track ``build_family_targets`` exactly — the cost audit
+#: (analysis/cost_audit.py) reconciles each against its traced jaxpr.
+SERVE_PHASES = (
+    "prefill", "decode", "verify", "prefill_chunk",
+    "paged_decode", "paged_decode_hw", "paged_decode_fused",
+    "paged_verify", "paged_verify_fused", "paged_suffix_prefill",
+)
+
+
+def _ssd_conv_hist_flops(cfg: ModelConfig, batch: float) -> float:
+    """Per-layer FLOPs of the conv-history seed recompute in serve prefill.
+
+    ``prefill`` re-projects the last ``d_conv - 1`` input positions per
+    sequence to rebuild the rolling conv window it hands the decode cache
+    (models/mamba2.py, models/zamba2.py) — cache-building work the plain
+    training forward does not do, which is why it lives here and not in
+    :func:`_ssd_layer_flops`."""
+    d_in_proj = (2 * cfg.d_inner + 2 * cfg.n_groups * cfg.d_state
+                 + cfg.n_ssm_heads)
+    return 2.0 * batch * (cfg.d_conv - 1) * cfg.d_model * d_in_proj
+
+
+def serve_target_cost(cfg: ModelConfig, phase: str, *, slots: int,
+                      max_len: int, window: int, block_size: int,
+                      prefill_len: int) -> Dict[str, float]:
+    """Analytic cost of one serve-path audit target, keyed exactly the way
+    ``analysis/targets.py`` shapes its traced callables (``AUDIT_SHAPE``).
+
+    Returns ``{"flops", "components", and for paged phases
+    "kv_gather_bytes"}``. ``flops`` is **contraction FLOPs only**
+    (:data:`NONCONTRACTION_COMPONENTS` excluded) so it is directly
+    comparable to the jaxpr walker's ``dot_general``/conv counts; the
+    serve-prefill conv-history recompute (``ssm_conv_hist``) is added for
+    prefill-like phases. ``kv_gather_bytes`` prices the paged-KV gather
+    stream: the full resident window per decode/verify pass
+    (``slots × s_kv × kv_bytes_per_token``), once per pass — except the
+    hybrid's sequential verify, which re-gathers per verify step — and 0
+    for fused kernels, which walk the pool in place (their traffic is the
+    audit's ``pallas_stream_bytes``, recorded, not reconciled).
+    """
+    if phase not in SERVE_PHASES:
+        raise ValueError(f"unknown serve phase {phase!r}; "
+                         f"expected one of {SERVE_PHASES}")
+    hw = max((max_len // block_size) // 2, 1)   # targets.py half-window
+    batch = None                                # conv-hist rebuild batch
+    if phase == "prefill":
+        tokens, s_attn, decode = slots * prefill_len, prefill_len, False
+        logits_tokens, batch = slots, slots     # last-position logits
+    elif phase in ("decode", "paged_decode", "paged_decode_fused"):
+        tokens, s_attn, decode = slots, max_len, True
+        logits_tokens = slots
+    elif phase == "paged_decode_hw":
+        tokens, s_attn, decode = slots, hw * block_size, True
+        logits_tokens = slots
+    elif phase in ("verify", "paged_verify", "paged_verify_fused"):
+        tokens, s_attn, decode = slots * window, max_len, True
+        logits_tokens = slots * window
+    else:  # prefill_chunk / paged_suffix_prefill: one sequence, a chunk
+        #    attending its own tokens plus an equal-length prior context
+        tokens, s_attn, decode = prefill_len, 2 * prefill_len, False
+        logits_tokens, batch = 1, 1
+    comp = forward_flops(cfg, tokens=float(tokens), s_attn=float(s_attn),
+                         decode=decode)
+    comp["logits"] = 2.0 * logits_tokens * cfg.d_model * cfg.vocab
+    for key in NONCONTRACTION_COMPONENTS:
+        comp.pop(key, None)
+    if batch is not None and cfg.family in ("ssm", "hybrid"):
+        comp["ssm_conv_hist"] = cfg.n_layers * _ssd_conv_hist_flops(
+            cfg, float(batch))
+    out: Dict[str, float] = {"flops": float(sum(comp.values()))}
+    if phase.startswith("paged_"):
+        kvbpt = kv_bytes_per_token(cfg)
+        if phase == "paged_decode":
+            kv = slots * max_len * kvbpt
+        elif phase == "paged_decode_hw":
+            kv = slots * hw * block_size * kvbpt
+        elif phase == "paged_verify":
+            steps = window if cfg.family == "hybrid" else 1
+            kv = slots * max_len * kvbpt * steps
+        elif phase == "paged_suffix_prefill":
+            # the suffix callable receives the prefix KV as a dense
+            # operand (materialized by the engine before the call), so
+            # the traced jaxpr has no in-attention KV gather
+            kv = 0.0
+        else:                                   # *_fused
+            kv = 0.0
+        out["kv_gather_bytes"] = float(kv)
+    out["components"] = comp  # type: ignore[assignment]
+    return out
 
 
 def kv_bytes_per_token(cfg: ModelConfig) -> float:

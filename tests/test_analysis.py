@@ -7,8 +7,8 @@ import pathlib
 
 import pytest
 
-from repro.analysis.fixtures import (CLEAN_LINT_FIXTURES, JAXPR_FIXTURES,
-                                     LINT_FIXTURES)
+from repro.analysis.fixtures import (CLEAN_LINT_FIXTURES, COST_FIXTURES,
+                                     JAXPR_FIXTURES, LINT_FIXTURES)
 from repro.analysis.jaxpr_audit import audit_target, audit_targets
 from repro.analysis.lint import dead_module_census, lint_source, run_lint
 from repro.analysis.report import ANALYSIS_SCHEMA, RULES, build_report
@@ -77,9 +77,11 @@ class TestRulesAreLive:
 
     def test_every_rule_has_a_fixture(self):
         """RULES without a proving fixture are dead weight (lint-dead-module
-        is proven by the census test below)."""
+        is proven by the census test below, the cost-audit rules in
+        tests/test_cost_audit.py)."""
         proven = {k.split("/")[0] for k in JAXPR_FIXTURES}
         proven |= set(LINT_FIXTURES) | {"lint-dead-module"}
+        proven |= set(COST_FIXTURES)
         assert proven == set(RULES)
 
     def test_upcast_fixture_site_attribution(self):

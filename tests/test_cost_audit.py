@@ -1,0 +1,324 @@
+"""Static cost auditor: trip-count accounting, fixtures, reconciliation.
+
+Four contracts pinned here:
+
+* ``count_jaxpr`` multiplies loop-body costs by statically-extracted trip
+  counts (the exact gap ``compiled.cost_analysis()`` leaves open — it
+  counts every scan body once);
+* the two cost-audit rules have live fixtures: ``audit-unbounded-loop``
+  fires on a ``while_loop`` target, ``audit-cost-drift`` on a seeded-low
+  analytic prediction (the fixture-liveness discipline of
+  ``tests/test_analysis.py::test_every_rule_has_a_fixture``);
+* the real serve-path registry reconciles against
+  ``launch/costing.serve_target_cost`` with zero drift violations and
+  zero unbounded loops;
+* the paged-KV byte stream is the SAME number in all four places that
+  price it: ``costing.kv_bytes_per_token``, the engine's ``CacheSpec``,
+  ``benchmarks/roofline.py::paged_decode_cell`` and the static audit's
+  ``kv_gather_bytes`` (``TestKvBytesAgree``).
+"""
+
+import copy
+import dataclasses
+import importlib.util
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.cost_audit import (DRIFT_PHASES, FLOPS_RTOL,
+                                       cost_audit_targets, cost_target,
+                                       count_jaxpr, reconcile_target,
+                                       target_phase)
+from repro.analysis.fixtures import COST_FIXTURES, drifting_cost, unbounded_while
+from repro.analysis.jaxpr_audit import AuditTarget
+from repro.analysis.report import build_cost_report
+from repro.analysis.targets import (AUDIT_SHAPE, SMOKE_BY_FAMILY,
+                                    build_family_targets)
+from repro.configs.registry import get_config, smoke_config
+from repro.launch.costing import kv_bytes_per_token
+from repro.models.api import build_model
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+_BF16 = jnp.bfloat16
+_N = 8
+_MATMUL_FLOPS = 2.0 * _N * _N * _N
+
+
+def _count(fn, *args):
+    return count_jaxpr(jax.make_jaxpr(fn)(*args).jaxpr)
+
+
+def _sds(*shape):
+    return jax.ShapeDtypeStruct(shape, _BF16)
+
+
+# ---------------------------------------------------------------------------
+# trip-count accounting
+# ---------------------------------------------------------------------------
+
+
+class TestTripCounts:
+    def test_scan_multiplies_body_by_length(self):
+        """A length-8 scan over a matmul body costs exactly 8 bodies —
+        the 1/8-undercount XLA's cost_analysis() exhibits is the bug this
+        module exists to close."""
+
+        def scanned(x):
+            def body(c, _):
+                return c @ c, ()
+            out, _ = jax.lax.scan(body, x, None, length=8)
+            return out
+
+        cost = _count(scanned, _sds(_N, _N))
+        assert cost.flops == pytest.approx(8 * _MATMUL_FLOPS)
+        assert [l.kind for l in cost.loops] == ["scan"]
+        assert cost.loops[0].length == 8
+        assert not cost.unbounded
+
+    def test_scan_matches_unrolled_twin(self):
+        def scanned(x):
+            out, _ = jax.lax.scan(lambda c, _: (c @ c, ()), x, None,
+                                  length=5)
+            return out
+
+        def unrolled(x):
+            for _ in range(5):
+                x = x @ x
+            return x
+
+        sds = _sds(_N, _N)
+        assert _count(scanned, sds).flops == _count(unrolled, sds).flops
+
+    def test_nested_scan_multiplies_through(self):
+        def nested(x):
+            def outer(c, _):
+                c2, _ = jax.lax.scan(lambda d, __: (d @ d, ()), c, None,
+                                     length=3)
+                return c2, ()
+            out, _ = jax.lax.scan(outer, x, None, length=4)
+            return out
+
+        cost = _count(nested, _sds(_N, _N))
+        assert cost.flops == pytest.approx(4 * 3 * _MATMUL_FLOPS)
+
+    def test_jit_wrapper_is_transparent(self):
+        sds = _sds(_N, _N)
+        assert (_count(jax.jit(lambda x: x @ x), sds).flops
+                == _count(lambda x: x @ x, sds).flops
+                == _MATMUL_FLOPS)
+
+    def test_cond_priced_at_max_branch(self):
+        """A branchy target costs its most expensive branch, never the
+        sum and never the cheap side."""
+
+        def branchy(x):
+            return jax.lax.cond(jnp.sum(x) > 0,
+                                lambda y: (y @ y) @ y,   # 2 matmuls
+                                lambda y: y + 1.0,       # 0 contractions
+                                x)
+
+        cost = _count(branchy, _sds(_N, _N))
+        assert cost.flops == pytest.approx(2 * _MATMUL_FLOPS)
+
+    def test_while_is_unbounded_not_undercounted(self):
+        def looped(x):
+            return jax.lax.while_loop(
+                lambda s: jnp.sum(s).astype(jnp.float32) < 1e6,
+                lambda s: s @ s, x)
+
+        cost = _count(looped, _sds(_N, _N))
+        assert len(cost.unbounded) == 1
+        assert cost.unbounded[0].kind == "while"
+        assert cost.unbounded[0].length is None
+
+
+# ---------------------------------------------------------------------------
+# rule fixtures (liveness proofs for RULES entries)
+# ---------------------------------------------------------------------------
+
+
+class TestCostFixturesFire:
+    def test_unbounded_loop_fixture_fires(self):
+        cost, violations = cost_target(COST_FIXTURES["audit-unbounded-loop"]())
+        assert any(v.rule == "audit-unbounded-loop" for v in violations)
+        assert len(cost.unbounded) == 1
+
+    def test_unbounded_is_warning_on_helper_error_on_drift_phase(self):
+        """Severity policy: a helper target's unbounded loop is a
+        diagnostic; on a drift-checked phase it would silently corrupt
+        the reconciliation, so it gates."""
+        helper = unbounded_while()
+        assert target_phase(helper.name) not in DRIFT_PHASES
+        _, violations = cost_target(helper)
+        assert [v.severity for v in violations] == ["warning"]
+
+        checked = dataclasses.replace(helper, name="fixture/decode")
+        _, violations = cost_target(checked)
+        assert [v.severity for v in violations] == ["error"]
+
+    def test_drift_fixture_fires(self):
+        target, analytic = drifting_cost()
+        cost, _ = cost_target(target)
+        drift, violations = reconcile_target(target, cost, analytic)
+        assert any(v.rule == "audit-cost-drift" for v in violations)
+        assert drift["flops"] == pytest.approx(1.0 / 0.75 - 1.0)
+
+    def test_exact_analytic_reconciles_clean(self):
+        target, _ = drifting_cost()
+        cost, _ = cost_target(target)
+        drift, violations = reconcile_target(target, cost,
+                                             {"flops": cost.flops})
+        assert not violations
+        assert drift["flops"] == 0.0
+
+    def test_within_tolerance_reconciles_clean(self):
+        target, _ = drifting_cost()
+        cost, _ = cost_target(target)
+        shaded = {"flops": cost.flops / (1.0 + 0.5 * FLOPS_RTOL)}
+        _, violations = reconcile_target(target, cost, shaded)
+        assert not violations
+
+
+# ---------------------------------------------------------------------------
+# registry reconciliation (the tentpole end-to-end, tier-1-sized slice)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", ["dense", "ssm"])
+class TestRegistryReconciles:
+    """Dense (paged + fused + pallas grids) and ssm (scan-over-layers +
+    chunked SSD) no-mesh; the full families × mesh sweep runs in CI via
+    ``scripts/audit_serve_path.py --cost``."""
+
+    def test_family_reconciles_with_no_drift(self, family):
+        records, violations = cost_audit_targets(
+            build_family_targets(family))
+        assert not violations, [v.format() for v in violations]
+        checked = [r for r in records if r["drift_checked"]]
+        assert checked, "no drift-checked targets enumerated"
+        for r in checked:
+            assert abs(r["drift"]["flops"]) <= FLOPS_RTOL, r
+        assert all(r["loops"]["unbounded"] == 0 for r in records)
+
+    def test_scan_trip_counts_seen_on_real_targets(self, family):
+        records, _ = cost_audit_targets(build_family_targets(family))
+        by_phase = {r["phase"]: r for r in records}
+        prefill = by_phase["prefill"]
+        # every family scans over its layer stack
+        assert prefill["loops"]["scans"] >= 1
+        assert prefill["loops"]["max_trip_count"] >= 2
+        if family == "dense":
+            fused = by_phase["paged_decode_fused"]
+            assert fused["loops"]["pallas_grids"] >= 1
+            assert fused["static"]["pallas_stream_bytes"] > 0
+
+
+# ---------------------------------------------------------------------------
+# the paged-KV stream is one number, everywhere it is priced
+# ---------------------------------------------------------------------------
+
+
+class TestKvBytesAgree:
+    """Regression pin for the roofline/engine/static-audit byte formulas:
+    all derive the per-token KV stream from the model's CacheSpec, so a
+    drive-by edit to any one of them breaks this test, not a benchmark."""
+
+    def test_roofline_cell_uses_cache_spec_bytes(self):
+        import benchmarks.roofline as roofline
+        cell = roofline.paged_decode_cell(arch="llama3-8b", n_slots=4,
+                                          max_len=256, block_size=16)
+        cfg = get_config("llama3-8b")
+        assert cell["kv_bytes_per_token"] == kv_bytes_per_token(cfg)
+
+    def test_roofline_rows_match_engine_tick_formula(self):
+        """roofline's gathered row = engine ``_kv_bytes_tick``'s gathered
+        term (n_slots × high-water blocks × kv_block_bytes)."""
+        import benchmarks.roofline as roofline
+        n_slots, block_size = 4, 16
+        cell = roofline.paged_decode_cell(arch="llama3-8b", n_slots=n_slots,
+                                          max_len=256, block_size=block_size)
+        cfg = get_config("llama3-8b")
+        spec = build_model(smoke_config(cfg)).cache_spec()
+        # CacheSpec invariant _kv_bytes_tick relies on
+        assert spec.kv_block_bytes(block_size) == \
+            spec.kv_bytes_per_token * block_size
+        for row in cell["rows"]:
+            live_blocks = row["pos"] // block_size + 1
+            hw = 1
+            while hw < live_blocks:
+                hw <<= 1
+            hw = min(hw, 256 // block_size)
+            assert row["gathered_bytes"] == pytest.approx(
+                n_slots * hw * block_size * cell["kv_bytes_per_token"])
+            assert row["fused_bytes"] == pytest.approx(
+                n_slots * live_blocks * block_size
+                * cell["kv_bytes_per_token"])
+
+    def test_costing_matches_cache_spec(self):
+        for family, arch in SMOKE_BY_FAMILY.items():
+            cfg = smoke_config(get_config(arch))
+            spec = build_model(cfg).cache_spec()
+            assert kv_bytes_per_token(cfg) == float(spec.kv_bytes_per_token), \
+                family
+
+    def test_static_gather_bytes_match_cache_spec(self):
+        """The audited paged_decode jaxpr gathers exactly
+        slots × max_len × kv_bytes_per_token — the same product the
+        engine meters and the roofline prices."""
+        cfg = smoke_config(get_config(SMOKE_BY_FAMILY["dense"]))
+        targets = {t.name: t for t in build_family_targets("dense")}
+        cost, violations = cost_target(targets["dense/paged_decode"])
+        assert not violations
+        expected = (AUDIT_SHAPE["slots"] * AUDIT_SHAPE["max_len"]
+                    * kv_bytes_per_token(cfg))
+        assert cost.kv_gather_bytes == pytest.approx(expected)
+
+
+# ---------------------------------------------------------------------------
+# analysis-v2 report round-trip
+# ---------------------------------------------------------------------------
+
+
+def _schema_registry():
+    path = REPO_ROOT / "scripts" / "check_bench_schema.py"
+    spec = importlib.util.spec_from_file_location("check_bench_schema", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+class TestCostReportSchema:
+    @pytest.fixture(scope="class")
+    def report(self):
+        records, violations = cost_audit_targets(
+            build_family_targets("dense"))
+        return build_cost_report(
+            records, violations,
+            config={"families": ["dense"], "mesh_modes": ["none"],
+                    "flops_rtol": FLOPS_RTOL, "kv_bytes_rtol": 1e-6})
+
+    def test_report_validates(self, report):
+        errors = _schema_registry().validate(report)
+        assert not errors, errors
+
+    def test_summary_mirrors_body(self, report):
+        assert report["schema"] == "analysis-v2"
+        assert report["summary"]["targets_costed"] == len(report["targets"])
+        assert report["summary"]["violations"] == len(report["violations"])
+        assert report["summary"]["unbounded_loops"] == 0
+
+    def test_tampered_drift_ratio_rejected(self, report):
+        broken = copy.deepcopy(report)
+        victim = next(t for t in broken["targets"] if t["drift_checked"])
+        victim["drift"]["flops"] += 0.5
+        assert _schema_registry().validate(broken)
+
+    def test_unchecked_target_with_analytic_rejected(self, report):
+        broken = copy.deepcopy(report)
+        victim = next(t for t in broken["targets"]
+                      if not t["drift_checked"])
+        victim["analytic"] = {"flops": 1.0}
+        assert _schema_registry().validate(broken)

@@ -87,6 +87,39 @@ def test_moe_flops_scale_with_topk():
     assert f2.components["moe_experts"] / f1.components["moe_experts"] == 2.0
 
 
+@pytest.mark.parametrize("arch",
+                         ["llama3-8b", "moonshot-v1-16b-a3b", "mamba2-370m"])
+def test_static_scan_path_matches_analytic_multi_layer(arch):
+    """The gap the module docstring documents — cost_analysis() counts a
+    scan body once, forcing loop-FREE validation configs — is closed by
+    the trip-count-aware counter in analysis/cost_audit.py: on the REAL
+    multi-layer scan-over-layers forward (dense + MoE + SSM, no
+    _loop_free flattening) it must agree with the analytic model within
+    the same ±2 % the cost audit gates on. Elementwise components
+    (``ssm_conv``: the depthwise conv is implemented as shifted
+    multiply-adds, invisible to contraction counting) are excluded on
+    both sides via ``NONCONTRACTION_COMPONENTS``."""
+    from repro.analysis.cost_audit import FLOPS_RTOL, count_jaxpr
+
+    cfg = smoke_config(ARCHS[arch])
+    assert cfg.n_layers >= 2, "multi-layer is the point of this test"
+    model = build_model(cfg)
+    specs = model.input_specs(ShapeSpec("val", 32, B, "train"))
+    batch = {k: v for k, v in specs.items() if k not in ("labels", "targets")}
+    jaxpr = jax.make_jaxpr(lambda p, b: model.forward(p, b))(
+        model.abstract_params(), batch).jaxpr
+    cost = count_jaxpr(jaxpr)
+    assert not cost.unbounded
+    assert any(l.kind == "scan" and l.length == cfg.n_layers
+               for l in cost.loops), "expected a scan over the layer stack"
+    comps = costing.forward_flops(cfg, tokens=B * 32, s_attn=32)
+    analytic = sum(v for k, v in comps.items()
+                   if k not in costing.NONCONTRACTION_COMPONENTS)
+    assert analytic > 0
+    drift = cost.flops / analytic - 1.0
+    assert abs(drift) <= FLOPS_RTOL, (arch, drift, cost.flops, analytic)
+
+
 def test_collective_model_sees_gather_ce_penalty():
     """gather-CE must cost far more wire than vocab-parallel CE."""
     cfg = smoke_config(ARCHS["llama3-8b"])

@@ -94,3 +94,28 @@ class TestSchemaFixtures:
         v7 = _fixture_record("serving-v7")
         v7["comparison"]["requeues"] += 1
         assert any("requeues" in e for e in registry.validate(v7))
+
+    def test_analysis_v2_cross_field_checks_fire(self, registry):
+        # stated drift ratio must BE static/analytic - 1, not merely a
+        # number of the right type.
+        v2 = _fixture_record("analysis-v2")
+        v2["targets"][0]["drift"]["flops"] += 0.5
+        assert any("drift.flops" in e for e in registry.validate(v2))
+
+        # an unchecked target may not fake an analytic counterpart.
+        v2 = _fixture_record("analysis-v2")
+        v2["targets"][1]["analytic"] = {"flops": 1.0}
+        assert any("analytic" in e for e in registry.validate(v2))
+
+        # summary counters must mirror the record body.
+        for key in ("targets_costed", "targets_drift_checked",
+                    "violations", "unbounded_loops"):
+            v2 = _fixture_record("analysis-v2")
+            v2["summary"][key] += 1
+            assert any(key in e for e in registry.validate(v2)), key
+
+        # a drift-checked target must carry its analytic + drift objects.
+        v2 = _fixture_record("analysis-v2")
+        v2["targets"][0]["analytic"] = None
+        v2["summary"]["targets_drift_checked"] = 0
+        assert registry.validate(v2)
